@@ -1,0 +1,68 @@
+"""Paper Table 3: component ladder — RTN -> +window -> +clip -> +reorder ->
++sink -> +FP8 (K2V2 g32, mirroring the paper's ablation setting)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.policy import QuantPolicy
+from repro.core.baselines import METHODS, MethodCtx, _window_mix, _apply_perm
+from repro.core.quant import fake_quant
+from repro.core.reorder import invert_permutation
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def _staged(stage):
+    """Returns a method fn implementing the cumulative ladder up to `stage`."""
+
+    def method(k, v, ctx):
+        p = ctx.policy
+        c = ctx.calib
+        use_reorder = stage >= 3
+        use_clip = stage >= 2
+        kk, vv = k, v
+        if use_reorder:
+            kk = _apply_perm(kk, c.perm_k)
+            vv = _apply_perm(vv, c.perm_v)
+        ak = jnp.asarray(c.alpha_k) if use_clip else None
+        av = jnp.asarray(c.alpha_v) if use_clip else None
+        fp8 = stage >= 5
+        kq = fake_quant(kk, p.bits_k, p.group_size, alpha=ak, fp8_meta=fp8)
+        vq = fake_quant(vv, p.bits_v, p.group_size, alpha=av, fp8_meta=fp8)
+        if use_reorder:
+            kq = _apply_perm(kq, invert_permutation(c.perm_k))
+            vq = _apply_perm(vq, invert_permutation(c.perm_v))
+        return kq, vq
+
+    return method
+
+
+STAGES = ["rtn", "+window", "+clip", "+reorder", "+sink", "+fp8"]
+
+
+def run(emit):
+    cfg, params, corpus = C.bench_model()
+    toks = C.eval_tokens(corpus)
+    base = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=16, window=32,
+                       n_sink=5, fp8_meta=False)
+    calibs = C.calibrate(cfg, params, corpus, base)
+    rows = {}
+    for i, name in enumerate(STAGES):
+        pol = QuantPolicy(
+            bits_k=2.0, bits_v=2.0, group_size=16,
+            window=32 if i >= 1 else 0,
+            n_sink=5 if i >= 4 else 0,
+            fp8_meta=i >= 5)
+        t0 = time.time()
+        ppl = C.ppl_with_method(params, cfg, toks, _staged(i),
+                                calibs=calibs, policy=pol)
+        rows[name] = ppl
+        emit(C.csv_row(f"table3_{name}", (time.time() - t0) * 1e6,
+                       f"ppl={ppl:.4f}"))
+    # directionality: window + reorder are the big wins (paper Table 3)
+    emit(C.csv_row("table3_window_helps", 0.0,
+                   f"holds={rows['+window'] < rows['rtn']}"))
+    emit(C.csv_row("table3_reorder_helps", 0.0,
+                   f"holds={rows['+reorder'] <= rows['+clip'] * 1.02}"))
+    return rows

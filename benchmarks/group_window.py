@@ -1,0 +1,70 @@
+"""Paper Table 4 (group size) + Figure 6 (window size) + Figure 4 / Table 2
+(avg-bits frontier incl. K2V1.5).
+
+One module, three sweeps, all on the shared bench model.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.policy import QuantPolicy
+from repro.core.baselines import METHODS
+from . import common as C
+
+
+def run(emit):
+    cfg, params, corpus = C.bench_model()
+    toks = C.eval_tokens(corpus)
+
+    # --- Table 4: group size sweep (K2V2, window 32) -----------------------
+    t4 = {}
+    for gs in (32, 16, 8):
+        pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=gs, window=32,
+                          n_sink=5)
+        calibs = C.calibrate(cfg, params, corpus, pol)
+        t0 = time.time()
+        ppl = C.ppl_with_method(params, cfg, toks, METHODS["skvq"],
+                                calibs=calibs, policy=pol)
+        t4[gs] = ppl
+        emit(C.csv_row(f"table4_g{gs}", (time.time() - t0) * 1e6,
+                       f"ppl={ppl:.4f},avg_bits={pol.avg_bits(cfg.head_dim):.3f}"))
+    emit(C.csv_row("table4_finer_groups_help", 0.0,
+                   f"holds={t4[8] <= t4[32] * 1.02}"))
+
+    # --- Figure 6: window size sweep (K2V2 g32) ----------------------------
+    f6 = {}
+    pol0 = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, window=32,
+                       n_sink=0)
+    calibs = C.calibrate(cfg, params, corpus, pol0)
+    for w in (0, 8, 16, 32, 64):
+        pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, window=w,
+                          n_sink=0)
+        t0 = time.time()
+        ppl = C.ppl_with_method(params, cfg, toks, METHODS["skvq"],
+                                calibs=calibs, policy=pol)
+        f6[w] = ppl
+        emit(C.csv_row(f"fig6_w{w}", (time.time() - t0) * 1e6,
+                       f"ppl={ppl:.4f}"))
+    emit(C.csv_row("fig6_window_monotone", 0.0,
+                   f"holds={f6[64] <= f6[0] * 1.01}"))
+
+    # --- Figure 4 frontier: K2V2 vs K2V1.5 (+Table 2 RTN-sym reference) ----
+    for name, bk, bv in (("k2v2", 2.0, 2.0), ("k2v1.5", 2.0, 1.5),
+                         ("k4v4", 4.0, 4.0)):
+        pol = QuantPolicy(bits_k=bk, bits_v=bv, group_size=32, window=32,
+                          n_sink=5)
+        calibs = C.calibrate(cfg, params, corpus, pol)
+        t0 = time.time()
+        ppl = C.ppl_with_method(params, cfg, toks, METHODS["skvq"],
+                                calibs=calibs, policy=pol)
+        emit(C.csv_row(f"fig4_{name}", (time.time() - t0) * 1e6,
+                       f"ppl={ppl:.4f},avg_bits={pol.avg_bits(cfg.head_dim):.3f}"))
+    pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, window=0,
+                      n_sink=0, clip=False, reorder=False)
+    calibs = C.calibrate(cfg, params, corpus, pol)
+    t0 = time.time()
+    ppl_sym = C.ppl_with_method(params, cfg, toks, METHODS["rtn_sym"],
+                                calibs=calibs, policy=pol)
+    emit(C.csv_row("table2_rtn_sym_2bit", (time.time() - t0) * 1e6,
+                   f"ppl={ppl_sym:.4f}"))
+    return {"table4": t4, "fig6": f6}

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig6,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus a header).  Quality
+benchmarks share one small trained model (benchmarks/common.py); Table 6 is
+the analytic roofline reproduction of the paper's memory/latency analysis.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table3,table4,fig5,table6,kernel")
+    args = ap.parse_args(argv)
+
+    from . import (quality_ladder, component_ablation, group_window,
+                   needle_proxy, memory_latency, kernel_bench)
+    suites = {
+        "table1": quality_ladder.run,        # + Table 5
+        "table3": component_ablation.run,
+        "table4": group_window.run,          # + Fig 4, Fig 6, Table 2
+        "fig5": needle_proxy.run,            # + Fig 7
+        "table6": memory_latency.run,        # + App. 9
+        "kernel": kernel_bench.run,
+    }
+    pick = set(args.only.split(",")) if args.only else set(suites)
+    print("name,us_per_call,derived")
+
+    def emit(row: str):
+        print(row, flush=True)
+
+    t0 = time.time()
+    failures = []
+    for name, fn in suites.items():
+        if name not in pick:
+            continue
+        try:
+            fn(emit)
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            emit(f"{name}_FAILED,0.0,{type(e).__name__}")
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        for name, err in failures:
+            print(f"# FAILED {name}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

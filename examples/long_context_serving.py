@@ -1,0 +1,48 @@
+"""Long-context serving scenario: stream a long document through prefill,
+then decode with the SKVQ cache; report the cache memory ledger that makes
+the paper's 1M-token claim work.
+
+    PYTHONPATH=src python examples/long_context_serving.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import QuantPolicy, cache_shapes
+from repro.core.quant import packed_nbytes
+from repro.data import SyntheticCorpus, make_passkey_sample
+from repro.models import transformer as T
+
+cfg = configs.get_smoke("gemma3_4b")  # 5:1 local:global family
+policy = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=32, n_sink=5)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+
+S = 512
+doc, key = make_passkey_sample(corpus, S, key_pos=100,
+                               rng=np.random.default_rng(0))
+batch = {"tokens": jnp.asarray(doc[None, :-8], jnp.int32)}
+logits, caches = T.prefill_model(params, cfg, batch, policy, max_len=S + 64)
+print(f"prefilled {S-8} tokens; cache groups: "
+      f"{sorted(k for k in caches['scan'] if not k.startswith('q'))[:4]}...")
+
+for t in range(8):
+    tok = jnp.asarray(doc[None, S - 8 + t:S - 7 + t], jnp.int32)
+    logits, caches = T.decode_step(params, cfg, tok, caches, policy)
+print("decoded 8 tokens against the quantized cache; last logits finite:",
+      bool(jnp.isfinite(logits).all()))
+
+# --- memory ledger (per token-head, exact container sizes) ------------------
+hd = cfg.head_dim
+fp16 = 2 * hd * 2
+q = packed_nbytes(hd, policy.bits_k, policy.group_size, 8) + \
+    packed_nbytes(hd, policy.bits_v, policy.group_size, 8)
+shapes = cache_shapes(1, S + 64, cfg.n_kv_heads, hd, policy)
+total = sum(int(np.prod(s)) * jnp.dtype(d).itemsize for s, d in shapes.values())
+print(f"KV bytes/token-head: fp16={fp16}B skvq={q}B -> {fp16/q:.1f}x compression")
+print(f"container total for this session: {total/1024:.0f} KiB "
+      f"(window {policy.window} + sinks {policy.n_sink} ride fp)")
+print("at 7B/500k-token scale this is the difference between 110 GB and "
+      "~14 GB of cache — the paper's 1M-context-on-80GB claim "
+      "(see benchmarks/memory_latency.py).")

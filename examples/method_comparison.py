@@ -1,0 +1,25 @@
+"""Reproduce the paper's method comparison interactively (Table 1 shape):
+FP16 / RTN / SmoothQuant / RPTQ / KIVI / SKVQ on one trained model.
+
+    PYTHONPATH=src:. python examples/method_comparison.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common as C
+from benchmarks.quality_ladder import ORDER
+from repro.core.policy import QuantPolicy
+from repro.core.baselines import METHODS
+
+cfg, params, corpus = C.bench_model()
+toks = C.eval_tokens(corpus)
+pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=16, window=32, n_sink=5)
+calibs = C.calibrate(cfg, params, corpus, pol)
+
+print(f"{'method':14s} ppl    (K2V2 g16 w32, synthetic-corpus stand-in "
+      f"for LongBench)")
+for name in ORDER:
+    ppl = C.ppl_with_method(params, cfg, toks, METHODS[name],
+                            calibs=calibs, policy=pol)
+    print(f"{name:14s} {ppl:.3f}")

@@ -1,0 +1,3 @@
+from .manager import CheckpointManager, save_checkpoint, load_latest
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_latest"]

@@ -1,0 +1,43 @@
+"""Architecture registry: ``get(name)`` / ``get_smoke(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from ..models.config import ArchConfig
+
+ARCHS = (
+    "hymba_1p5b", "seamless_m4t_large_v2", "deepseek_moe_16b",
+    "granite_moe_1b_a400m", "gemma2_27b", "gemma3_4b", "llama3p2_1b",
+    "granite_8b", "qwen2_vl_7b", "rwkv6_3b",
+    # the paper's own evaluation family
+    "llama2_7b",
+)
+
+# CLI aliases (--arch accepts either form)
+ALIASES = {
+    "hymba-1.5b": "hymba_1p5b", "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "deepseek-moe-16b": "deepseek_moe_16b", "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "gemma2-27b": "gemma2_27b", "gemma3-4b": "gemma3_4b", "llama3.2-1b": "llama3p2_1b",
+    "granite-8b": "granite_8b", "qwen2-vl-7b": "qwen2_vl_7b", "rwkv6-3b": "rwkv6_3b",
+    "llama2-7b": "llama2_7b",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get(n) for n in ARCHS}

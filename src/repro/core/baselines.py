@@ -1,0 +1,127 @@
+"""Baseline KV-cache quantization methods the paper compares against (Table 1).
+
+All baselines are expressed through the same fake-quant evaluation path used
+by the quality benchmarks, so the comparison is apples-to-apples:
+
+  * RTN            — vanilla asymmetric per-token round-to-nearest (group = head_dim)
+  * RTN-sym        — symmetric variant (Table 2 reference)
+  * SmoothQuant    — per-channel equalization s = max|K_ch| (alpha=1, fully
+                     inclined to the KV cache), then per-token RTN
+  * RPTQ           — channel reorder only (no clip, no window)
+  * KIVI           — per-CHANNEL key quant + per-token value quant, with a
+                     full-precision residual of the most recent tokens
+  * SKVQ           — everything (reorder + clip + window + sink + fp8 meta)
+
+Each method is a function (k, v, ctx) -> (k_hat, v_hat) where k/v are
+(B, S, H, D) and ctx carries calibration artifacts.  The sliding window /
+residual is applied position-wise: the last ``window`` tokens pass through.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from .policy import QuantPolicy
+from .quant import fake_quant
+from .calibrate import LayerCalibration
+
+
+@dataclasses.dataclass
+class MethodCtx:
+    policy: QuantPolicy
+    calib: Optional[LayerCalibration] = None  # reorder perms / alphas / smooth
+
+
+def _window_mix(x, xq, window: int, n_sink: int = 0):
+    """Keep last `window` tokens and first `n_sink` tokens full precision."""
+    s = x.shape[1]
+    pos = jnp.arange(s)
+    keep = pos >= s - window
+    if n_sink > 0:
+        keep = keep | (pos < n_sink)
+    return jnp.where(keep[None, :, None, None], x, xq)
+
+
+def _apply_perm(x, perm):
+    return jnp.take_along_axis(x, jnp.asarray(perm)[None, None], axis=-1)
+
+
+def rtn(k, v, ctx: MethodCtx):
+    p = ctx.policy
+    kq = fake_quant(k, p.bits_k, p.group_size, fp8_meta=p.fp8_meta)
+    vq = fake_quant(v, p.bits_v, p.group_size, fp8_meta=p.fp8_meta)
+    return kq, vq
+
+
+def rtn_sym(k, v, ctx: MethodCtx):
+    """Symmetric per-token RTN (zero-point fixed at 0) — Table 2 reference."""
+    p = ctx.policy
+
+    def symq(x, bits):
+        gs = min(p.group_size, x.shape[-1])
+        *lead, d = x.shape
+        g = d // gs
+        xg = x.reshape(*lead, g, gs).astype(jnp.float32)
+        m = jnp.abs(xg).max(axis=-1, keepdims=True)
+        n_levels = 2 ** (int(bits) - 1) - 1
+        h = jnp.maximum(m / n_levels, 1e-8)
+        q = jnp.clip(jnp.round(xg / h), -n_levels - 1, n_levels)
+        return (q * h).reshape(*lead, d).astype(x.dtype)
+
+    return symq(k, p.bits_k), symq(v, p.bits_v)
+
+
+def smoothquant(k, v, ctx: MethodCtx):
+    p = ctx.policy
+    s = jnp.asarray(ctx.calib.smooth_k)[None, None]  # (1,1,H,D)
+    kq = fake_quant(k / s, p.bits_k, p.group_size, fp8_meta=p.fp8_meta) * s
+    vq = fake_quant(v, p.bits_v, p.group_size, fp8_meta=p.fp8_meta)
+    return kq, vq
+
+
+def rptq(k, v, ctx: MethodCtx):
+    """Reorder-only (per-head permutation), no clipping, no window."""
+    p = ctx.policy
+    c = ctx.calib
+    kq = _apply_perm(k, c.perm_k)
+    vq = _apply_perm(v, c.perm_v)
+    kq = fake_quant(kq, p.bits_k, p.group_size, fp8_meta=p.fp8_meta)
+    vq = fake_quant(vq, p.bits_v, p.group_size, fp8_meta=p.fp8_meta)
+    from .reorder import invert_permutation
+    return (_apply_perm(kq, invert_permutation(c.perm_k)),
+            _apply_perm(vq, invert_permutation(c.perm_v)))
+
+
+def kivi(k, v, ctx: MethodCtx):
+    """KIVI-style: K per-channel (token-axis groups), V per-token, fp residual."""
+    p = ctx.policy
+    kq = fake_quant(k, p.bits_k, p.group_size, fp8_meta=p.fp8_meta, axis=1)
+    vq = fake_quant(v, p.bits_v, p.group_size, fp8_meta=p.fp8_meta)
+    kq = _window_mix(k, kq, p.window)
+    vq = _window_mix(v, vq, p.window)
+    return kq, vq
+
+
+def skvq(k, v, ctx: MethodCtx):
+    """Full SKVQ on the fake-quant path (reorder+clip+window+sink)."""
+    p = ctx.policy
+    c = ctx.calib
+    kr = _apply_perm(k, c.perm_k)
+    vr = _apply_perm(v, c.perm_v)
+    ak = jnp.asarray(c.alpha_k) if p.clip else None
+    av = jnp.asarray(c.alpha_v) if p.clip else None
+    kq = fake_quant(kr, p.bits_k, p.group_size, alpha=ak, fp8_meta=p.fp8_meta)
+    vq = fake_quant(vr, p.bits_v, p.group_size, alpha=av, fp8_meta=p.fp8_meta)
+    from .reorder import invert_permutation
+    kq = _apply_perm(kq, invert_permutation(c.perm_k))
+    vq = _apply_perm(vq, invert_permutation(c.perm_v))
+    kq = _window_mix(k, kq, p.window, p.n_sink)
+    vq = _window_mix(v, vq, p.window, p.n_sink)
+    return kq, vq
+
+
+METHODS = {"fp16": lambda k, v, ctx: (k, v), "rtn": rtn, "rtn_sym": rtn_sym,
+           "smoothquant": smoothquant, "rptq": rptq, "kivi": kivi, "skvq": skvq}

@@ -1,0 +1,141 @@
+"""Offline calibration (paper Sec. 3.1 + Alg. 1 prologue).
+
+Two artifacts per layer, computed once on a calibration set and then frozen:
+
+  * per-head channel permutations for K and V (:mod:`repro.core.reorder`);
+  * per-group clip factors alpha (Eq. 3).
+
+The paper minimizes the MSE of the *attention output*; solving that per group
+at runtime is intractable, so (like the paper) we approximate offline.  Our
+default objective is per-group reconstruction MSE over the calibration tokens
+(vectorized grid search), with an optional attention-output-MSE refinement of
+a per-layer global multiplier (``refine_attention_mse``) that matches Eq. 3's
+objective for the final pick.  Calibration "takes about a few minutes" in the
+paper; ours takes seconds at the scales we validate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .policy import QuantPolicy
+from .quant import fake_quant
+from . import reorder as reorder_lib
+
+ALPHA_GRID = tuple(np.round(np.linspace(0.5, 1.0, 11), 3))
+
+
+@dataclasses.dataclass
+class LayerCalibration:
+    """Calibration artifacts for one attention layer."""
+    perm_k: np.ndarray          # (H_kv, head_dim) int32
+    perm_v: np.ndarray          # (H_kv, head_dim)
+    alpha_k: np.ndarray         # (H_kv, G_total) float32
+    alpha_v: np.ndarray         # (H_kv, G_total)
+    smooth_k: Optional[np.ndarray] = None   # (H_kv, head_dim) — baseline only
+
+
+@dataclasses.dataclass
+class Calibration:
+    layers: list  # list[LayerCalibration], length = n_layers
+
+    def stacked(self):
+        """Stack per-layer arrays to (L, ...) jnp arrays for scan-over-layers."""
+        out = {}
+        for f in ("perm_k", "perm_v", "alpha_k", "alpha_v"):
+            out[f] = jnp.asarray(np.stack([getattr(l, f) for l in self.layers]))
+        return out
+
+
+def _group_mse_alpha(x: np.ndarray, bits: float, group_size: int,
+                     fp8_meta: bool) -> np.ndarray:
+    """Per-group best clip alpha by reconstruction MSE grid search.
+
+    x: (N, H, D) already-reordered samples. returns alpha (H, G_total) where
+    G_total follows :func:`repro.core.quant.plane_layout` (mixed widths have
+    per-plane group sizes).
+    """
+    from .quant import plane_layout  # local import to avoid cycle at module load
+
+    xj = jnp.asarray(x, dtype=jnp.float32)
+    n, h, d = xj.shape
+    layout = plane_layout(d, bits, group_size)
+
+    def err_for(a_scalar):
+        xq = fake_quant(xj, bits, group_size, alpha=jnp.float32(a_scalar),
+                        fp8_meta=fp8_meta)
+        parts = []
+        for (start, width, _b, gs) in layout:
+            e = ((xq[..., start:start + width] - xj[..., start:start + width]) ** 2)
+            parts.append(e.reshape(n, h, width // gs, gs).mean(axis=(0, 3)))
+        return jnp.concatenate(parts, axis=-1)  # (H, G_total)
+
+    errs = jnp.stack([err_for(a) for a in ALPHA_GRID])       # (A, H, G)
+    best = jnp.argmin(errs, axis=0)                           # (H, G)
+    alpha = jnp.asarray(ALPHA_GRID, jnp.float32)[best]
+    return np.asarray(alpha)
+
+
+def calibrate_layer(k_samples: np.ndarray, v_samples: np.ndarray,
+                    policy: QuantPolicy, seed: int = 0) -> LayerCalibration:
+    """k/v_samples: (N, H_kv, head_dim) activations from the calibration set."""
+    h, d = k_samples.shape[1], k_samples.shape[2]
+    gs = min(policy.group_size, d)
+    if policy.reorder:
+        perm_k = reorder_lib.compute_permutations(k_samples, gs, seed=seed)
+        perm_v = reorder_lib.compute_permutations(v_samples, gs, seed=seed + 977)
+    else:
+        perm_k = perm_v = np.tile(np.arange(d, dtype=np.int32), (h, 1))
+    from .quant import n_meta_groups
+    k_r = np.take_along_axis(k_samples, perm_k[None], axis=2)
+    v_r = np.take_along_axis(v_samples, perm_v[None], axis=2)
+    if policy.clip:
+        alpha_k = _group_mse_alpha(k_r, policy.bits_k, gs, policy.fp8_meta)
+        alpha_v = _group_mse_alpha(v_r, policy.bits_v, gs, policy.fp8_meta)
+    else:
+        alpha_k = np.ones((h, n_meta_groups(d, policy.bits_k, gs)), np.float32)
+        alpha_v = np.ones((h, n_meta_groups(d, policy.bits_v, gs)), np.float32)
+    smooth_k = reorder_lib.smooth_factors(k_samples)  # cheap; baselines use it
+    return LayerCalibration(perm_k, perm_v, alpha_k, alpha_v, smooth_k)
+
+
+def calibrate_model(kv_collector: Callable[[], tuple], policy: QuantPolicy,
+                    seed: int = 0) -> Calibration:
+    """kv_collector() -> (K, V) stacked (L, N, H_kv, head_dim) numpy arrays
+    (models expose ``collect_kv``; see models.transformer)."""
+    ks, vs = kv_collector()
+    layers = [calibrate_layer(np.asarray(ks[l]), np.asarray(vs[l]), policy,
+                              seed=seed + 31 * l)
+              for l in range(ks.shape[0])]
+    return Calibration(layers)
+
+
+def refine_attention_mse(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         calib: LayerCalibration, policy: QuantPolicy,
+                         grid=(0.85, 0.9, 0.95, 1.0)) -> float:
+    """Eq. 3: pick a global per-layer multiplier on alpha minimizing the MSE of
+    the attention *output* (softmax(QK^T)V) before/after KV quantization.
+
+    q/k/v: (B, S, H, D) with K/V already reordered. Returns best multiplier.
+    """
+    def attn(kq, vq):
+        s = jnp.einsum("bshd,bthd->bhst", q, kq) / np.sqrt(q.shape[-1])
+        mask = jnp.tril(jnp.ones((q.shape[1], kq.shape[1]), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+        return jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(s, axis=-1), vq)
+
+    ref = attn(k, v)
+    best, best_err = 1.0, np.inf
+    for m in grid:
+        ak = jnp.asarray(calib.alpha_k * m)
+        av = jnp.asarray(calib.alpha_v * m)
+        kq = fake_quant(k, policy.bits_k, policy.group_size, alpha=ak, fp8_meta=policy.fp8_meta)
+        vq = fake_quant(v, policy.bits_v, policy.group_size, alpha=av, fp8_meta=policy.fp8_meta)
+        err = float(((attn(kq, vq) - ref) ** 2).mean())
+        if err < best_err:
+            best, best_err = m, err
+    return best

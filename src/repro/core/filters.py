@@ -1,0 +1,63 @@
+"""Important-KV filter rules (paper Sec. 3.2, "Important KV Cache Filter").
+
+A filter rule decides, for each token sliding out of the fp window, whether it
+should be *retained at high precision* instead of quantized.  The paper ships
+exactly one enabled rule — the attention sink (first ``n_sink`` tokens) — and
+keeps the mechanism open as an interface for future rules (heavy hitters are
+discussed and deliberately not enabled: marginal gains + FlashAttention makes
+attention scores unavailable).
+
+The sink rule is *static* (position-based) and is implemented natively by the
+cache container's sink buffer.  Dynamic rules would require ragged fp storage;
+the interface below is the hook, and :class:`HeavyHitterFilter` documents the
+contract for a score-based rule (usable when the serving stack exposes
+accumulated attention mass, e.g. from a non-flash fallback path).
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax.numpy as jnp
+
+
+class FilterRule(Protocol):
+    """Returns True (per token) when the token must stay at full precision."""
+
+    def keep_fp(self, positions: jnp.ndarray, stats: dict) -> jnp.ndarray:
+        ...
+
+
+class AttentionSinkFilter:
+    """Keep the first ``n_sink`` tokens at full precision (enabled by default)."""
+
+    def __init__(self, n_sink: int = 5):
+        self.n_sink = n_sink
+
+    def keep_fp(self, positions: jnp.ndarray, stats: dict) -> jnp.ndarray:
+        return positions < self.n_sink
+
+
+class HeavyHitterFilter:
+    """Keep tokens whose accumulated attention mass exceeds a quantile.
+
+    ``stats`` must carry ``attn_mass`` (same shape as ``positions``).  Not
+    enabled in experiments (mirrors the paper's choice); provided so new
+    filters can be integrated without touching the cache container.
+    """
+
+    def __init__(self, quantile: float = 0.99):
+        self.quantile = quantile
+
+    def keep_fp(self, positions: jnp.ndarray, stats: dict) -> jnp.ndarray:
+        mass = stats["attn_mass"]
+        thresh = jnp.quantile(mass, self.quantile)
+        return mass >= thresh
+
+
+def combine(filters, positions, stats) -> jnp.ndarray:
+    """A token stays fp if ANY rule keeps it (Alg. 1 ands the quantize-masks,
+    i.e. ors the keep-masks)."""
+    keep = jnp.zeros_like(positions, dtype=bool)
+    for f in filters:
+        keep = keep | f.keep_fp(positions, stats)
+    return keep

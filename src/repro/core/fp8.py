@@ -1,0 +1,35 @@
+"""FP8 (E4M3) encode/decode for quantization metadata (scale / zero-point).
+
+The paper stores per-group scale and zero-point in FP8(E4M3) to cut metadata
+overhead (avg bits 2.5 vs 3.0 at group 32).  JAX ships a native
+``jnp.float8_e4m3fn`` dtype; we round-trip through it so the numerics are
+bit-exact with TPU hardware fp8, while storage in the cache container is the
+raw uint8 bit pattern (so byte accounting in the dry-run is honest).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+E4M3 = jnp.float8_e4m3fn
+
+
+E4M3_MAX = 448.0
+
+
+def encode_fp8(x: jnp.ndarray) -> jnp.ndarray:
+    """float -> uint8 bit-pattern of E4M3 (saturating: E4M3 has no inf, so
+    out-of-range values would otherwise become NaN)."""
+    x = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    return x.astype(E4M3).view(jnp.uint8)
+
+
+def decode_fp8(u: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """uint8 bit-pattern of E4M3 -> float."""
+    return u.view(E4M3).astype(dtype)
+
+
+def quantize_meta(x: jnp.ndarray, use_fp8: bool, dtype=jnp.float32) -> jnp.ndarray:
+    """Round metadata through its storage dtype (fp8 or fp16)."""
+    if use_fp8:
+        return decode_fp8(encode_fp8(x), dtype)
+    return jnp.clip(x, -6.5e4, 6.5e4).astype(jnp.float16).astype(dtype)

@@ -1,0 +1,263 @@
+"""SKVQ cache container (paper Sec. 3.2 + Alg. 1).
+
+Token layout (all indices are absolute positions):
+
+    [0, n_sink)                     -> fp sink buffer (attention sinks, kept forever)
+    [n_sink, length - W)            -> packed quantized region (2-bit K / 1.5-bit V)
+    [max(n_sink, length - W), length) -> fp sliding-window ring buffer (last W tokens)
+
+Prefill writes all three segments at once (attention itself ran in full
+precision first, per the paper).  Each decode step quantizes exactly the one
+token that slides out of the window (O(1) work), writes the new K/V into the
+ring, and bumps ``length``.  The ring slot of absolute token ``t`` is
+``(t - n_sink) % W``, so the evicted token ``t - W`` shares the slot being
+overwritten.
+
+The container is a plain dict pytree so it flows through jit/scan/pjit.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .policy import QuantPolicy
+from .quant import quantize_groups, dequantize_groups, plane_layout
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------- structure
+
+def _qtensor_shapes(batch: int, slots: int, n_kv: int, head_dim: int,
+                    bits: float, group_size: int, meta_bits: int):
+    """Shapes of the packed planes for one of K/V."""
+    shapes = {}
+    for name, (start, width, b, gs) in zip(("hi", "lo"),
+                                           plane_layout(head_dim, bits, group_size)):
+        meta_dt = jnp.uint8 if meta_bits == 8 else jnp.float16
+        shapes[f"codes_{name}"] = ((batch, slots, n_kv, width * b // 8), jnp.uint8)
+        shapes[f"scale_{name}"] = ((batch, slots, n_kv, width // gs), meta_dt)
+        shapes[f"zero_{name}"] = ((batch, slots, n_kv, width // gs), meta_dt)
+    return shapes
+
+
+def cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
+                 policy: QuantPolicy, dtype=jnp.bfloat16):
+    """Dict of (shape, dtype) — used both to build zeros and ShapeDtypeStructs."""
+    if policy.is_fp16:  # uncompressed baseline (the paper's FP16 column)
+        return {"length": ((), jnp.int32),
+                "k": ((batch, max_len, n_kv, head_dim), dtype),
+                "v": ((batch, max_len, n_kv, head_dim), dtype)}
+    w, ns = policy.window, policy.n_sink
+    sq = max(0, max_len - ns - w)
+    out = {"length": ((), jnp.int32)}
+    if ns > 0:
+        out["sink_k"] = ((batch, ns, n_kv, head_dim), dtype)
+        out["sink_v"] = ((batch, ns, n_kv, head_dim), dtype)
+    if w > 0:
+        out["win_k"] = ((batch, w, n_kv, head_dim), dtype)
+        out["win_v"] = ((batch, w, n_kv, head_dim), dtype)
+    gsz = min(policy.group_size, head_dim)
+    for pref, bits in (("qk", policy.bits_k), ("qv", policy.bits_v)):
+        for k, v in _qtensor_shapes(batch, sq, n_kv, head_dim, bits, gsz,
+                                    policy.meta_dtype_bits).items():
+            out[f"{pref}_{k}"] = v
+    return out
+
+
+def init_cache(batch, max_len, n_kv, head_dim, policy, dtype=jnp.bfloat16) -> Cache:
+    return {k: jnp.zeros(s, d) for k, (s, d) in
+            cache_shapes(batch, max_len, n_kv, head_dim, policy, dtype).items()}
+
+
+def _split_q(cache: Cache, pref: str):
+    plen = len(pref) + 1
+    return {k[plen:]: v for k, v in cache.items() if k.startswith(pref + "_")}
+
+
+# ------------------------------------------------------------------- prefill
+
+def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
+            alpha_k: Optional[jnp.ndarray] = None,
+            alpha_v: Optional[jnp.ndarray] = None) -> Cache:
+    """Build a cache from prefill K/V of shape (B, S, H_kv, D), S <= max_len.
+
+    K/V are already channel-reordered (the permutation lives in the fused
+    projection weights).  alpha_*: (H_kv, G_total) calibrated clip factors.
+    """
+    b, s, h, d = k.shape
+    dtype = k.dtype
+    w, ns = policy.window, policy.n_sink
+    cache = init_cache(b, max_len, h, d, policy, dtype)
+    if policy.is_fp16:
+        cache["k"] = cache["k"].at[:, :s].set(k)
+        cache["v"] = cache["v"].at[:, :s].set(v)
+        cache["length"] = jnp.int32(s)
+        return cache
+    if ns > 0:
+        take = min(ns, s)
+        cache["sink_k"] = cache["sink_k"].at[:, :take].set(k[:, :take])
+        cache["sink_v"] = cache["sink_v"].at[:, :take].set(v[:, :take])
+    if w > 0:
+        # window holds tokens [max(ns, s-w), s) at ring slot (t - ns) % w
+        lo = max(ns, s - w)
+        for buf, src in (("win_k", k), ("win_v", v)):
+            toks = src[:, lo:s]                                 # (B, n_win, H, D)
+            slots = (jnp.arange(lo, s) - ns) % w
+            cache[buf] = cache[buf].at[:, slots].set(toks)
+    qc = max(0, s - ns - w)
+    if qc > 0:
+        gsz = min(policy.group_size, d)
+        qk = quantize_groups(k[:, ns:ns + qc], policy.bits_k, gsz,
+                             alpha_k, policy.fp8_meta)
+        qv = quantize_groups(v[:, ns:ns + qc], policy.bits_v, gsz,
+                             alpha_v, policy.fp8_meta)
+        for name, qt in (("qk", qk), ("qv", qv)):
+            for kk, vv in qt.items():
+                full = cache[f"{name}_{kk}"]
+                cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice(
+                    full, vv.astype(full.dtype), (0,) * full.ndim)
+    cache["length"] = jnp.int32(s)
+    return cache
+
+
+# -------------------------------------------------------------------- decode
+
+def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                  policy: QuantPolicy,
+                  alpha_k: Optional[jnp.ndarray] = None,
+                  alpha_v: Optional[jnp.ndarray] = None) -> Cache:
+    """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one."""
+    b, _, h, d = k_new.shape
+    w, ns = policy.window, policy.n_sink
+    t = cache["length"]
+    cache = dict(cache)
+    if policy.is_fp16:
+        idx = jnp.clip(t, 0, cache["k"].shape[1] - 1)
+        for buf, x in (("k", k_new), ("v", v_new)):
+            cache[buf] = jax.lax.dynamic_update_slice_in_dim(
+                cache[buf], x.astype(cache[buf].dtype), idx, axis=1)
+        cache["length"] = t + 1
+        return cache
+    gsz = min(policy.group_size, d)
+
+    if w > 0:
+        slot = jnp.maximum(t - ns, 0) % w
+        u_e = t - ns - w  # quantized-region index of the evicted token
+        has_q = "qk_codes_hi" in cache and cache["qk_codes_hi"].shape[1] > 0
+        if has_q:
+            sq = cache["qk_codes_hi"].shape[1]
+            idx = jnp.clip(u_e, 0, sq - 1)
+            ek = jax.lax.dynamic_slice_in_dim(cache["win_k"], slot, 1, axis=1)
+            ev = jax.lax.dynamic_slice_in_dim(cache["win_v"], slot, 1, axis=1)
+            qk = quantize_groups(ek, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
+            qv = quantize_groups(ev, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
+            do_write = u_e >= 0
+            for name, qt in (("qk", qk), ("qv", qv)):
+                for kk, vv in qt.items():
+                    full = cache[f"{name}_{kk}"]
+                    old = jax.lax.dynamic_slice_in_dim(full, idx, 1, axis=1)
+                    new = jnp.where(do_write, vv.astype(full.dtype), old)
+                    cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice_in_dim(
+                        full, new, idx, axis=1)
+        # write the new token into the ring (or the sink buffer when t < ns)
+        is_sink = t < ns
+        if ns > 0:
+            sidx = jnp.clip(t, 0, ns - 1)
+            for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
+                old = jax.lax.dynamic_slice_in_dim(cache[buf], sidx, 1, axis=1)
+                cache[buf] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[buf], jnp.where(is_sink, x.astype(cache[buf].dtype), old),
+                    sidx, axis=1)
+        for buf, x in (("win_k", k_new), ("win_v", v_new)):
+            old = jax.lax.dynamic_slice_in_dim(cache[buf], slot, 1, axis=1)
+            cache[buf] = jax.lax.dynamic_update_slice_in_dim(
+                cache[buf], jnp.where(is_sink, old, x.astype(cache[buf].dtype)),
+                slot, axis=1)
+    else:
+        # no window: quantize immediately (the paper's no-window ablation)
+        u = jnp.maximum(t - ns, 0)
+        sq = cache["qk_codes_hi"].shape[1]
+        idx = jnp.clip(u, 0, sq - 1)
+        qk = quantize_groups(k_new, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
+        qv = quantize_groups(v_new, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
+        for name, qt in (("qk", qk), ("qv", qv)):
+            for kk, vv in qt.items():
+                cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[f"{name}_{kk}"], vv.astype(cache[f"{name}_{kk}"].dtype),
+                    idx, axis=1)
+        if ns > 0:
+            is_sink = t < ns
+            sidx = jnp.clip(t, 0, ns - 1)
+            for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
+                old = jax.lax.dynamic_slice_in_dim(cache[buf], sidx, 1, axis=1)
+                cache[buf] = jax.lax.dynamic_update_slice_in_dim(
+                    cache[buf], jnp.where(is_sink, x.astype(cache[buf].dtype), old),
+                    sidx, axis=1)
+    cache["length"] = t + 1
+    return cache
+
+
+# ----------------------------------------------------------- attention inputs
+
+def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
+                            dtype=jnp.bfloat16
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference path: materialize (K, V, positions, valid) over all segments.
+
+    Returns K/V (B, T, H, D), positions (T,) int32, valid (T,) bool where
+    T = n_sink + S_q + W.  Ordering is [sinks, quantized, window].  The Pallas
+    decode kernel consumes the packed segments directly instead.
+    """
+    w, ns = policy.window, policy.n_sink
+    t_total = cache["length"]  # tokens currently stored
+    gsz = min(policy.group_size, head_dim)
+    ks, vs, pos, val = [], [], [], []
+
+    if ns > 0:
+        ks.append(cache["sink_k"].astype(dtype))
+        vs.append(cache["sink_v"].astype(dtype))
+        p = jnp.arange(ns, dtype=jnp.int32)
+        pos.append(p)
+        val.append(p < t_total)
+
+    if "qk_codes_hi" in cache and cache["qk_codes_hi"].shape[1] > 0:
+        kq = dequantize_groups(_split_q(cache, "qk"), head_dim, policy.bits_k,
+                               gsz, policy.fp8_meta, dtype)
+        vq = dequantize_groups(_split_q(cache, "qv"), head_dim, policy.bits_v,
+                               gsz, policy.fp8_meta, dtype)
+        sq = kq.shape[1]
+        ks.append(kq)
+        vs.append(vq)
+        j = jnp.arange(sq, dtype=jnp.int32)
+        qc = jnp.maximum(t_total - ns - w, 0)  # number of quantized tokens
+        pos.append(ns + j)
+        val.append(j < qc)
+
+    if w > 0:
+        ks.append(cache["win_k"].astype(dtype))
+        vs.append(cache["win_v"].astype(dtype))
+        s = jnp.arange(w, dtype=jnp.int32)
+        u_last = t_total - 1 - ns  # u-index of newest token
+        u_s = u_last - ((u_last - s) % w)
+        p = u_s + ns
+        pos.append(p.astype(jnp.int32))
+        val.append((u_s >= 0) & (u_s > u_last - w) & (p < t_total))
+
+    return (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1),
+            jnp.concatenate(pos), jnp.concatenate(val))
+
+
+def materialize_kv(cache: Cache, head_dim: int, policy: QuantPolicy,
+                   total_len: int, dtype=jnp.float32):
+    """Test helper: reconstruct K/V in absolute position order (B, total, H, D)."""
+    k, v, pos, valid = gather_attention_inputs(cache, head_dim, policy, dtype)
+    b, _, h, d = k.shape
+    # scatter into a buffer with one extra "dump" slot for invalid entries;
+    # valid positions are unique so plain set() is race-free.
+    safe = jnp.where(valid, pos, total_len)
+    out_k = jnp.zeros((b, total_len + 1, h, d), dtype).at[:, safe].set(k.astype(dtype))
+    out_v = jnp.zeros((b, total_len + 1, h, d), dtype).at[:, safe].set(v.astype(dtype))
+    return out_k[:, :total_len], out_v[:, :total_len]

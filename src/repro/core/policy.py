@@ -1,0 +1,85 @@
+"""Quantization policy — the single config object threaded through the system.
+
+A :class:`QuantPolicy` describes *how* the KV cache is quantized; it is
+hashable/static so it can be closed over by jit'd step functions.  The paper's
+headline setting is ``QuantPolicy(bits_k=2, bits_v=1.5, group_size=128,
+window=128, n_sink=5, fp8_meta=True)``.
+
+Baseline methods from the paper's comparison tables are expressed as policies
+too (see :mod:`repro.core.baselines`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+_ALLOWED_BITS = (1.0, 1.5, 2.0, 3.0, 4.0, 8.0, 16.0)
+
+
+def bit_planes(bits: float) -> Tuple[Tuple[int, float], ...]:
+    """Decompose a (possibly fractional) bit width into integer planes.
+
+    Returns ((bits, fraction_of_groups), ...).  1.5 -> ((2, .5), (1, .5));
+    3.0 -> ((4, .5), (2, .5)) (byte-aligned packing only supports 1/2/4/8).
+    """
+    if bits == 1.5:
+        return ((2, 0.5), (1, 0.5))
+    if bits == 3.0:
+        return ((4, 0.5), (2, 0.5))
+    b = int(bits)
+    if b != bits or b not in (1, 2, 4, 8, 16):
+        raise ValueError(f"unsupported bits {bits}")
+    return ((b, 1.0),)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """How to quantize the KV cache."""
+
+    bits_k: float = 2.0
+    bits_v: float = 2.0
+    group_size: int = 128          # channels per quant group (within head_dim)
+    window: int = 128              # fp sliding-window length (0 = no window)
+    n_sink: int = 5                # attention-sink tokens kept fp forever
+    fp8_meta: bool = True          # store scale/zero in FP8-E4M3 (else fp16)
+    clip: bool = True              # use calibrated per-group clip alpha
+    reorder: bool = True           # use calibrated per-head channel permutation
+    # --- baseline switches (mutually exclusive with reorder) ---
+    smooth: bool = False           # SmoothQuant-style per-channel equalization
+    per_channel_key: bool = False  # KIVI-style: K quantized along the token axis
+    # ---
+    meta_dtype_bits: int = dataclasses.field(init=False, default=8)
+
+    def __post_init__(self):
+        if self.bits_k not in _ALLOWED_BITS or self.bits_v not in _ALLOWED_BITS:
+            raise ValueError(f"bits must be in {_ALLOWED_BITS}")
+        if self.group_size <= 0:
+            raise ValueError("group_size must be positive")
+        object.__setattr__(self, "meta_dtype_bits", 8 if self.fp8_meta else 16)
+
+    # -- derived --------------------------------------------------------
+    def n_groups(self, head_dim: int) -> int:
+        if head_dim % self.group_size != 0:
+            # fall back to one group per head when head_dim < group_size
+            if self.group_size % head_dim == 0:
+                return 1
+            raise ValueError(f"head_dim {head_dim} incompatible with group {self.group_size}")
+        return head_dim // self.group_size
+
+    def avg_bits(self, head_dim: int) -> float:
+        """Average bits/element incl. metadata — the paper's `avg-bits` metric."""
+        g = min(self.group_size, head_dim)
+        payload = (self.bits_k + self.bits_v) / 2
+        meta = 2 * self.meta_dtype_bits / g  # scale + zero per group
+        return payload + meta
+
+    @property
+    def is_fp16(self) -> bool:
+        return self.bits_k >= 16 and self.bits_v >= 16
+
+
+FP16_POLICY = QuantPolicy(bits_k=16.0, bits_v=16.0, clip=False, reorder=False,
+                          window=0, n_sink=0)
+# The paper's headline configuration (Sec. 4.2, Fig. 4): K2 V1.5, g128, w128.
+PAPER_POLICY = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=128, window=128,
+                           n_sink=5, fp8_meta=True)

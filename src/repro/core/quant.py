@@ -1,0 +1,142 @@
+"""Clipped dynamic group quantization (paper Sec. 3.1, Eq. 2).
+
+Per-token, per-group asymmetric quantization of the (reordered) channel axis:
+
+    lo = alpha * min(x_g),  hi = alpha * max(x_g)
+    h  = (hi - lo) / (2^N - 1)
+    q  = clamp(round((x - lo) / h), 0, 2^N - 1)
+    x^ = q * h + lo
+
+``alpha`` is the per-group clip factor calibrated offline (Eq. 3).  Scale and
+zero-point are stored in FP8-E4M3 (or fp16) — actual storage dtype, so byte
+accounting in the dry-run is honest.
+
+Fractional bit widths (the paper's V1.5) are realized as two byte-aligned
+*planes*: the first half of the (reordered) channels at the higher width, the
+second half at the lower width.  Reordering sorts channel groups by dispersion,
+so the high-bit plane covers the high-dispersion channels.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from .fp8 import quantize_meta, encode_fp8, decode_fp8
+from .packing import pack, unpack, unpack_u8
+from .policy import bit_planes
+
+QTensor = Dict[str, jnp.ndarray]
+_EPS = 1e-8
+
+
+def plane_layout(d: int, bits: float, group_size: int) -> List[Tuple[int, int, int, int]]:
+    """[(channel_start, width, bits, group_size_effective), ...] for each plane."""
+    planes = bit_planes(bits)
+    if len(planes) == 1:
+        return [(0, d, planes[0][0], min(group_size, d))]
+    (b_hi, frac), (b_lo, _) = planes
+    d_hi = int(d * frac)
+    # keep both planes packable (multiple of 8 channels)
+    d_hi -= d_hi % 8
+    d_hi = max(d_hi, 8)
+    return [(0, d_hi, b_hi, min(group_size, d_hi)),
+            (d_hi, d - d_hi, b_lo, min(group_size, d - d_hi))]
+
+
+def n_meta_groups(d: int, bits: float, group_size: int) -> int:
+    """Total scale/zero entries per token-head across all planes."""
+    return sum(w // gs for (_, w, _, gs) in plane_layout(d, bits, group_size))
+
+
+def _quant_plane(x: jnp.ndarray, bits: int, gs: int, alpha, fp8_meta: bool):
+    """x: (..., Dp) -> packed codes (..., Dp*bits/8) u8, scale/zero (..., Gp) stored."""
+    *lead, dp = x.shape
+    g = dp // gs
+    xg = x.reshape(*lead, g, gs).astype(jnp.float32)
+    lo = xg.min(axis=-1)
+    hi = xg.max(axis=-1)
+    if alpha is not None:
+        lo = lo * alpha
+        hi = hi * alpha
+    h = (hi - lo) / (2 ** bits - 1)
+    h = jnp.maximum(h, _EPS)
+    # round metadata through its storage dtype BEFORE computing codes, so that
+    # dequant(quant(x)) is exactly what the deployed kernel produces.
+    h = quantize_meta(h, fp8_meta)
+    lo = quantize_meta(lo, fp8_meta)
+    q = jnp.clip(jnp.round((xg - lo[..., None]) / h[..., None]), 0, 2 ** bits - 1)
+    codes = pack(q.astype(jnp.uint8).reshape(*lead, dp), bits)
+    if fp8_meta:
+        return codes, encode_fp8(h), encode_fp8(lo)
+    return codes, h.astype(jnp.float16), lo.astype(jnp.float16)
+
+
+def _dequant_plane(codes, scale, zero, bits: int, gs: int, fp8_meta: bool, dtype):
+    # arithmetic in the *target* dtype (bf16 on the serve path): at 1-2 bit
+    # payloads the dequant rounding is far below the quantization noise, and
+    # the intermediates cost 2 bytes instead of 4 (§Perf memory iteration).
+    cdt = jnp.promote_types(dtype, jnp.bfloat16)
+    q = unpack_u8(codes, bits).astype(cdt)
+    *lead, dp = q.shape
+    g = dp // gs
+    h = (decode_fp8(scale, cdt) if fp8_meta else scale.astype(cdt))
+    lo = (decode_fp8(zero, cdt) if fp8_meta else zero.astype(cdt))
+    xg = q.reshape(*lead, g, gs) * h[..., None] + lo[..., None]
+    return xg.reshape(*lead, dp).astype(dtype)
+
+
+def quantize_groups(x: jnp.ndarray, bits: float, group_size: int,
+                    alpha: Optional[jnp.ndarray] = None,
+                    fp8_meta: bool = True) -> QTensor:
+    """Quantize the last axis of ``x``. alpha: scalar or (G_total,) clip factors.
+
+    Returns a dict pytree: codes_hi/scale_hi/zero_hi (+ *_lo for mixed widths).
+    """
+    d = x.shape[-1]
+    layout = plane_layout(d, bits, group_size)
+    out: QTensor = {}
+    g_off = 0
+    for name, (start, width, b, gs) in zip(("hi", "lo"), layout):
+        gp = width // gs
+        a = None
+        if alpha is not None:
+            a = alpha if jnp.ndim(alpha) == 0 else alpha[..., g_off:g_off + gp]
+        codes, scale, zero = _quant_plane(x[..., start:start + width], b, gs, a, fp8_meta)
+        out[f"codes_{name}"] = codes
+        out[f"scale_{name}"] = scale
+        out[f"zero_{name}"] = zero
+        g_off += gp
+    return out
+
+
+def dequantize_groups(qt: QTensor, d: int, bits: float, group_size: int,
+                      fp8_meta: bool = True, dtype=jnp.bfloat16) -> jnp.ndarray:
+    layout = plane_layout(d, bits, group_size)
+    parts = []
+    for name, (start, width, b, gs) in zip(("hi", "lo"), layout):
+        parts.append(_dequant_plane(qt[f"codes_{name}"], qt[f"scale_{name}"],
+                                    qt[f"zero_{name}"], b, gs, fp8_meta, dtype))
+    return jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+
+def fake_quant(x: jnp.ndarray, bits: float, group_size: int,
+               alpha: Optional[jnp.ndarray] = None, fp8_meta: bool = True,
+               axis: int = -1) -> jnp.ndarray:
+    """dequantize(quantize(x)) along ``axis`` — the quality-evaluation path."""
+    if bits >= 16:
+        return x
+    if axis not in (-1, x.ndim - 1):
+        x_t = jnp.moveaxis(x, axis, -1)
+        y = fake_quant(x_t, bits, group_size, alpha, fp8_meta)
+        return jnp.moveaxis(y, -1, axis)
+    qt = quantize_groups(x, bits, group_size, alpha, fp8_meta)
+    return dequantize_groups(qt, x.shape[-1], bits, group_size, fp8_meta, x.dtype)
+
+
+def packed_nbytes(d: int, bits: float, group_size: int, meta_bits: int) -> int:
+    """Bytes per token-head of the packed representation (codes + metadata)."""
+    total = 0
+    for (_, width, b, gs) in plane_layout(d, bits, group_size):
+        total += width * b // 8 + 2 * (width // gs) * meta_bits // 8
+    return total

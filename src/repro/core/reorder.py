@@ -1,0 +1,142 @@
+"""Channel reorder (paper Sec. 3.1, "Channel Reorder").
+
+Channels with similar statistics are clustered (KMeans over per-channel
+features from a calibration set) and placed adjacently, so each quantization
+group covers a homogeneous range.  TPU adaptation: the permutation is
+*per-head* — `QK^T` and `S·V` are computed per head, so only within-head
+permutations preserve the attention output exactly (see DESIGN.md §3).  The
+permutation is fused into the projection weights offline; no runtime reorder
+op exists.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def channel_features(samples: np.ndarray) -> np.ndarray:
+    """Per-channel statistics for clustering.
+
+    samples: (N, H, D) K or V activations from the calibration set.
+    returns: (H, D, 3) features = [log-range, mean, std].
+    """
+    s = np.asarray(samples, dtype=np.float64)
+    rng = s.max(axis=0) - s.min(axis=0)            # (H, D)
+    mean = s.mean(axis=0)
+    std = s.std(axis=0)
+    return np.stack([np.log(rng + 1e-6), mean, std], axis=-1)
+
+
+def kmeans(feats: np.ndarray, k: int, iters: int = 32, seed: int = 0) -> np.ndarray:
+    """Plain KMeans (numpy; calibration is offline). Returns labels (N,)."""
+    n = feats.shape[0]
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    # k-means++ init
+    centers = [feats[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(((feats[:, None, :] - np.array(centers)[None]) ** 2).sum(-1), axis=1)
+        p = d2 / max(d2.sum(), 1e-12)
+        centers.append(feats[rng.choice(n, p=p)])
+    c = np.array(centers)
+    labels = np.zeros(n, dtype=np.int64)
+    for _ in range(iters):
+        d2 = ((feats[:, None, :] - c[None]) ** 2).sum(-1)
+        new = d2.argmin(axis=1)
+        if (new == labels).all():
+            break
+        labels = new
+        for j in range(k):
+            m = labels == j
+            if m.any():
+                c[j] = feats[m].mean(axis=0)
+    return labels
+
+
+def head_permutation(feats_h: np.ndarray, n_groups: int, seed: int = 0) -> np.ndarray:
+    """Permutation of one head's channels: cluster, order clusters by centroid
+    range (descending), order channels within cluster by range (descending).
+
+    After this ordering, chopping the channel axis into equal ``group_size``
+    chunks yields groups of similar channels ("control the number of groups so
+    the average group size matches" — paper Sec. 4.2), and the high-dispersion
+    channels land in the *first* groups (which the 2-bit plane of mixed-width
+    value quantization covers).
+    """
+    d = feats_h.shape[0]
+    labels = kmeans(feats_h, n_groups, seed=seed)
+    rng_feat = feats_h[:, 0]  # log-range
+    cluster_rank = {}
+    for j in np.unique(labels):
+        cluster_rank[j] = -rng_feat[labels == j].mean()
+    order = np.lexsort((-rng_feat, np.array([cluster_rank[l] for l in labels])))
+    assert order.shape == (d,)
+    return order.astype(np.int32)
+
+
+def compute_permutations(samples: np.ndarray, group_size: int, seed: int = 0) -> np.ndarray:
+    """samples: (N, H, D) -> perm (H, D) int32 (per-head channel order)."""
+    feats = channel_features(samples)
+    h, d, _ = feats.shape
+    n_groups = max(d // min(group_size, d), 1)
+    return np.stack([head_permutation(feats[i], n_groups, seed=seed + i)
+                     for i in range(h)], axis=0)
+
+
+def invert_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    for i in range(perm.shape[0]):
+        inv[i, perm[i]] = np.arange(perm.shape[1], dtype=perm.dtype)
+    return inv
+
+
+# ---------------------------------------------------------------- weight fusion
+
+def fuse_out_channels(w: jnp.ndarray, perm: np.ndarray) -> jnp.ndarray:
+    """Fuse a per-head output-channel permutation into a projection weight.
+
+    w: (d_model, H*head_dim) — columns [h*hd:(h+1)*hd] are head h's channels.
+    perm: (H, head_dim).  Returns w with columns permuted so the projection
+    emits already-reordered channels.
+    """
+    h, hd = perm.shape
+    d_model = w.shape[0]
+    w3 = w.reshape(d_model, h, hd)
+    idx = jnp.asarray(perm)  # (H, hd)
+    w3p = jnp.take_along_axis(w3, idx[None, :, :], axis=2)
+    return w3p.reshape(d_model, h * hd)
+
+
+def fuse_in_channels(w: jnp.ndarray, perm: np.ndarray) -> jnp.ndarray:
+    """Fuse a per-head input-channel permutation into W_o.
+
+    w: (H*head_dim, d_model); rows [h*hd:(h+1)*hd] consume head h's channels.
+    """
+    h, hd = perm.shape
+    d_model = w.shape[1]
+    w3 = w.reshape(h, hd, d_model)
+    idx = jnp.asarray(perm)
+    w3p = jnp.take_along_axis(w3, idx[:, :, None], axis=1)
+    return w3p.reshape(h * hd, d_model)
+
+
+def expand_kv_perm_for_q(perm_k: np.ndarray, n_q_heads: int) -> np.ndarray:
+    """GQA: each KV head serves n_q/n_kv query heads; Q channels must follow
+    the permutation of the KV head they attend to."""
+    n_kv = perm_k.shape[0]
+    rep = n_q_heads // n_kv
+    return np.repeat(perm_k, rep, axis=0)
+
+
+# ---------------------------------------------------- SmoothQuant-style factor
+
+def smooth_factors(samples: np.ndarray, alpha: float = 1.0) -> np.ndarray:
+    """Per-channel smoothing factor s (baseline; paper App. 10).
+
+    With the paper's alpha=1.0 the transformation is fully inclined to the KV
+    cache: s = max|X_ch| (K is divided by s, Q multiplied by s).
+    """
+    s = np.abs(np.asarray(samples, dtype=np.float64)).max(axis=0) ** alpha  # (H, D)
+    return np.maximum(s, 1e-5).astype(np.float32)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticCorpus, DataLoader, make_passkey_sample
+
+__all__ = ["SyntheticCorpus", "DataLoader", "make_passkey_sample"]

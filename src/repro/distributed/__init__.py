@@ -1,0 +1,6 @@
+"""Distribution: sharding rules, mesh helpers, gradient compression."""
+from .sharding import (logical, use_sharding, current_rules, ShardingCtx,
+                       TRAIN_RULES, SERVE_RULES, param_partition_specs)
+
+__all__ = ["logical", "use_sharding", "current_rules", "ShardingCtx",
+           "TRAIN_RULES", "SERVE_RULES", "param_partition_specs"]

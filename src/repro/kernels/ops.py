@@ -1,0 +1,106 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``skvq_decode_attention`` is a drop-in alternative to the pure-jnp reference
+path in ``repro.models.attention.decode_attention_skvq``: the packed segment
+goes through the fused dequant+flash kernel; the (tiny) fp sink/window
+segments run in plain jnp; the three partials merge by logsumexp.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.policy import QuantPolicy
+from ..core import kv_cache as kvc
+from .decode_attn import decode_attn_pallas, BLOCK_S
+from .kv_quant import kv_quant_pallas
+from . import ref as R
+
+
+def _pad_to(x, s_to, axis=1):
+    pad = s_to - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfgp = [(0, 0)] * x.ndim
+    cfgp[axis] = (0, pad)
+    return jnp.pad(x, cfgp)
+
+
+def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=True):
+    """(N, D) tokens -> packed QTensor via the fused Pallas kernel."""
+    n, d = x.shape
+    blk = min(128, n) if n % 128 else 128
+    while n % blk:
+        blk //= 2
+    return kv_quant_pallas(x, policy.bits_k, min(policy.group_size, d),
+                           alpha=alpha, fp8_meta=policy.fp8_meta,
+                           interpret=interpret, block_t=max(blk, 1))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "head_dim", "scale",
+                                             "window", "interpret", "block_s"))
+def skvq_decode_attention(q, cache, policy: QuantPolicy, head_dim: int,
+                          scale: float, window: int = 0, interpret: bool = True,
+                          block_s: int = BLOCK_S):
+    """q: (B, 1, Hq, D); cache: SKVQ cache dict. Returns (B, 1, Hq, D).
+
+    The packed segment is consumed by the fused kernel; sinks+window (fp)
+    are attended in jnp and merged flash-style.
+    """
+    b, _, hq, d = q.shape
+    ns, w = policy.n_sink, policy.window
+    t_now = cache["length"] - 1
+    hkv = cache["qk_codes_hi"].shape[2]
+    gq = hq // hkv
+    qg = q.reshape(b, hkv, gq, d) if hq == hkv * gq else None
+    qg = jnp.swapaxes(q.reshape(b, 1, hkv, gq, d)[:, 0], 0, 0)
+
+    parts = []
+    s_q = cache["qk_codes_hi"].shape[1]
+    if s_q > 0:
+        s_pad = -(-s_q // block_s) * block_s
+        k_qt = {k[3:]: _pad_to(v, s_pad) for k, v in cache.items()
+                if k.startswith("qk_")}
+        v_qt = {k[3:]: _pad_to(v, s_pad) for k, v in cache.items()
+                if k.startswith("qv_")}
+        j = jnp.arange(s_pad)
+        qc = jnp.maximum(t_now + 1 - ns - w, 0)
+        ok = j < qc
+        if window > 0:
+            ok = ok & (t_now - (ns + j) < window)
+        num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
+                                       policy, head_dim, scale,
+                                       interpret=interpret, block_s=block_s)
+        parts.append((num, m[..., 0], l[..., 0]))
+
+    # fp segments (sinks + sliding window) in plain jnp
+    ks, vs, pos, valid = [], [], [], []
+    if ns > 0 and "sink_k" in cache:
+        ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
+        p = jnp.arange(ns); pos.append(p); valid.append(p < t_now + 1)
+    if w > 0 and "win_k" in cache:
+        ks.append(cache["win_k"]); vs.append(cache["win_v"])
+        s = jnp.arange(w)
+        u_last = t_now - ns
+        u_s = u_last - ((u_last - s) % w)
+        p = u_s + ns
+        pos.append(p)
+        valid.append((u_s >= 0) & (u_s > u_last - w) & (p <= t_now))
+    if ks:
+        kf = jnp.swapaxes(jnp.concatenate(ks, axis=1), 1, 2).astype(jnp.float32)
+        vf = jnp.swapaxes(jnp.concatenate(vs, axis=1), 1, 2).astype(jnp.float32)
+        pf = jnp.concatenate(pos)
+        ok = jnp.concatenate(valid)
+        if window > 0:
+            ok = ok & (t_now - pf < window)
+        s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, kf)
+        s = jnp.where(ok[None, None, None, :], s, -1e30)
+        m = s.max(axis=-1)
+        p_ = jnp.exp(s - m[..., None])
+        parts.append((jnp.einsum("bhgt,bhtd->bhgd", p_, vf), m, p_.sum(axis=-1)))
+
+    out = R.merge_segments(parts)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import quantize_groups, dequantize_groups
+from ..core.policy import QuantPolicy
+
+
+def kv_quant_ref(x, bits: float, group_size: int, alpha=None, fp8_meta=True):
+    """x: (..., D) -> QTensor dict (the packed representation)."""
+    return quantize_groups(x, bits, group_size, alpha, fp8_meta)
+
+
+def dequant_ref(qt, d: int, bits: float, group_size: int, fp8_meta=True,
+                dtype=jnp.float32):
+    return dequantize_groups(qt, d, bits, group_size, fp8_meta, dtype)
+
+
+def decode_attn_ref(q, k_qt, v_qt, qc, policy: QuantPolicy, head_dim: int,
+                    scale: float, t_now=None, window: int = 0,
+                    pos_offset: int = 0):
+    """Flash-merge-compatible oracle over the quantized segment only.
+
+    q: (B, Hkv, Gq, D); k_qt/v_qt: QTensor dicts with leading (B, S, Hkv);
+    qc: scalar number of valid quantized tokens.
+    Returns (out (B,Hkv,Gq,D) — UNNORMALIZED numerator, m (B,Hkv,Gq) row max,
+    l (B,Hkv,Gq) softmax denominator) so callers can logsumexp-merge with the
+    fp window/sink segments.
+    """
+    gsz = min(policy.group_size, head_dim)
+    k = dequant_ref(k_qt, head_dim, policy.bits_k, gsz, policy.fp8_meta)
+    v = dequant_ref(v_qt, head_dim, policy.bits_v, gsz, policy.fp8_meta)
+    # k/v: (B, S, Hkv, D) -> (B, Hkv, S, D)
+    k = jnp.swapaxes(k, 1, 2).astype(jnp.float32)
+    v = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32) * scale, k)
+    pos = jnp.arange(k.shape[2]) + pos_offset
+    ok = jnp.arange(k.shape[2]) < qc
+    if window > 0 and t_now is not None:
+        ok = ok & (t_now - pos < window)
+    s = jnp.where(ok[None, None, None, :], s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v)
+    return out, m, l
+
+
+def merge_segments(parts):
+    """logsumexp-merge [(out, m, l), ...] partial attentions -> (B,H,G,D)."""
+    m_tot = jnp.stack([m for _, m, _ in parts]).max(axis=0)
+    num = 0.0
+    den = 0.0
+    for out, m, l in parts:
+        w = jnp.exp(m - m_tot)
+        num = num + out * w[..., None]
+        den = den + l * w
+    return num / jnp.maximum(den, 1e-30)[..., None]

@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any jax import — jax locks the
+# device count at first init (hence no `from __future__` in this module).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder CPU devices host the production meshes
+(single-pod 16×16 and multi-pod 2×16×16); every cell must
+``.lower().compile()``, print ``memory_analysis()`` (fits) and
+``cost_analysis()`` (FLOPs/bytes for §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3p2_1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun.json
+
+Results append incrementally to the JSON so interrupted sweeps resume.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..configs import shapes as shp
+from ..core.policy import PAPER_POLICY, QuantPolicy
+from ..distributed.sharding import (use_sharding, TRAIN_RULES, SERVE_RULES,
+                                    LONG_SERVE_RULES)
+from ..models import transformer as T
+from ..training import make_train_step, init_train_state
+from . import roofline as RL
+from . import jaxpr_cost as JC
+from .mesh import make_production_mesh
+from .shardings import (state_shardings, params_shardings, batch_shardings,
+                        cache_shardings, token_sharding)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _spec_tree(f, *args):
+    return jax.eval_shape(f, *args)
+
+
+# §Perf variants — configuration overlays measured against "base".
+# "base" pins the paper-faithful/naive settings; each named variant flips one
+# lever so the roofline delta is attributable (EXPERIMENTS.md §Perf).
+VARIANTS = {
+    "base": {},
+    # training levers
+    "remat_full": {"remat_policy": "nothing"},
+    "moe_grouped": {"moe_dispatch": "grouped"},
+    "seqpar": {"seq_parallel": True},
+    "remat_full+moe_grouped": {"remat_policy": "nothing",
+                               "moe_dispatch": "grouped"},
+    # decode levers
+    "fp16_cache": {"policy": "fp16"},        # the paper's own before/after
+    "chunked": {"chunk": 4096},
+    "unroll_local": {"unroll": True},
+    "unroll_local+chunked": {"unroll": True, "chunk": 4096},
+    # batch=1 long context: SKVQ's 8× compression makes full replication of
+    # the packed cache viable — no context-parallel collectives at all
+    "replicated": {"replicate_cache": True},
+    "replicated+unroll_local": {"replicate_cache": True, "unroll": True},
+    "replicated+unroll_local+chunked": {"replicate_cache": True,
+                                        "unroll": True, "chunk": 4096},
+}
+_BASE_TRAIN = {"remat_policy": "dots", "moe_dispatch": "scatter"}
+
+
+def lower_train(cfg, shape: str, mesh, seq_parallel=False):
+    cfg = dataclasses.replace(cfg, remat=True)
+    state_shape = _spec_tree(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    st_sh = state_shardings(state_shape, mesh, fsdp=True)
+    batch_spec = shp.train_input_specs(cfg, shape, COMPUTE_DTYPE)
+    b_sh = batch_shardings(batch_spec, mesh)
+    step = make_train_step(cfg, compute_dtype=COMPUTE_DTYPE)
+    rules = dict(TRAIN_RULES)
+    if seq_parallel:
+        rules["seq"] = "model"
+    with mesh, use_sharding(mesh, rules):
+        lowered = jax.jit(step, in_shardings=(st_sh, b_sh),
+                          out_shardings=(st_sh, None),
+                          donate_argnums=(0,)).lower(
+            state_shape, batch_spec)
+        compiled = lowered.compile()
+    jc = JC.cost_of_fn(step, state_shape, batch_spec)
+    return compiled, jc
+
+
+def lower_prefill(cfg, shape: str, mesh, policy: QuantPolicy):
+    params_shape = _spec_tree(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=COMPUTE_DTYPE))
+    p_sh = params_shardings(params_shape, mesh)
+    batch_spec = shp.prefill_input_specs(cfg, shape, COMPUTE_DTYPE)
+    b_sh = batch_shardings(batch_spec, mesh)
+    ml = shp.serve_max_len(shp.SHAPES[shape]["seq_len"], policy)
+
+    def prefill(params, batch):
+        return T.prefill_model(params, cfg, batch, policy, max_len=ml,
+                               dtype=COMPUTE_DTYPE)
+
+    with mesh, use_sharding(mesh, SERVE_RULES):
+        lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+            params_shape, batch_spec)
+        compiled = lowered.compile()
+    jc = JC.cost_of_fn(prefill, params_shape, batch_spec)
+    return compiled, jc
+
+
+def lower_decode(cfg, shape: str, mesh, policy: QuantPolicy, chunk=0,
+                 unroll=False, replicate_cache=False):
+    long_ctx = (shp.SHAPES[shape]["global_batch"] == 1
+                and not replicate_cache)
+    params_shape = _spec_tree(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype=COMPUTE_DTYPE))
+    p_sh = params_shardings(params_shape, mesh)
+    caches_shape = shp.decode_cache_specs(cfg, shape, policy, params_shape,
+                                          dtype=COMPUTE_DTYPE)
+    c_sh = cache_shardings(caches_shape, cfg, mesh, long_ctx=long_ctx)
+    tok_spec = shp.decode_token_spec(cfg, shape, COMPUTE_DTYPE)
+    t_sh = token_sharding(tok_spec, mesh)
+
+    def decode(params, token, caches):
+        return T.decode_step(params, cfg, token, caches, policy,
+                             dtype=COMPUTE_DTYPE, chunk=chunk, unroll=unroll)
+
+    from ..distributed.sharding import REPL_SERVE_RULES
+    if long_ctx:
+        rules = LONG_SERVE_RULES
+    elif replicate_cache:
+        rules = REPL_SERVE_RULES
+    else:
+        rules = SERVE_RULES
+    with mesh, use_sharding(mesh, rules):
+        lowered = jax.jit(decode, in_shardings=(p_sh, t_sh, c_sh),
+                          out_shardings=(None, c_sh),
+                          donate_argnums=(2,)).lower(
+            params_shape, tok_spec, caches_shape)
+        compiled = lowered.compile()
+    jc = JC.cost_of_fn(decode, params_shape, tok_spec, caches_shape)
+    return compiled, jc
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             policy: QuantPolicy = PAPER_POLICY,
+             variant: str = "base") -> Dict:
+    res: Dict = {"arch": arch, "shape": shape, "variant": variant,
+                 "mesh": "2x16x16" if multi_pod else "16x16"}
+    skip = shp.cell_is_skipped(arch, shape)
+    if skip:
+        res.update(status="skipped", reason=skip)
+        return res
+    cfg = configs.get(arch)
+    kind = shp.SHAPES[shape]["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = 512 if multi_pod else 256
+    ov = dict(VARIANTS[variant])
+    t0 = time.time()
+    try:
+        if kind == "train":
+            cfg = dataclasses.replace(
+                cfg,
+                remat_policy=ov.get("remat_policy",
+                                    _BASE_TRAIN["remat_policy"]),
+                moe_dispatch=ov.get("moe_dispatch",
+                                    _BASE_TRAIN["moe_dispatch"]))
+            compiled, jc = lower_train(cfg, shape, mesh,
+                                       seq_parallel=ov.get("seq_parallel",
+                                                           False))
+        elif kind == "prefill":
+            compiled, jc = lower_prefill(cfg, shape, mesh, policy)
+        else:
+            from ..core.policy import FP16_POLICY
+            pol = FP16_POLICY if ov.get("policy") == "fp16" else policy
+            compiled, jc = lower_decode(
+                cfg, shape, mesh, pol, chunk=ov.get("chunk", 0),
+                unroll=ov.get("unroll", False),
+                replicate_cache=ov.get("replicate_cache", False))
+        mf = RL.model_flops(cfg, kind, shp.SHAPES[shape]["global_batch"],
+                            shp.SHAPES[shape]["seq_len"]) / n_dev
+        loop_mult = float(cfg.n_layers - cfg.first_dense)
+        rl = RL.from_compiled(compiled, mf, loop_mult=loop_mult,
+                              jaxpr_costs=jc, n_devices=n_dev)
+        ma = compiled.memory_analysis()
+        res.update(status="ok", compile_s=round(time.time() - t0, 1),
+                   roofline=rl.to_dict(),
+                   xla_cost={"flops": compiled.cost_analysis().get("flops", 0.0),
+                             "bytes": compiled.cost_analysis().get(
+                                 "bytes accessed", 0.0)},
+                   memory={"argument": ma.argument_size_in_bytes,
+                           "output": ma.output_size_in_bytes,
+                           "temp": ma.temp_size_in_bytes,
+                           "peak": ma.peak_memory_in_bytes,
+                           "alias": ma.alias_size_in_bytes},
+                   collectives=RL.collective_stats(
+                       compiled.as_text(), loop_mult)["by_kind"])
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        res.update(status="error", compile_s=round(time.time() - t0, 1),
+                   error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return res
+
+
+def _fmt_cell(res: Dict) -> str:
+    v = res.get("variant", "base")
+    head = f"{res['arch']:22s} {res['shape']:11s} {res['mesh']:7s} {v:12s}"
+    if res["status"] == "skipped":
+        return f"{head} SKIP ({res['reason'][:40]})"
+    if res["status"] == "error":
+        return f"{head} ERROR {res['error'][:80]}"
+    r, m = res["roofline"], res["memory"]
+    return (f"{head} ok tC={r['t_compute']:.3e} tM={r['t_memory']:.3e} "
+            f"tX={r['t_collective']:.3e} dom={r['dominant']:10s} "
+            f"temp={m['temp']/2**30:.1f}GiB comp={res['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--variant", default="base", choices=sorted(VARIANTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [a for a in configs.ARCHS if a != "llama2_7b"] \
+        if (args.all or not args.arch) else [args.arch]
+    shapes = list(shp.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done: Dict[str, Dict] = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            done = {(f"{r['arch']}|{r['shape']}|{r['mesh']}"
+                     f"|{r.get('variant', 'base')}"): r
+                    for r in json.load(f)}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+                       f"|{args.variant}")
+                if key in done and done[key]["status"] != "error":
+                    print(_fmt_cell(done[key]), "(cached)")
+                    continue
+                res = run_cell(arch, shape, mp, variant=args.variant)
+                done[key] = res
+                print(_fmt_cell(res), flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(list(done.values()), f, indent=1)
+
+    n_ok = sum(1 for r in done.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in done.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in done.values() if r["status"] == "error")
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors ==")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

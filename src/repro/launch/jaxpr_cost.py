@@ -1,0 +1,119 @@
+"""Jaxpr-level cost counter with exact scan trip-count handling.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE (verified in
+EXPERIMENTS.md §Dry-run methodology), which silently undercounts scan-over-
+layers models by ~n_layers×.  Unrolled lowering is exact but blows up compile
+time on this 1-core container, so the dry-run instead walks the jaxpr:
+
+  * flops: dot_general = 2·batch·M·N·K; conv = 2·out·kernel; ~1/elt otherwise;
+  * bytes: operand+result sizes per primitive (op-level, like XLA's metric);
+  * scan bodies multiply by ``length``; pjit/remat/custom_* recurse.
+
+Counts are GLOBAL logical totals; divide by device count for per-chip terms
+(GSPMD padding waste is therefore excluded — the MODEL_FLOPS ratio in
+§Roofline stays a clean "useful compute" measure).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict
+
+import numpy as np
+import jax
+from jax.extend import core as jcore
+
+_ELT_FLOPS = {
+    "exp": 1, "tanh": 1, "log": 1, "logistic": 1, "erf": 1, "rsqrt": 1,
+    "sqrt": 1, "sin": 1, "cos": 1, "pow": 1, "integer_pow": 1, "div": 1,
+}
+_FREE = {
+    "broadcast_in_dim", "reshape", "squeeze", "transpose", "convert_element_type",
+    "bitcast_convert_type", "slice", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "pad", "rev", "iota", "gather", "scatter", "scatter-add",
+    "copy", "stop_gradient", "select_n", "and", "or", "not", "xor",
+}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    batch = int(np.prod([lhs.shape[i] for i in lb])) if lb else 1
+    contract = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    m = _size(lhs) // max(batch * contract, 1)
+    n = _size(rhs) // max(batch * contract, 1)
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    return 2.0 * _size(out) * max(_size(rhs) // max(rhs.shape[-1], 1), 1)
+
+
+def jaxpr_cost(jaxpr) -> Dict[str, float]:
+    """Returns {'flops', 'bytes'} for a (closed) jaxpr, trip-count-exact."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    flops = 0.0
+    nbytes = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        sub = None
+        mult = 1.0
+        if prim == "scan":
+            sub = eqn.params["jaxpr"]
+            mult = float(eqn.params["length"])
+        elif prim == "while":
+            sub = eqn.params["body_jaxpr"]     # trip count unknown: count once
+        elif prim == "cond":
+            costs = [jaxpr_cost(b) for b in eqn.params["branches"]]
+            flops += max(c["flops"] for c in costs)
+            nbytes += max(c["bytes"] for c in costs)
+            continue
+        elif "jaxpr" in eqn.params:            # pjit, remat/checkpoint, ...
+            sub = eqn.params["jaxpr"]
+        elif "call_jaxpr" in eqn.params:       # custom_jvp/vjp, shard_map
+            sub = eqn.params["call_jaxpr"]
+        if sub is not None:
+            c = jaxpr_cost(sub)
+            flops += mult * c["flops"]
+            nbytes += mult * c["bytes"]
+            continue
+
+        out_b = sum(_bytes(v.aval) for v in eqn.outvars)
+        in_b = sum(_bytes(v.aval) for v in eqn.invars
+                   if not isinstance(v, jcore.Literal))
+        if prim == "dot_general":
+            flops += _dot_flops(eqn)
+            nbytes += in_b + out_b              # fusion boundary: count both
+        elif prim == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+            nbytes += in_b + out_b
+        elif prim in _FREE:
+            nbytes += out_b                     # move-only
+        else:
+            flops += _size(eqn.outvars[0].aval) * _ELT_FLOPS.get(prim, 1)
+            # fusion-aware approximation: elementwise chains fuse on TPU, so
+            # each intermediate crosses HBM once — count outputs only.
+            nbytes += out_b
+    return {"flops": flops, "bytes": nbytes}
+
+
+def cost_of_fn(fn, *arg_specs) -> Dict[str, float]:
+    jaxpr = jax.make_jaxpr(fn)(*arg_specs)
+    return jaxpr_cost(jaxpr)

@@ -1,0 +1,238 @@
+"""Roofline term extraction from a compiled dry-run artifact.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` supplies HLO FLOPs and bytes (per device — the SPMD
+partitioner emits the per-partition module).  Collective bytes are NOT in
+cost_analysis, so we parse the compiled HLO text and sum result sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with ring-algorithm wire factors:
+
+    all-reduce      2·(n-1)/n ≈ 2  × result bytes
+    all-gather        (n-1)/n ≈ 1  × result bytes
+    reduce-scatter    (n-1)   ≈ n-1 × result bytes (result is the scattered shard)
+    all-to-all        (n-1)/n ≈ 1  × result bytes
+    collective-permute            1 × result bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes / s / chip
+ICI_BW = 50e9            # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_FACTORS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def collective_stats(hlo_text: str, loop_mult: float = 1.0) -> Dict:
+    """Per-device wire bytes by collective kind, + op counts.
+
+    ``loop_mult``: collectives inside non-entry computations (while-loop
+    bodies — i.e. inside the layer scan) are multiplied by this factor, since
+    the per-device HLO contains the loop body once but it executes
+    ``n_layers`` times.  Fusion computations never contain collectives, so
+    the attribution is safe.
+    """
+    out = {"wire_bytes": 0.0, "by_kind": {}, "count": 0,
+           "entry_bytes": 0.0, "loop_bytes_once": 0.0}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc:
+            in_entry = bool(mc.group(1))
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:     # count start, not done
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        g = _GROUPS_RE.search(line)
+        gsize = len(g.group(1).split(",")) if g else 2
+        if kind == "reduce-scatter":
+            wire = nbytes * max(gsize - 1, 1)
+        else:
+            wire = nbytes * _FACTORS[kind]
+        if in_entry:
+            out["entry_bytes"] += wire
+            out["wire_bytes"] += wire
+        else:
+            out["loop_bytes_once"] += wire
+            out["wire_bytes"] += wire * loop_mult
+        k = out["by_kind"].setdefault(kind, {"bytes": 0.0, "n": 0})
+        k["bytes"] += wire if in_entry else wire * loop_mult
+        k["n"] += 1
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    hbm_bytes: float          # per device
+    wire_bytes: float         # per device
+    peak_memory: int          # per device
+    model_flops: float = 0.0  # analytic useful flops per device
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def bound_time(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """MODEL_FLOPS-time / bound-time: how close the cell runs to the
+        compute roofline if the dominant term were the wall clock."""
+        if self.bound_time == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_time
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes, "peak_memory": self.peak_memory,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, model_flops_per_device: float = 0.0,
+                  loop_mult: float = 1.0,
+                  jaxpr_costs: Optional[Dict] = None,
+                  n_devices: int = 1) -> Roofline:
+    """jaxpr_costs (global, trip-count-exact — see jaxpr_cost.py) override the
+    scan-undercounted XLA numbers when provided."""
+    ca = compiled.cost_analysis()
+    ma = compiled.memory_analysis()
+    cs = collective_stats(compiled.as_text(), loop_mult)
+    if jaxpr_costs is not None:
+        flops = jaxpr_costs["flops"] / n_devices
+        hbm = jaxpr_costs["bytes"] / n_devices
+    else:
+        flops = float(ca.get("flops", 0.0))
+        hbm = float(ca.get("bytes accessed", 0.0))
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        wire_bytes=float(cs["wire_bytes"]),
+        peak_memory=int(ma.peak_memory_in_bytes),
+        model_flops=model_flops_per_device,
+    )
+
+
+# ------------------------------------------------ analytic MODEL_FLOPS per cell
+
+def model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode) + attention terms.
+
+    N counts ACTIVE non-embedding params (MoE: shared + top_k routed).
+    Local-attention layers contribute min(seq, window) context.
+    """
+    d, hd = cfg.d_model, cfg.head_dim
+    # per-layer active param count
+    attn = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+    if cfg.family == "ssm":
+        attn = 5 * d * d  # rwkv r/k/v/g/out projections
+    n_layers = cfg.n_layers
+    per_layer = []
+    for i in range(n_layers):
+        if cfg.is_moe and i >= cfg.first_dense:
+            f = cfg.d_expert or cfg.d_ff
+            nmlp = (3 if cfg.mlp_gated else 2) * d * f * (
+                cfg.top_k + cfg.n_shared_experts)
+        elif cfg.family == "ssm":
+            nmlp = 2 * d * cfg.d_ff + d * d  # rwkv channel-mix k/v + r gate
+        else:
+            nmlp = (3 if cfg.mlp_gated else 2) * d * cfg.d_ff
+        extra = 0
+        if cfg.family == "hybrid":
+            di = d * cfg.ssm_expand
+            extra = 2 * d * di + di * d  # in/out proj dominate
+        if cfg.family == "encdec":
+            extra = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d  # cross
+        per_layer.append(attn + nmlp + extra)
+    n_active = sum(per_layer) + 2 * cfg.vocab_size * d * 0  # embeddings excluded
+    unembed = cfg.vocab_size * d
+
+    def attn_ctx(s):
+        tot = 0
+        for i in range(n_layers):
+            w = cfg.local_window if cfg.layer_is_local(i) else 0
+            ctx = min(s, w) if w else s
+            tot += ctx
+        return tot / n_layers  # average context per layer
+
+    hq = cfg.n_heads * hd
+    if kind == "train":
+        toks = batch * seq
+        flops = 6 * (n_active + unembed) * toks
+        if cfg.family != "ssm":
+            flops += 6 * n_layers * batch * seq * attn_ctx(seq) * hq * 0.5 * 2
+        return flops
+    if kind == "prefill":
+        toks = batch * seq
+        flops = 2 * (n_active + unembed) * toks
+        if cfg.family != "ssm":
+            flops += 2 * n_layers * batch * seq * attn_ctx(seq) * hq * 0.5 * 2
+        return flops
+    # decode: one token against a seq-long cache
+    flops = 2 * (n_active + unembed) * batch
+    if cfg.family != "ssm":
+        flops += 4 * n_layers * batch * attn_ctx(seq) * hq
+    return flops

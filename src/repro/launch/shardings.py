@@ -1,0 +1,150 @@
+"""Sharding-spec builders for the dry-run and launchers (DESIGN.md §5)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import param_partition_specs
+from ..models.config import ArchConfig
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def drop_indivisible(specs, shapes, mesh: Mesh):
+    """jit in_shardings require exact divisibility (unlike constraints, which
+    GSPMD pads).  Drop mesh axes from dims whose size doesn't divide — e.g.
+    hymba's vocab 32001 can't shard 16-way; the embedding then replicates over
+    model and FSDP picks the d_model dim instead."""
+
+    def one(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, ax in enumerate(dims):
+            if ax is None:
+                continue
+            if leaf.shape[i] % _axis_size(mesh, ax) != 0:
+                dims[i] = None
+        return P(*dims)
+
+    return jax.tree.map(one, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_extend(specs, shapes, mesh: Mesh, axes=None):
+    """Add a data-parallel shard dim to each leaf spec (ZeRO/FSDP-style):
+    pick the largest dim that is unsharded and divisible by the dp size."""
+    axes = axes or _dp_axes(mesh)
+    dp = _axis_size(mesh, axes)
+
+    def one(spec, leaf):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        best, best_size = None, 0
+        for i, (d, s) in enumerate(zip(dims, leaf.shape)):
+            if d is None and s % dp == 0 and s > best_size:
+                best, best_size = i, s
+        if best is None or best_size < dp:
+            return P(*dims)
+        dims[best] = axes if len(axes) > 1 else axes[0]
+        return P(*dims)
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(state_shape, mesh: Mesh, fsdp: bool = True):
+    """TP (by param name) + optional FSDP extension, as NamedShardings."""
+    specs = param_partition_specs(state_shape, mesh)
+    specs = drop_indivisible(specs, state_shape, mesh)
+    if fsdp:
+        specs = fsdp_extend(specs, state_shape, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def params_shardings(params_shape, mesh: Mesh, fsdp: bool = False):
+    return state_shardings(params_shape, mesh, fsdp=fsdp)
+
+
+def batch_shardings(batch_spec: Dict, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def one(name, leaf):
+        if name == "positions":            # (3, B, S)
+            return NamedSharding(mesh, P(None, dp_ax, None))
+        if leaf.ndim == 2:                  # tokens/labels (B, S)
+            return NamedSharding(mesh, P(dp_ax, None))
+        if leaf.ndim == 3:                  # embeds (B, S, D)
+            return NamedSharding(mesh, P(dp_ax, None, None))
+        return NamedSharding(mesh, P())
+
+    return {k: one(k, v) for k, v in batch_spec.items()}
+
+
+def cache_shardings(caches_shape, cfg: ArchConfig, mesh: Mesh,
+                    long_ctx: bool = False):
+    """Decode-cache shardings. Leaves are layer-stacked: (L, B, S, H, ...) for
+    KV segments, (L, B, ...) for SSM/RWKV states, (L,) for lengths.
+
+    Default: batch over (pod, data), kv-heads over model when divisible
+    (KV replication otherwise).  long_ctx (batch=1): context parallelism —
+    the sequence dim shards over (pod, data)."""
+    dp = _dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        dims = [None] * leaf.ndim
+        is_kv_seg = any(name.startswith(p) for p in
+                        ("qk_", "qv_", "win_", "sink_", "x_qk", "x_qv",
+                         "x_win", "x_sink", "k", "v"))
+        is_packed = name.startswith(("qk_", "qv_", "x_qk", "x_qv"))
+        if is_kv_seg and leaf.ndim >= 4:
+            # (L, B, S, H, ...)
+            if long_ctx:
+                if is_packed:  # context parallelism over the packed region
+                    dims[2] = dp_ax
+            else:
+                dims[1] = dp_ax
+            if leaf.shape[3] % tp == 0 and leaf.shape[3] >= tp:
+                dims[3] = "model"
+        elif leaf.ndim >= 2:
+            # state tensors (L, B, ...): batch over dp, widest dim over model
+            if not long_ctx and leaf.shape[1] % _axis_size(mesh, dp_ax) == 0:
+                dims[1] = dp_ax
+            for i in range(leaf.ndim - 1, 1, -1):
+                if leaf.shape[i] % tp == 0 and leaf.shape[i] >= tp:
+                    dims[i] = "model"
+                    break
+        # jit in_shardings require exact divisibility
+        for i, ax in enumerate(dims):
+            if ax is not None and leaf.shape[i] % _axis_size(mesh, ax) != 0:
+                dims[i] = None
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def token_sharding(token_spec, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dims = [dp_ax] + [None] * (token_spec.ndim - 1)
+    if token_spec.shape[0] == 1:  # long-context batch=1: replicate
+        dims[0] = None
+    return NamedSharding(mesh, P(*dims))

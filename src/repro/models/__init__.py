@@ -1,0 +1,7 @@
+"""Model substrate: every assigned architecture family, in pure JAX."""
+from .config import ArchConfig
+from .transformer import (init_params, forward_train, prefill_model,
+                          decode_step, collect_kv, count_params)
+
+__all__ = ["ArchConfig", "init_params", "forward_train", "prefill_model",
+           "decode_step", "collect_kv", "count_params"]

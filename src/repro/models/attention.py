@@ -1,0 +1,284 @@
+"""Attention: GQA/MHA/MQA, local+global bands, softcaps, SKVQ-cache decode.
+
+Two compute paths:
+  * ``full_attention`` — training/prefill (full precision, per the paper's
+    prefill phase: attention runs BEFORE quantization).
+  * ``decode_attention`` — one query token against the SKVQ cache.  This is
+    the reference (pure-jnp) path; the Pallas kernel in
+    ``repro.kernels.decode_attn`` consumes the packed segments directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import softcap
+from ..core.policy import QuantPolicy
+from ..core import kv_cache as kvc
+from ..distributed.sharding import logical
+
+_NEG = -1e30
+
+
+def _scale(cfg: ArchConfig) -> float:
+    return (cfg.query_scale if cfg.query_scale > 0
+            else cfg.head_dim ** -0.5)
+
+
+def _band_mask(pos_q, pos_k, window_eff, bidirectional: bool = False):
+    """(..., Sq, Sk) boolean mask. window_eff: scalar (traced ok); 0 = full."""
+    d = pos_q[..., :, None] - pos_k[..., None, :]
+    if bidirectional:
+        return jnp.ones(d.shape, bool)
+    causal = d >= 0
+    w = jnp.where(window_eff > 0, window_eff, jnp.int32(2 ** 30))
+    return causal & (d < w)
+
+
+Q_CHUNK = 1024  # query-chunked ("flash-lite") attention above this seq length
+
+
+def _attn_block(qg, k, v, pos_q, pos_k, w, cfg, bidirectional):
+    """qg: (B,Sq,Hkv,G,D) chunk; returns (B,Sq,Hkv,G,D) fp32."""
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32) * _scale(cfg),
+                   k.astype(jnp.float32))
+    s = softcap(s, cfg.attn_softcap)
+    mask = _band_mask(pos_q, pos_k, w, bidirectional)
+    s = jnp.where(mask[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+
+
+def full_attention(q, k, v, cfg: ArchConfig, *, pos_q=None, pos_k=None,
+                   window: Optional[jnp.ndarray] = None,
+                   bidirectional: bool = False, q_chunk: int = Q_CHUNK):
+    """q: (B,Sq,Hq,D), k/v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D).
+
+    ``window`` is a traced scalar: 0 => full attention, >0 => local band
+    (lets gemma-style local/global layers share one scanned computation).
+    Long sequences are processed in query chunks so the S×S score tensor
+    never materializes (O(chunk·S) transients; scan is differentiable).
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if pos_q is None:
+        pos_q = jnp.arange(sq, dtype=jnp.int32)
+    if pos_k is None:
+        pos_k = jnp.arange(sk, dtype=jnp.int32)
+    w = jnp.int32(0) if window is None else window
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    if q_chunk and sq > q_chunk and sq % q_chunk == 0:
+        nc = sq // q_chunk
+        qc = qg.reshape(b, nc, q_chunk, hkv, g, d)
+        pc = pos_q.reshape(nc, q_chunk)
+
+        def step(_, xs):
+            qi, pi = xs
+            return None, _attn_block(qi, k, v, pi, pos_k, w, cfg, bidirectional)
+
+        _, o = jax.lax.scan(step, None, (jnp.swapaxes(qc, 0, 1), pc))
+        # o: (nc, B, q_chunk, hkv, g, d) -> (B, sq, hkv, g, d)
+        o = jnp.swapaxes(o, 0, 1).reshape(b, sq, hkv, g, d)
+    else:
+        o = _attn_block(qg, k, v, pos_q, pos_k, w, cfg, bidirectional)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_attention(q, keys, values, pos_k, valid, t_now, cfg: ArchConfig,
+                     window: Optional[jnp.ndarray] = None):
+    """One-token attention over gathered cache segments.
+
+    q: (B,1,Hq,D); keys/values: (B,T,Hkv,D); pos_k/valid: (T,).
+    t_now: scalar absolute position of the query token.
+    """
+    b, _, hq, d = q.shape
+    hkv = keys.shape[2]
+    g = hq // hkv
+    w = jnp.int32(0) if window is None else window
+    qg = q.reshape(b, 1, hkv, g, d)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32) * _scale(cfg),
+                   keys.astype(jnp.float32))  # (B,Hkv,G,1,T)
+    s = softcap(s, cfg.attn_softcap)
+    dlt = t_now - pos_k
+    weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+    ok = valid & (dlt >= 0) & (dlt < weff)
+    s = jnp.where(ok[None, None, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, values.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def _merge_partials(a, b):
+    """Online-softmax merge of two (num, m, l) partials."""
+    num_a, m_a, l_a = a
+    num_b, m_b, l_b = b
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m)
+    wb = jnp.exp(m_b - m)
+    return (num_a * wa[..., None] + num_b * wb[..., None],
+            m, l_a * wa + l_b * wb)
+
+
+def _segment_partial(qg, keys, values, pos, ok, scale, cfg):
+    """Partial attention over one segment. qg: (B,Hkv,G,D); keys (B,T,Hkv,D)."""
+    k = jnp.swapaxes(keys, 1, 2).astype(jnp.float32)
+    v = jnp.swapaxes(values, 1, 2).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, k)
+    s = softcap(s, cfg.attn_softcap)
+    s = jnp.where(ok[None, None, None, :], s, _NEG)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v), m, p.sum(axis=-1)
+
+
+def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
+                          window: Optional[jnp.ndarray] = None,
+                          dtype=jnp.bfloat16, chunk: int = 0,
+                          local_slice: int = 0, packed_override=None,
+                          extra_kv=None, q_pos=None):
+    """Reference decode over the SKVQ cache (dequantize -> attend).
+
+    Perf levers (§Perf iterations; default off to keep the paper-faithful
+    baseline intact):
+      * ``chunk``: process the packed region in ``chunk``-token tiles under a
+        scan with online-softmax merging — the dequantized cache never exists
+        as one tensor (peak-memory term).
+      * ``local_slice``: for local-attention layers with a STATIC window,
+        slice the packed region to the last ``local_slice`` tokens before
+        dequantizing (gemma-style 5:1 local stacks touch 1/512th of a 500k
+        cache).  Requires static knowledge of is_local (unrolled decode).
+    """
+    w, ns = policy.window, policy.n_sink
+    # default (append-first) path: the query token is already in the cache;
+    # the pre-append path passes it via extra_kv and sets q_pos explicitly.
+    t_now = cache["length"] - 1 if q_pos is None else q_pos
+    b, _, hq, d = q.shape
+    scale = _scale(cfg)
+    weff_t = (jnp.int32(0) if window is None else window)
+    weff = jnp.where(weff_t > 0, weff_t, jnp.int32(2 ** 30))
+
+    if policy.is_fp16:  # uncompressed-cache baseline
+        hkv = cache["k"].shape[2]
+        qg = q.reshape(b, hkv, hq // hkv, d)
+        pos = jnp.arange(cache["k"].shape[1])
+        ok = (pos <= t_now) & (t_now - pos < weff)
+        kf = logical(cache["k"], "batch", "kv_seq", "kv_heads", None)
+        vf = logical(cache["v"], "batch", "kv_seq", "kv_heads", None)
+        num, m, l = _segment_partial(qg, kf.astype(dtype), vf.astype(dtype),
+                                     pos, ok, scale, cfg)
+        out = num / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+    hkv = (cache.get("win_k") if cache.get("win_k") is not None
+           else cache["qk_codes_hi"]).shape[2]
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    parts = []
+
+    s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
+    if s_q > 0:
+        # count of tokens actually WRITTEN to the packed region (pre-append
+        # path: the current token is not in the buffers yet)
+        qc = jnp.maximum(cache["length"] - ns - w, 0)
+        if packed_override is not None:
+            # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
+            k_qt, v_qt, j = packed_override
+        else:
+            k_qt = {kk[3:]: vv for kk, vv in cache.items()
+                    if kk.startswith("qk_")}
+            v_qt = {kk[3:]: vv for kk, vv in cache.items()
+                    if kk.startswith("qv_")}
+            if local_slice and s_q > local_slice:
+                start = jnp.clip(qc - local_slice, 0, s_q - local_slice)
+                k_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
+                                                         local_slice, 1)
+                        for kk, vv in k_qt.items()}
+                v_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
+                                                         local_slice, 1)
+                        for kk, vv in v_qt.items()}
+                j = start + jnp.arange(local_slice)
+            else:
+                j = jnp.arange(k_qt["codes_hi"].shape[1])
+        pos_q = ns + j
+        ok_q = (j < qc) & (t_now - pos_q < weff) & (t_now - pos_q >= 0)
+        gsz = min(policy.group_size, d)
+
+        def dq(qt, bits):
+            from ..core.quant import dequantize_groups
+            return dequantize_groups(qt, d, bits, gsz, policy.fp8_meta, dtype)
+
+        sq_eff = k_qt["codes_hi"].shape[1]
+        if chunk and sq_eff > chunk and sq_eff % chunk == 0:
+            nc = sq_eff // chunk
+
+            def body(carry, xs):
+                kq_c, vq_c, j_c, ok_c = xs
+                part = _segment_partial(
+                    qg, dq(kq_c, policy.bits_k), dq(vq_c, policy.bits_v),
+                    j_c, ok_c, scale, cfg)
+                return _merge_partials(carry, part), None
+
+            resh = lambda t: jnp.swapaxes(
+                t.reshape(t.shape[0], nc, chunk, *t.shape[2:]), 0, 1)
+            xs = (jax.tree.map(resh, k_qt), jax.tree.map(resh, v_qt),
+                  j.reshape(nc, chunk), ok_q.reshape(nc, chunk))
+            init = (jnp.zeros((b, hkv, hq // hkv, d), jnp.float32),
+                    jnp.full((b, hkv, hq // hkv), _NEG, jnp.float32),
+                    jnp.zeros((b, hkv, hq // hkv), jnp.float32))
+            part, _ = jax.lax.scan(body, init, xs)
+            parts.append(part)
+        else:
+            keys = logical(dq(k_qt, policy.bits_k),
+                           "batch", "kv_seq", "kv_heads", None)
+            values = logical(dq(v_qt, policy.bits_v),
+                             "batch", "kv_seq", "kv_heads", None)
+            parts.append(_segment_partial(qg, keys, values, pos_q, ok_q,
+                                          scale, cfg))
+
+    # fp segments: sinks + window ring (+ current token, already in the ring
+    # on the append-first path, or passed via extra_kv on the pre-append path)
+    stored_last = cache["length"] - 1  # newest token actually in the buffers
+    ks, vs, pos, valid = [], [], [], []
+    if ns > 0 and "sink_k" in cache:
+        ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
+        p = jnp.arange(ns); pos.append(p); valid.append(p <= stored_last)
+    if w > 0 and "win_k" in cache:
+        ks.append(cache["win_k"]); vs.append(cache["win_v"])
+        sl = jnp.arange(w)
+        u_last = stored_last - ns
+        u_s = u_last - ((u_last - sl) % w)
+        p = u_s + ns
+        pos.append(p)
+        valid.append((u_s >= 0) & (u_s > u_last - w) & (p <= stored_last))
+    if extra_kv is not None:
+        k1, v1, p1 = extra_kv
+        ks.append(k1); vs.append(v1)
+        pos.append(jnp.asarray(p1).reshape(1))
+        valid.append(jnp.ones((1,), bool))
+    if ks:
+        kf = jnp.concatenate(ks, axis=1).astype(dtype)
+        vf = jnp.concatenate(vs, axis=1).astype(dtype)
+        pf = jnp.concatenate(pos)
+        ok = jnp.concatenate(valid) & (t_now - jnp.concatenate(pos) < weff)
+        parts.append(_segment_partial(qg, kf, vf, pf, ok, scale, cfg))
+
+    num, m, l = parts[0]
+    for pt in parts[1:]:
+        num, m, l = _merge_partials((num, m, l), pt)
+    out = num / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def decode_attention_fp(q, cache, cfg: ArchConfig,
+                        window: Optional[jnp.ndarray] = None):
+    """Decode over a plain full-precision cache {k, v, length} (baseline)."""
+    t_now = cache["length"] - 1
+    pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
+    valid = pos < cache["length"]
+    k = logical(cache["k"], "batch", "kv_seq", "kv_heads", None)
+    v = logical(cache["v"], "batch", "kv_seq", "kv_heads", None)
+    return decode_attention(q, k, v, pos, valid, t_now, cfg, window)

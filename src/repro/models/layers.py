@@ -1,0 +1,100 @@
+"""Shared neural layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from ..distributed.sharding import logical
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(x, p, cfg: ArchConfig):
+    if cfg.norm == "layer":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def softcap(x, cap: float):
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype) if cap > 0 else x
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+# ------------------------------------------------------------------- rotary
+
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2) in fp32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2) — rotate-half form."""
+    if cos.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_tables(positions3: jnp.ndarray, head_dim: int, theta: float,
+                 sections: Tuple[int, ...]):
+    """Qwen2-VL M-RoPE: positions3 (3, B, S); sections are half-dim widths
+    summing to head_dim//2.  Each frequency band takes its angle from the
+    (temporal|height|width) position stream it belongs to."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions3.astype(jnp.float32)[..., None] * freq  # (3, B, S, half)
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)           # (half,)
+    pick = jax.nn.one_hot(sec_id, len(sections), dtype=jnp.float32).T  # (3, half)
+    ang = (ang * pick[:, None, None, :]).sum(axis=0)        # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# --------------------------------------------------------------------- mlp
+
+def mlp(x, p, cfg: ArchConfig):
+    a = act_fn(cfg.mlp_act)
+    if cfg.mlp_gated:
+        g = logical(x @ p["wi_gate"], "batch", "seq", "ff")
+        u = logical(x @ p["wi_up"], "batch", "seq", "ff")
+        h = a(g) * u
+    else:
+        h = a(logical(x @ p["wi_up"], "batch", "seq", "ff"))
+    return logical(h @ p["wo"], "batch", "seq", None)
+
+
+def embed(tokens, emb, scale: bool):
+    x = jnp.take(emb, tokens, axis=0)
+    if scale:
+        x = x * jnp.sqrt(jnp.float32(emb.shape[1])).astype(x.dtype)
+    return x
+
+
+def unembed(x, params, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = logical(x @ w.astype(x.dtype), "batch", "seq", "vocab")
+    return softcap(logits, cfg.logit_softcap)

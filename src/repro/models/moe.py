@@ -1,0 +1,171 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, capacity dispatch.
+
+Sort-free scatter dispatch (GShard-style capacity, Megablocks-style gather):
+tokens are scattered into a per-expert (E, C, D) buffer by cumsum position,
+experts run as one batched einsum (MXU-friendly), results gather back with
+router-probability combine weights.  With experts sharded over the ``model``
+mesh axis this is expert parallelism — GSPMD inserts the token all-to-all at
+the dispatch/combine resharding boundaries.
+
+FLOPs scale with top_k × tokens × capacity_factor, not with n_experts — the
+dry-run roofline's MODEL_FLOPS/HLO_FLOPs ratio checks this.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import act_fn
+from ..distributed.sharding import logical
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(cfg.top_k * n_tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def route(x, router_w, cfg: ArchConfig):
+    """x: (N, D) -> (weights (N,k), expert_ids (N,k), aux_loss)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, ids = jax.lax.top_k(probs, cfg.top_k)
+    weights = vals / jnp.maximum(vals.sum(axis=-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    e = cfg.n_experts
+    me = probs.mean(axis=0)                                   # mean prob mass
+    ce = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(
+        jnp.ones_like(ids.reshape(-1), jnp.float32)) / ids.size
+    aux = e * jnp.sum(me * ce)
+    return weights, ids, aux
+
+
+GROUP_TOKENS = 4096  # tokens per dispatch group (one group stays device-local)
+
+
+def moe_ffn(x, p, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.moe_dispatch == "scatter":
+        return moe_ffn_scatter(x, p, cfg)
+    return moe_ffn_grouped(x, p, cfg)
+
+
+def moe_ffn_scatter(x, p, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive global-scatter dispatch (kept as the §Perf baseline: GSPMD cannot
+    partition the token->expert scatter, so it all-gathers every token to
+    every device — measured ~10× collective blowup vs grouped dispatch)."""
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    weights, ids, aux = route(xf, p["router"], cfg)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(n, cfg)
+
+    flat_e = ids.reshape(-1)                                  # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # (N*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)               # exclusive cumsum
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)       # dump slot at end
+
+    tok_idx = jnp.repeat(jnp.arange(n), k)                    # (N*k,)
+    xin = xf[tok_idx]                                         # (N*k, D)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xin)[:-1]
+    buf = logical(buf.reshape(e, cap, d), "experts", "cap", None)
+
+    a = act_fn(cfg.mlp_act)
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["experts_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["experts_up"])
+        h = a(g) * u
+    else:
+        h = a(jnp.einsum("ecd,edf->ecf", buf, p["experts_up"]))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["experts_down"])  # (E, C, D)
+    out_e = logical(out_e, "experts", "cap", None).reshape(e * cap, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), x.dtype)], axis=0)
+
+    y_slots = out_e[slot] * (weights.reshape(-1)[:, None] * keep[:, None]).astype(x.dtype)
+    y = y_slots.reshape(n, k, d).sum(axis=1)
+
+    if cfg.n_shared_experts > 0:
+        if cfg.mlp_gated:
+            gs = xf @ p["shared_gate"]
+            us = xf @ p["shared_up"]
+            hs = a(gs) * us
+        else:
+            hs = a(xf @ p["shared_up"])
+        y = y + hs @ p["shared_down"]
+    return y.reshape(b, s, d), aux
+
+
+def moe_ffn_grouped(x, p, cfg: ArchConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out, aux_loss). p carries router/experts[/shared].
+
+    GShard/T5X-style *grouped* dispatch: tokens are split into groups that
+    shard over the data axes; dispatch/combine are one-hot einsums local to
+    each group, so the only cross-device movement is the (G, E, C, D) -> E-
+    sharded resharding — a clean all-to-all.  (The earlier global-scatter
+    formulation made GSPMD all-gather every token to every device; see
+    EXPERIMENTS.md §Perf for the before/after.)
+    """
+    b, s, d = x.shape
+    n = b * s
+    xf = x.reshape(n, d)
+    weights, ids, aux = route(xf, p["router"], cfg)
+    e, k = cfg.n_experts, cfg.top_k
+
+    gt = min(GROUP_TOKENS, n)
+    while n % gt:
+        gt //= 2
+    g = n // gt
+    cap = _capacity(gt, cfg)
+
+    xg = logical(xf.reshape(g, gt, d), "batch", None, None)
+    ids_g = ids.reshape(g, gt, k)
+    w_g = weights.reshape(g, gt, k)
+
+    # position of each (token, slot) within its expert, inside the group
+    # (int32 cumsum: exact for capacities > 256, unlike a bf16 cumsum)
+    oh_i = jax.nn.one_hot(ids_g, e, dtype=jnp.int32)           # (G, T, k, E)
+    pos = jnp.cumsum(oh_i.reshape(g, gt * k, e), axis=1).reshape(
+        g, gt, k, e) - oh_i                                    # exclusive
+    pos = jnp.einsum("gtke,gtke->gtk", pos, oh_i)              # (G, T, k)
+    keep = pos < cap
+    oh_e = oh_i.astype(x.dtype)
+    oh_c = jax.nn.one_hot(pos, cap, dtype=x.dtype) * \
+        keep[..., None].astype(x.dtype)                        # (G, T, k, C)
+
+    # dispatch mask (G, T, E, C) and combine weights
+    disp = jnp.einsum("gtke,gtkc->gtec", oh_e, oh_c)
+    comb = jnp.einsum("gtk,gtke,gtkc->gtec", w_g.astype(x.dtype), oh_e, oh_c)
+
+    # shard groups over data AND experts over model simultaneously: each
+    # device computes the dispatch restricted to its experts locally (no
+    # all-to-all / gather of the (G,E,C,D) tensor at all); the combine below
+    # ends in a standard TP partial-sum all-reduce of (G,T,D).
+    xin = jnp.einsum("gtec,gtd->gecd", disp, xg)               # (G,E,C,D)
+    xin = logical(xin, "batch", "experts", None, None)
+
+    a = act_fn(cfg.mlp_act)
+    if cfg.mlp_gated:
+        gg = jnp.einsum("gecd,edf->gecf", xin, p["experts_gate"])
+        uu = jnp.einsum("gecd,edf->gecf", xin, p["experts_up"])
+        h = a(gg) * uu
+    else:
+        h = a(jnp.einsum("gecd,edf->gecf", xin, p["experts_up"]))
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["experts_down"])
+    out_e = logical(out_e, "batch", "experts", None, None)
+
+    y = jnp.einsum("gtec,gecd->gtd", comb, out_e)
+    y = logical(y, "batch", None, None).reshape(n, d)
+
+    if cfg.n_shared_experts > 0:
+        if cfg.mlp_gated:
+            gsh = xf @ p["shared_gate"]
+            ush = xf @ p["shared_up"]
+            hs = a(gsh) * ush
+        else:
+            hs = a(xf @ p["shared_up"])
+        y = y + hs @ p["shared_down"]
+    return y.reshape(b, s, d), aux

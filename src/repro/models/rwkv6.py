@@ -1,0 +1,214 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Train/prefill uses the chunked-parallel form (GLA-style): within a chunk the
+decayed interactions are a masked matmul with cumulative log-decays; across
+chunks a compact (H, Dk, Dv) state is scanned.  Decode is the O(1) recurrence
+
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_t^T),   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Numerical note: per-step log-decay is clamped to [-5, 0] so the within-chunk
+``exp(±Σ log w)`` factors stay inside fp32 range at chunk 16 (the clamp is the
+TPU-stability analogue of fla's secondary normalization; tests assert the
+chunked path matches the naive-scan oracle bit-for-bit-ish).
+
+SKVQ note (DESIGN.md §Arch-applicability): RWKV6 has NO KV cache — state is
+O(1) in sequence length — so the paper's technique is inapplicable; this arch
+runs without it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from ..distributed.sharding import logical
+
+CHUNK = 16
+_LOGW_MIN = -5.0
+
+
+def _shift(x):
+    """token shift: x_{t-1} (zeros at t=0). x: (B,S,D)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _ddlerp(x, sx, mu, lora_a, lora_b):
+    """RWKV6 data-dependent lerp for one stream."""
+    xxx = x + sx * mu[0]
+    off = jnp.tanh(xxx @ lora_a) @ lora_b
+    return x + sx * (mu[1] + off)
+
+
+def _project(x, x_prev, p, cfg: ArchConfig):
+    """Shared by full-seq and decode paths: produce r,k,v,g,logw per token."""
+    sx = x_prev - x
+    r = _ddlerp(x, sx, p["mu_r"], p["lora_r_a"], p["lora_r_b"]) @ p["w_r"]
+    k = _ddlerp(x, sx, p["mu_k"], p["lora_k_a"], p["lora_k_b"]) @ p["w_k"]
+    v = _ddlerp(x, sx, p["mu_v"], p["lora_v_a"], p["lora_v_b"]) @ p["w_v"]
+    g = jax.nn.silu(_ddlerp(x, sx, p["mu_g"], p["lora_g_a"], p["lora_g_b"]) @ p["w_g"])
+    wmix = _ddlerp(x, sx, p["mu_w"], p["lora_w_a"], p["lora_w_b"])
+    logw = -jnp.exp(jnp.clip(p["w0"] + jnp.tanh(wmix @ p["lora_decay_a"]) @ p["lora_decay_b"],
+                             -8.0, 1.6))
+    logw = jnp.clip(logw, _LOGW_MIN, -1e-4)  # fp32-safe chunked form
+    return r, k, v, g, logw
+
+
+def _heads(x, h, hd):
+    return x.reshape(*x.shape[:-1], h, hd)
+
+
+def wkv_chunked(r, k, v, logw, u, s0):
+    """Chunk-parallel WKV. r/k/v/logw: (B,S,H,hd); u: (H,hd); s0: (B,H,hd,hd).
+
+    Returns y (B,S,H,hd) and final state (B,H,hd,hd). S must divide by CHUNK.
+    """
+    b, s, h, d = r.shape
+    nc = s // CHUNK
+    rc, kc, vc, wc = (x.reshape(b, nc, CHUNK, h, d).transpose(0, 3, 1, 2, 4)
+                      for x in (r, k, v, logw))  # (B,H,NC,C,hd)
+    linc = jnp.cumsum(wc, axis=3)                 # inclusive cumulative log decay
+    lexc = linc - wc                              # exclusive
+    ltot = linc[..., -1:, :]                      # (B,H,NC,1,hd)
+
+    q_in = rc * jnp.exp(lexc)                     # queries see decay to t-1
+    k_out = kc * jnp.exp(-linc)                   # keys un-decayed to chunk start
+    k_fin = kc * jnp.exp(ltot - linc)             # keys decayed to chunk end
+
+    # intra-chunk (strictly lower-triangular) + u-bonus diagonal
+    att = jnp.einsum("bhntd,bhnsd->bhnts", q_in.astype(jnp.float32),
+                     k_out.astype(jnp.float32))
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), k=-1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    bonus = jnp.einsum("bhntd,bhntd->bhnt", rc.astype(jnp.float32),
+                       (u[None, :, None, None, :] * kc).astype(jnp.float32))
+    y_intra = jnp.einsum("bhnts,bhnsd->bhntd", att, vc.astype(jnp.float32))
+    y_intra = y_intra + bonus[..., None] * vc.astype(jnp.float32)
+
+    # inter-chunk: scan compact states across chunks
+    def step(s_prev, xs):
+        qi, kf, vi, lt = xs                       # (B,H,C,hd)/(B,H,1,hd)
+        y = jnp.einsum("bhtd,bhde->bhte", qi, s_prev)
+        s_new = s_prev * jnp.exp(lt[:, :, 0])[..., None] + \
+            jnp.einsum("bhsd,bhse->bhde", kf, vi)
+        return s_new, y
+
+    xs = (q_in.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+          k_fin.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+          vc.transpose(2, 0, 1, 3, 4).astype(jnp.float32),
+          ltot.transpose(2, 0, 1, 3, 4).astype(jnp.float32))
+    s_fin, y_inter = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    y_inter = y_inter.transpose(1, 2, 0, 3, 4)    # (B,H,NC,C,hd)
+
+    y = (y_intra + y_inter).transpose(0, 2, 3, 1, 4).reshape(b, s, h, d)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv_naive(r, k, v, logw, u, s0):
+    """Oracle: step-by-step recurrence (tests compare chunked against this)."""
+    b, s, h, d = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                       # (B,H,hd)
+        out = jnp.einsum("bhd,bhde->bhe", rt,
+                         state + u[None, :, :, None] * kt[..., None] * vt[..., None, :])
+        state = state * jnp.exp(wt)[..., None] + kt[..., None] * vt[..., None, :]
+        return state, out
+
+    xs = tuple(x.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for x in (r, k, v, logw))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_fin
+
+
+def group_norm_heads(y, w, b, eps=1e-5):
+    """(B,S,H,hd) group-norm per head."""
+    y32 = y.astype(jnp.float32)
+    mu = y32.mean(axis=-1, keepdims=True)
+    var = y32.var(axis=-1, keepdims=True)
+    yn = (y32 - mu) * jax.lax.rsqrt(var + eps)
+    return (yn * w + b).astype(y.dtype)
+
+
+def time_mix(x, p, cfg: ArchConfig, state=None):
+    """Full-sequence time-mix. x: (B,S,D). Returns (out, final_wkv_state)."""
+    b, s, d = x.shape
+    h = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    r, k, v, g, logw = _project(x, _shift(x), p, cfg)
+    r, k, v, logw = (_heads(t, h, hd) for t in (r, k, v, logw))
+    s0 = jnp.zeros((b, h, hd, hd)) if state is None else state
+    pad = (-s) % CHUNK
+    if pad:
+        r, k, v, logw = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                         for t in (r, k, v, logw))
+        logw = logw.at[:, s:].set(-1e-4)
+    y, s_fin = wkv_chunked(r, k, v, logw, p["u"].reshape(h, hd), s0)
+    y = y[:, :s]
+    y = group_norm_heads(y, p["gn_w"].reshape(h, hd), p["gn_b"].reshape(h, hd))
+    y = (y.reshape(b, s, d) * g) @ p["w_out"]
+    return logical(y, "batch", "seq", None), s_fin
+
+
+def time_mix_decode(x1, p, cfg: ArchConfig, state: Dict[str, jnp.ndarray]):
+    """x1: (B,1,D); state: {'wkv': (B,H,hd,hd), 'x_prev': (B,1,D)}."""
+    b, _, d = x1.shape
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    r, k, v, g, logw = _project(x1, state["x_prev"], p, cfg)
+    r, k, v, logw = (_heads(t, h, hd)[:, 0] for t in (r, k, v, logw))
+    s_prev = state["wkv"]
+    u = p["u"].reshape(h, hd)
+    out = jnp.einsum("bhd,bhde->bhe", r.astype(jnp.float32),
+                     s_prev + u[None, :, :, None] * k[..., None].astype(jnp.float32)
+                     * v[..., None, :].astype(jnp.float32))
+    s_new = s_prev * jnp.exp(logw.astype(jnp.float32))[..., None] + \
+        k[..., None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32)
+    y = out[:, None].astype(x1.dtype)             # (B,1,H,hd)
+    y = group_norm_heads(y, p["gn_w"].reshape(h, hd), p["gn_b"].reshape(h, hd))
+    y = (y.reshape(b, 1, d) * g) @ p["w_out"]
+    return y, {"wkv": s_new, "x_prev": x1}
+
+
+def channel_mix(x, p, x_prev=None):
+    """RWKV6 FFN (squared-relu with receptance gate)."""
+    sx = (_shift(x) if x_prev is None else x_prev) - x
+    xk = x + sx * p["mu_ffn_k"]
+    xr = x + sx * p["mu_ffn_r"]
+    k = jnp.square(jax.nn.relu(logical(xk @ p["ffn_k"], "batch", "seq", "ff")))
+    return jax.nn.sigmoid(xr @ p["ffn_r"]) * logical(k @ p["ffn_v"], "batch", "seq", None)
+
+
+def init_rwkv_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    rank = cfg.rwkv_lora_rank
+    ks = jax.random.split(key, 24)
+    s = d ** -0.5
+
+    def lin(k, din, dout, scale=None):
+        return (jax.random.normal(k, (din, dout)) * (scale or din ** -0.5)).astype(dtype)
+
+    p = {"w_r": lin(ks[0], d, d), "w_k": lin(ks[1], d, d), "w_v": lin(ks[2], d, d),
+         "w_g": lin(ks[3], d, d), "w_out": lin(ks[4], d, d),
+         "u": (jax.random.normal(ks[5], (d,)) * 0.1).astype(dtype),
+         "w0": jnp.full((d,), -1.0, dtype),
+         "lora_decay_a": lin(ks[6], d, rank * 2), "lora_decay_b": lin(ks[7], rank * 2, d, 0.01),
+         "gn_w": jnp.ones((d,), dtype), "gn_b": jnp.zeros((d,), dtype),
+         "ffn_k": lin(ks[8], d, cfg.d_ff), "ffn_v": lin(ks[9], cfg.d_ff, d),
+         "ffn_r": lin(ks[10], d, d),
+         "mu_ffn_k": (jax.random.uniform(ks[11], (d,))).astype(dtype),
+         "mu_ffn_r": (jax.random.uniform(ks[12], (d,))).astype(dtype)}
+    for i, nm in enumerate(("r", "k", "v", "g", "w")):
+        p[f"mu_{nm}"] = (jax.random.uniform(ks[13 + i], (2, d))).astype(dtype)
+        p[f"lora_{nm}_a"] = lin(ks[18 + i if 18 + i < 24 else 0], d, rank)
+        p[f"lora_{nm}_b"] = lin(ks[(19 + i) % 24], rank, d, 0.01)
+    return p
+
+
+def init_rwkv_state(batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    h, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "x_prev": jnp.zeros((batch, 1, d), dtype),
+            "x_prev_ffn": jnp.zeros((batch, 1, d), dtype)}

@@ -1,0 +1,111 @@
+"""Selective SSM (Mamba-style) head — the parallel path in Hymba blocks.
+
+Parallel-in-time via ``jax.lax.associative_scan`` on the diagonal recurrence
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t,      y_t = C_t · h_t + D*x_t
+(TPU-friendly: the scan composes elementwise (a, b) pairs, no sequential loop).
+Decode carries (conv_state, h) in the cache dict — O(1) per step, which is why
+``long_500k`` is runnable for the hybrid/SSM families.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from ..distributed.sharding import logical
+
+
+def _conv_causal(x, w):
+    """Depthwise causal conv. x: (B,S,Di), w: (K,Di)."""
+    k = w.shape[0]
+    pads = [jnp.zeros_like(x[:, :1])] * (k - 1)
+    xs = jnp.concatenate(pads + [x], axis=1)
+    out = sum(xs[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out
+
+
+def _ssm_scan(dtA, dBx):
+    """Associative scan of h_t = dtA_t * h_{t-1} + dBx_t along axis 1."""
+
+    def op(a, b):
+        return a[0] * b[0], b[0] * a[1] + b[1]
+
+    _, h = jax.lax.associative_scan(op, (dtA, dBx), axis=1)
+    return h
+
+
+def ssm_forward(x, p, cfg: ArchConfig, return_state: bool = False):
+    """x: (B,S,D) -> (B,S,D) [, decode state]. Full-sequence path."""
+    b, s, d = x.shape
+    n = cfg.ssm_state
+    xz = logical(x @ p["in_proj"], "batch", "seq", "ff")      # (B,S,2*Di)
+    xs_raw, z = jnp.split(xz, 2, axis=-1)
+    xs = jax.nn.silu(_conv_causal(xs_raw, p["conv_w"]) + p["conv_b"])
+    bc_dt = xs @ p["x_proj"]                                  # (B,S,2N+R)
+    bmat, cmat, dt_low = jnp.split(bc_dt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])  # (B,S,Di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (Di,N)
+    dtA = jnp.exp(dt.astype(jnp.float32)[..., None] * a)      # (B,S,Di,N)
+    dBx = (dt * xs).astype(jnp.float32)[..., None] * bmat.astype(jnp.float32)[..., None, :]
+    h = _ssm_scan(dtA, dBx)                                   # (B,S,Di,N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat.astype(jnp.float32))
+    y = (y + p["d_skip"] * xs.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = logical(y @ p["out_proj"], "batch", "seq", None)
+    if return_state:
+        k = cfg.ssm_conv
+        return out, {"conv": xs_raw[:, -(k - 1):], "h": h[:, -1]}
+    return out
+
+
+def ssm_decode(x1, state: Dict[str, jnp.ndarray], p, cfg: ArchConfig
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x1: (B,1,D); state: {conv: (B,K-1,Di), h: (B,Di,N)}."""
+    b, _, d = x1.shape
+    n = cfg.ssm_state
+    xz = x1 @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # (B,1,Di)
+    conv_in = jnp.concatenate([state["conv"], xs], axis=1)    # (B,K,Di)
+    k = p["conv_w"].shape[0]
+    xs = jax.nn.silu((conv_in * p["conv_w"][None]).sum(axis=1, keepdims=True)
+                     + p["conv_b"])
+    bc_dt = xs @ p["x_proj"]
+    bmat, cmat, dt_low = jnp.split(bc_dt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dtA = jnp.exp(dt.astype(jnp.float32)[:, 0, :, None] * a)  # (B,Di,N)
+    dBx = (dt * xs).astype(jnp.float32)[:, 0, :, None] * bmat.astype(jnp.float32)[:, 0, None, :]
+    h = dtA * state["h"] + dBx                                # (B,Di,N)
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)[:, 0])
+    y = (y + p["d_skip"] * xs.astype(jnp.float32)[:, 0]).astype(x1.dtype)[:, None]
+    y = y * jax.nn.silu(z)
+    new_state = {"conv": conv_in[:, 1:], "h": h}
+    return y @ p["out_proj"], new_state
+
+
+def init_ssm_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    n = cfg.ssm_state
+    di = d * cfg.ssm_expand
+    r = max(d // 16, 1)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "in_proj": (jax.random.normal(k1, (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(k3, (di, 2 * n + r)) * di ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(k4, (r, di)) * r ** -0.5).astype(dtype),
+        "dt_bias": jnp.full((di,), -2.0, dtype),  # softplus(-2) ~ small dt
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(k5, (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def init_ssm_state(batch: int, cfg: ArchConfig, dtype=jnp.float32):
+    di = cfg.d_model * cfg.ssm_expand
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+            "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,704 @@
+"""Decoder-only LM assembly for all assigned families (+ collect_kv, SKVQ serve).
+
+Design notes
+------------
+* **scan-over-layers**: per-layer params are stacked on a leading L axis and the
+  block runs under ``jax.lax.scan`` — HLO size is independent of depth (critical
+  for the 80-cell dry-run compile budget).  Heterogeneous layers (gemma local /
+  global alternation) are expressed as per-layer *flag arrays* scanned as xs, so
+  param shapes stay homogeneous.
+* **RoPE × reorder**: the channel permutation is applied at runtime to q/k/v
+  *after* RoPE on the serve path (cheap register-level gathers; see DESIGN.md §3
+  — the paper's weight fusion is only exact pre-RoPE.  ``fuse_v_permutation``
+  demonstrates the V-path fusion of Appendix 6 and is equivalence-tested).
+* **Prefill** computes attention in full precision FIRST, then quantizes all
+  but the last ``window`` tokens (paper Sec. 3.2 workflow).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from . import layers as L
+from .attention import full_attention, decode_attention_skvq, decode_attention_fp
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from . import rwkv6 as rwkv_lib
+from ..core.policy import QuantPolicy
+from ..core import kv_cache as kvc
+from ..core.quant import n_meta_groups
+from ..distributed.sharding import logical
+
+Params = Dict
+Batch = Dict[str, jnp.ndarray]
+
+
+# =============================================================== init helpers
+
+def _lin(key, din, dout, dtype, scale=None):
+    return (jax.random.normal(key, (din, dout)) * (scale or din ** -0.5)).astype(dtype)
+
+
+def _attn_params(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p = {"wq": _lin(ks[0], d, cfg.q_dim, dtype),
+         "wk": _lin(ks[1], d, cfg.kv_dim, dtype),
+         "wv": _lin(ks[2], d, cfg.kv_dim, dtype),
+         "wo_attn": _lin(ks[3], cfg.q_dim, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def _mlp_params(key, cfg: ArchConfig, dtype, d_ff=None):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {"wi_up": _lin(ks[0], d, f, dtype), "wo": _lin(ks[1], f, d, dtype)}
+    if cfg.mlp_gated:
+        p["wi_gate"] = _lin(ks[2], d, f, dtype)
+    return p
+
+
+def _moe_params(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 7)
+    d, f, e = cfg.d_model, cfg.d_expert or cfg.d_ff, cfg.n_experts
+    p = {"router": _lin(ks[0], d, e, dtype, scale=0.02),
+         "experts_up": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(dtype),
+         "experts_down": (jax.random.normal(ks[2], (e, f, d)) * f ** -0.5).astype(dtype)}
+    if cfg.mlp_gated:
+        p["experts_gate"] = (jax.random.normal(ks[3], (e, d, f)) * d ** -0.5).astype(dtype)
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared_up"] = _lin(ks[4], d, fs, dtype)
+        p["shared_down"] = _lin(ks[5], fs, d, dtype)
+        if cfg.mlp_gated:
+            p["shared_gate"] = _lin(ks[6], d, fs, dtype)
+    return p
+
+
+def _norm_params(cfg: ArchConfig, dtype):
+    p = {"w": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "layer":
+        p = {"w": jnp.ones((cfg.d_model,), dtype), "b": jnp.zeros((cfg.d_model,), dtype)}
+    return p
+
+
+def _layer_params(key, cfg: ArchConfig, dtype, is_moe_layer: bool, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": _norm_params(cfg, dtype), "norm2": _norm_params(cfg, dtype)}
+    if cfg.family == "ssm":
+        return {**p, **rwkv_lib.init_rwkv_params(ks[0], cfg, dtype)}
+    p["attn"] = _attn_params(ks[0], cfg, dtype)
+    if is_moe_layer:
+        p["moe"] = _moe_params(ks[1], cfg, dtype)
+    else:
+        d_ff = cfg.d_ff
+        p["mlp"] = _mlp_params(ks[1], cfg, dtype, d_ff)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm_params(ks[2], cfg, dtype)
+        p["norm_attn_out"] = {"w": jnp.zeros((cfg.d_model,), dtype)}
+        p["norm_ssm_out"] = {"w": jnp.zeros((cfg.d_model,), dtype)}
+    if cross:
+        p["xattn"] = _attn_params(ks[3], cfg, dtype)
+        p["norm_x"] = _norm_params(cfg, dtype)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, cfg.n_layers + cfg.n_enc_layers + 4)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": _norm_params(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _lin(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+    nf = cfg.first_dense
+    main = [
+        _layer_params(keys[2 + i], cfg, dtype,
+                      is_moe_layer=cfg.is_moe and i >= nf and (i - nf) % 1 == 0,
+                      cross=cfg.family == "encdec")
+        for i in range(nf, cfg.n_layers)
+    ]
+    params["layers"] = _stack(main)
+    if nf:
+        params["dense_layers"] = _stack(
+            [_layer_params(keys[2 + cfg.n_layers + i], cfg, dtype, is_moe_layer=False)
+             for i in range(nf)])
+    if cfg.family == "encdec":
+        enc_cfg = dataclasses.replace(cfg, family="dense")
+        params["enc_layers"] = _stack(
+            [_layer_params(keys[2 + cfg.n_layers + i], enc_cfg, dtype, False)
+             for i in range(cfg.n_enc_layers)])
+        params["enc_norm"] = _norm_params(cfg, dtype)
+    return params
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+# ============================================================ rope / flags
+
+def _rope_tables(cfg: ArchConfig, positions, batch=None):
+    """Returns (cos_g, sin_g, cos_l, sin_l); local tables may alias global."""
+    if cfg.mrope_sections:
+        cos, sin = L.mrope_tables(positions, cfg.head_dim, cfg.rope_theta,
+                                  cfg.mrope_sections)
+        return cos, sin, cos, sin
+    cos_g, sin_g = L.rope_table(positions, cfg.head_dim, cfg.rope_theta)
+    if cfg.rope_theta_local > 0:
+        cos_l, sin_l = L.rope_table(positions, cfg.head_dim, cfg.rope_theta_local)
+    else:
+        cos_l, sin_l = cos_g, sin_g
+    return cos_g, sin_g, cos_l, sin_l
+
+
+def layer_flags(cfg: ArchConfig, start: Optional[int] = None,
+                stop: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Per-layer scanned flags: local-attention window size (0 = full)."""
+    start = cfg.first_dense if start is None else start
+    stop = cfg.n_layers if stop is None else stop
+    wins = [cfg.local_window if cfg.layer_is_local(i) else 0
+            for i in range(start, stop)]
+    return {"window": jnp.asarray(wins, jnp.int32),
+            "is_local": jnp.asarray([int(w > 0) for w in wins], jnp.int32)}
+
+
+def _tree_slice(tree, start, stop):
+    return jax.tree.map(lambda x: x[start:stop], tree)
+
+
+def _apply_perm(x, perm):
+    """x: (B,S,H,D), perm: (H,D) int32 gather along channels."""
+    return jnp.take_along_axis(x, perm[None, None], axis=-1)
+
+
+def _expand_perm(perm, n_q_heads):
+    rep = n_q_heads // perm.shape[0]
+    return jnp.repeat(perm, rep, axis=0)
+
+
+# ============================================================= attention sub
+
+def _qkv(x, p, cfg: ArchConfig, rope, flags=None):
+    """Project + rope. Returns q,k,v (B,S,H,hd) post-rope (pre-perm)."""
+    b, s, _ = x.shape
+    q = logical((x @ p["wq"] + p.get("bq", 0)).reshape(b, s, cfg.n_heads, cfg.head_dim),
+                "batch", "seq", "heads", None)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos_g, sin_g, cos_l, sin_l = rope
+    if flags is not None and cfg.rope_theta_local > 0:
+        is_local = flags["is_local"]
+        cos = jnp.where(is_local > 0, cos_l, cos_g)
+        sin = jnp.where(is_local > 0, sin_l, sin_g)
+    else:
+        cos, sin = cos_g, sin_g
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _attn_out(o, p):
+    b, s = o.shape[:2]
+    return logical(o.reshape(b, s, -1) @ p["wo_attn"], "batch", "seq", None)
+
+
+# ========================================================== full-seq blocks
+
+def _ffn(x, p, cfg: ArchConfig):
+    """Returns (out, aux)."""
+    if "moe" in p:
+        return moe_lib.moe_ffn(x, p["moe"], cfg)
+    return L.mlp(x, p["mlp"], cfg), jnp.float32(0.0)
+
+
+def _block_full(x, p, cfg: ArchConfig, flags, rope, collect=False,
+                bidirectional=False, enc_out=None):
+    """One block over the full sequence. Returns (x, aux, (k, v) | None)."""
+    h = L.norm(x, p["norm1"], cfg)
+    q, k, v = _qkv(h, p["attn"], cfg, rope, flags)
+    window = flags["window"] if flags is not None else None
+    attn = full_attention(q, k, v, cfg, window=window, bidirectional=bidirectional)
+    attn = _attn_out(attn, p["attn"])
+    if cfg.family == "hybrid":
+        sout = ssm_lib.ssm_forward(h, p["ssm"], cfg)
+        attn = 0.5 * (L.rms_norm(attn, p["norm_attn_out"]["w"], cfg.norm_eps)
+                      + L.rms_norm(sout, p["norm_ssm_out"]["w"], cfg.norm_eps))
+    x = x + attn
+    if enc_out is not None:  # cross-attention (enc-dec decoder)
+        hx = L.norm(x, p["norm_x"], cfg)
+        qx, kx, vx = _cross_qkv(hx, enc_out, p["xattn"], cfg)
+        xo = full_attention(qx, kx, vx, cfg, bidirectional=True)
+        x = x + _attn_out(xo, p["xattn"])
+    h2 = L.norm(x, p["norm2"], cfg)
+    f, aux = _ffn(h2, p, cfg)
+    x = x + f
+    if collect:
+        return x, aux, (k, v)
+    return x, aux, None
+
+
+def _cross_qkv(x_dec, enc_out, p, cfg: ArchConfig):
+    b, s, _ = x_dec.shape
+    se = enc_out.shape[1]
+    q = (x_dec @ p["wq"] + p.get("bq", 0)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (enc_out @ p["wk"] + p.get("bk", 0)).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["wv"] + p.get("bv", 0)).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v  # no rope on cross attention
+
+
+def _block_rwkv(x, p, cfg: ArchConfig):
+    h = L.norm(x, p["norm1"], cfg)
+    y, _ = rwkv_lib.time_mix(h, p, cfg)
+    x = x + y
+    h2 = L.norm(x, p["norm2"], cfg)
+    return x + rwkv_lib.channel_mix(h2, p), jnp.float32(0.0)
+
+
+# ============================================================ train forward
+
+def _embed_in(params, cfg: ArchConfig, batch: Batch):
+    if cfg.input_embeds and "embeds" in batch:
+        return batch["embeds"]
+    return L.embed(batch["tokens"], params["embed"], cfg.embed_scale)
+
+
+def _positions(cfg: ArchConfig, batch: Batch, s: int):
+    if cfg.mrope_sections:
+        if "positions" in batch:
+            return batch["positions"]
+        p = jnp.arange(s, dtype=jnp.int32)
+        return jnp.broadcast_to(p, (3, 1, s))
+    return jnp.arange(s, dtype=jnp.int32)
+
+
+def _cast_params(params, dtype):
+    """fp32 master -> compute dtype at use (mixed precision)."""
+    if dtype is None:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)
+
+
+def forward_train(params: Params, cfg: ArchConfig, batch: Batch,
+                  dtype=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full causal forward. Returns (logits, aux_loss)."""
+    params = _cast_params(params, dtype)
+    x = _embed_in(params, cfg, batch)
+    if dtype is not None:
+        x = x.astype(dtype)
+    x = logical(x, "batch", "seq", None)
+    b, s, _ = x.shape
+    aux_total = jnp.float32(0.0)
+
+    def _maybe_remat(f):
+        if not cfg.remat or cfg.remat_policy == "none":
+            return f
+        # "nothing" = full per-layer remat: only layer-boundary activations
+        # survive to the backward pass.  "dots" saves every matmul output —
+        # at gemma2-27b scale that is ~300 GB/device of saved (B,S,F) tensors
+        # (measured in §Perf), so full remat is the default.
+        policy = (None if cfg.remat_policy == "nothing" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(f, policy=policy)
+
+    if cfg.family == "ssm":
+        @_maybe_remat
+        def body(carry, p):
+            h, aux = carry
+            h, a = _block_rwkv(h, p, cfg)
+            return (h, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    else:
+        rope = _rope_tables(cfg, _positions(cfg, batch, s))
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = _encode(params, cfg, batch, dtype)
+        if "dense_layers" in params:
+            flags0 = {"window": jnp.int32(0), "is_local": jnp.int32(0)}
+            @_maybe_remat
+            def body0(carry, p):
+                h, aux = carry
+                h, a, _ = _block_full(h, p, cfg, flags0, rope)
+                return (h, aux + a), None
+            (x, aux_total), _ = jax.lax.scan(body0, (x, aux_total), params["dense_layers"])
+        flags = layer_flags(cfg)
+        @_maybe_remat
+        def body(carry, xs):
+            h, aux = carry
+            p, fl = xs
+            h, a, _ = _block_full(h, p, cfg, fl, rope, enc_out=enc_out)
+            return (h, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), (params["layers"], flags))
+
+    x = L.norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x, params, cfg)
+    return logits, aux_total
+
+
+def _encode(params, cfg: ArchConfig, batch: Batch, dtype=None):
+    """Seamless encoder over stub frame embeddings (B, S_enc, D)."""
+    x = batch["enc_embeds"]
+    if dtype is not None:
+        x = x.astype(dtype)
+    s = x.shape[1]
+    rope = _rope_tables(cfg, jnp.arange(s, dtype=jnp.int32))
+    flags = {"window": jnp.int32(0), "is_local": jnp.int32(0)}
+
+    def body(h, p):
+        h, _, _ = _block_full(h, p, cfg, flags, rope, bidirectional=True)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm(x, params["enc_norm"], cfg)
+
+
+# =============================================================== collect_kv
+
+def collect_kv(params: Params, cfg: ArchConfig, batch: Batch,
+               max_samples: int = 4096):
+    """Post-RoPE K/V per layer for calibration: (L, N, H_kv, head_dim)."""
+    if cfg.attn_free:
+        raise ValueError("rwkv6 has no KV cache (SKVQ inapplicable)")
+    x = _embed_in(params, cfg, batch)
+    b, s, _ = x.shape
+    rope = _rope_tables(cfg, _positions(cfg, batch, s))
+    enc_out = _encode(params, cfg, batch) if cfg.family == "encdec" else None
+    flags = layer_flags(cfg)
+    if "dense_layers" in params:
+        flags0 = {"window": jnp.int32(0), "is_local": jnp.int32(0)}
+        def body0(h, p):
+            h, _, kv = _block_full(h, p, cfg, flags0, rope, collect=True)
+            return h, kv
+        x, _ = jax.lax.scan(body0, x, params["dense_layers"])
+
+    def body(h, xs):
+        p, fl = xs
+        h, _, kv = _block_full(h, p, cfg, fl, rope, collect=True, enc_out=enc_out)
+        return h, kv
+
+    _, (ks, vs) = jax.lax.scan(body, x, (params["layers"], flags))
+    n = b * s
+    ks = ks.reshape(ks.shape[0], n, cfg.n_kv_heads, cfg.head_dim)[:, :max_samples]
+    vs = vs.reshape(vs.shape[0], n, cfg.n_kv_heads, cfg.head_dim)[:, :max_samples]
+    return ks, vs
+
+
+# ======================================================== calibration arrays
+
+def identity_calib(cfg: ArchConfig, policy: QuantPolicy,
+                   n_layers: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Stacked no-op calibration (dry-run / uncalibrated serving)."""
+    n = cfg.n_layers if n_layers is None else n_layers
+    hd, h = cfg.head_dim, cfg.n_kv_heads
+    gs = min(policy.group_size, hd)
+    gk = n_meta_groups(hd, policy.bits_k, gs)
+    gv = n_meta_groups(hd, policy.bits_v, gs)
+    eye = jnp.broadcast_to(jnp.arange(hd, dtype=jnp.int32), (n, h, hd))
+    return {"perm_k": eye, "perm_v": eye,
+            "alpha_k": jnp.ones((n, h, gk), jnp.float32),
+            "alpha_v": jnp.ones((n, h, gv), jnp.float32)}
+
+
+def stacked_calib(calib, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    """repro.core.calibrate.Calibration -> stacked scan arrays."""
+    return calib.stacked()
+
+
+# ================================================================== prefill
+
+def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
+                  policy: QuantPolicy, calib: Optional[Dict] = None,
+                  max_len: Optional[int] = None, dtype=None):
+    """Paper Sec 3.2 prefill: full-precision attention, then quantize all but
+    the last ``window`` tokens. Returns (last-token logits, caches dict with
+    a "scan" group and, for first_dense archs, a "dense" group)."""
+    params = _cast_params(params, dtype)
+    x = _embed_in(params, cfg, batch)
+    if dtype is not None:
+        x = x.astype(dtype)
+    b, s, _ = x.shape
+    ml = max_len or (s + 64)
+    cache_dtype = x.dtype
+
+    if cfg.family == "ssm":
+        def body(h, p):
+            hn = L.norm(h, p["norm1"], cfg)
+            y, s_fin = rwkv_lib.time_mix(hn, p, cfg)
+            h = h + y
+            h2 = L.norm(h, p["norm2"], cfg)
+            h = h + rwkv_lib.channel_mix(h2, p)
+            cache = {"wkv": s_fin, "x_prev": hn[:, -1:], "x_prev_ffn": h2[:, -1:]}
+            return h, cache
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        x = L.norm(x, params["final_norm"], cfg)
+        return L.unembed(x[:, -1:], params, cfg), {"scan": caches}
+
+    if calib is None:
+        calib = identity_calib(cfg, policy)
+    rope = _rope_tables(cfg, _positions(cfg, batch, s))
+    enc_out = _encode(params, cfg, batch, dtype) if cfg.family == "encdec" else None
+
+    def body(h, xs):
+        p, fl, cl = xs
+        hn = L.norm(h, p["norm1"], cfg)
+        q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
+        attn = full_attention(q, k, v, cfg, window=fl["window"])
+        attn = _attn_out(attn, p["attn"])
+        cache_extra = {}
+        if "ssm" in p:
+            sout, ss = _ssm_with_state(hn, p["ssm"], cfg)
+            attn = 0.5 * (L.rms_norm(attn, p["norm_attn_out"]["w"], cfg.norm_eps)
+                          + L.rms_norm(sout, p["norm_ssm_out"]["w"], cfg.norm_eps))
+            cache_extra = {f"ssm_{k2}": v2 for k2, v2 in ss.items()}
+        h = h + attn
+        if enc_out is not None and "xattn" in p:
+            hx = L.norm(h, p["norm_x"], cfg)
+            qx, kx, vx = _cross_qkv(hx, enc_out, p["xattn"], cfg)
+            xo = full_attention(qx, kx, vx, cfg, bidirectional=True)
+            h = h + _attn_out(xo, p["xattn"])
+            xpol = dataclasses.replace(policy, window=0, n_sink=0)
+            kxp = _apply_perm(kx, cl["perm_k"])
+            vxp = _apply_perm(vx, cl["perm_v"])
+            xc = kvc.prefill(kxp.astype(cache_dtype), vxp.astype(cache_dtype),
+                             kx.shape[1], xpol, cl["alpha_k"], cl["alpha_v"])
+            cache_extra.update({f"x_{k2}": v2 for k2, v2 in xc.items()})
+        h2 = L.norm(h, p["norm2"], cfg)
+        f, _ = _ffn(h2, p, cfg)
+        h = h + f
+        # --- SKVQ cache build (quantize everything but window + sinks) ---
+        kp = _apply_perm(k, cl["perm_k"])
+        vp = _apply_perm(v, cl["perm_v"])
+        cache = kvc.prefill(kp.astype(cache_dtype), vp.astype(cache_dtype),
+                            ml, policy, cl["alpha_k"], cl["alpha_v"])
+        cache.update(cache_extra)
+        return h, cache
+
+    nf = cfg.first_dense
+    caches = {}
+    if nf:
+        x, dense_caches = jax.lax.scan(
+            body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
+                      _tree_slice(calib, 0, nf)))
+        caches["dense"] = dense_caches
+    x, scan_caches = jax.lax.scan(
+        body, x, (params["layers"], layer_flags(cfg),
+                  _tree_slice(calib, nf, cfg.n_layers)))
+    caches["scan"] = scan_caches
+    x = L.norm(x, params["final_norm"], cfg)
+    logits = L.unembed(x[:, -1:], params, cfg)
+    return logits, caches
+
+
+def _ssm_with_state(x, p, cfg):
+    """ssm_forward + final (conv, h) state for decode continuation."""
+    return ssm_lib.ssm_forward(x, p, cfg, return_state=True)
+
+
+# =================================================================== decode
+
+def decode_step(params: Params, cfg: ArchConfig, token, caches,
+                policy: QuantPolicy, calib: Optional[Dict] = None,
+                positions=None, dtype=None, chunk: int = 0,
+                unroll: bool = False):
+    """One decode step. token: (B, 1) int32 (or (B,1,D) embeds).
+    Returns (logits (B,1,V), new caches).
+
+    ``chunk``: tile the packed-segment attention (§Perf peak-memory lever).
+    ``unroll``: Python-loop the layers instead of scanning — layer locality
+    becomes STATIC, so local-attention layers slice the packed region to
+    their window before dequantizing (§Perf long-context lever)."""
+    params = _cast_params(params, dtype)
+    if token.ndim == 3:
+        x = token
+    else:
+        x = L.embed(token, params["embed"], cfg.embed_scale)
+    if dtype is not None:
+        x = x.astype(dtype)
+    x = logical(x, "batch", "seq", None)
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            p, cache = xs
+            hn = L.norm(h, p["norm1"], cfg)
+            y, st = rwkv_lib.time_mix_decode(hn, p, cfg,
+                                             {"wkv": cache["wkv"], "x_prev": cache["x_prev"]})
+            h = h + y
+            h2 = L.norm(h, p["norm2"], cfg)
+            h = h + rwkv_lib.channel_mix(h2, p, x_prev=cache["x_prev_ffn"])
+            return h, {"wkv": st["wkv"], "x_prev": st["x_prev"], "x_prev_ffn": h2}
+        x, scan_caches = jax.lax.scan(body, x, (params["layers"], caches["scan"]))
+        x = L.norm(x, params["final_norm"], cfg)
+        return L.unembed(x, params, cfg), {"scan": scan_caches}
+
+    if calib is None:
+        calib = identity_calib(cfg, policy)
+    t = caches["scan"]["length"][0]
+    # position of the new token = current cache length (uniform across layers)
+    pos = t if positions is None else positions
+    if cfg.mrope_sections:
+        pos3 = jnp.broadcast_to(pos, (3, b, 1)) if positions is None else positions
+        rope = _rope_tables(cfg, pos3)
+    else:
+        rope = _rope_tables(cfg, jnp.asarray(pos).reshape(1, 1) *
+                            jnp.ones((b, 1), jnp.int32))
+
+    def layer_fn(h, p, fl, cl, cache, local_slice=0, packed_override=None):
+        extra = {k2: v2 for k2, v2 in cache.items()
+                 if k2.startswith("ssm_") or k2.startswith("x_")}
+        kvcache = {k2: v2 for k2, v2 in cache.items() if k2 not in extra}
+        hn = L.norm(h, p["norm1"], cfg)
+        q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
+        qp = _apply_perm(q, _expand_perm(cl["perm_k"], cfg.n_heads))
+        kp = _apply_perm(k, cl["perm_k"])
+        vp = _apply_perm(v, cl["perm_v"])
+        if packed_override is not None:
+            # pre-append ordering: the hoisted packed slice reflects the
+            # pre-step cache, so attend first (current token rides as an
+            # explicit fp segment), then append.
+            attn = decode_attention_skvq(
+                qp, kvcache, cfg, policy, window=fl["window"], dtype=h.dtype,
+                chunk=chunk, packed_override=packed_override,
+                extra_kv=(kp.astype(h.dtype), vp.astype(h.dtype), t), q_pos=t)
+            kvcache = kvc.decode_append(kvcache, kp, vp, policy,
+                                        cl["alpha_k"], cl["alpha_v"])
+        else:
+            kvcache = kvc.decode_append(kvcache, kp, vp, policy,
+                                        cl["alpha_k"], cl["alpha_v"])
+            attn = decode_attention_skvq(qp, kvcache, cfg, policy,
+                                         window=fl["window"], dtype=h.dtype,
+                                         chunk=chunk, local_slice=local_slice,
+                                         packed_override=None)
+        attn = _apply_perm(attn, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
+        attn = _attn_out(attn, p["attn"])
+        if "ssm" in p:
+            sstate = {"conv": extra["ssm_conv"], "h": extra["ssm_h"]}
+            sout, sstate = ssm_lib.ssm_decode(hn, sstate, p["ssm"], cfg)
+            attn = 0.5 * (L.rms_norm(attn, p["norm_attn_out"]["w"], cfg.norm_eps)
+                          + L.rms_norm(sout, p["norm_ssm_out"]["w"], cfg.norm_eps))
+            extra = {**extra, "ssm_conv": sstate["conv"], "ssm_h": sstate["h"]}
+        h = h + attn
+        if "xattn" in p:
+            hx = L.norm(h, p["norm_x"], cfg)
+            xcache = {k2[2:]: v2 for k2, v2 in extra.items() if k2.startswith("x_")}
+            qx = (hx @ p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            qxp = _apply_perm(qx, _expand_perm(cl["perm_k"], cfg.n_heads))
+            xpol = dataclasses.replace(policy, window=0, n_sink=0)
+            xo = decode_attention_skvq(qxp, xcache, cfg, xpol, dtype=h.dtype)
+            xo = _apply_perm(xo, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
+            h = h + _attn_out(xo, p["xattn"])
+        h2 = L.norm(h, p["norm2"], cfg)
+        f, _ = _ffn(h2, p, cfg)
+        return h + f, {**kvcache, **extra}
+
+    def body(h, xs):
+        p, fl, cl, cache = xs
+        return layer_fn(h, p, fl, cl, cache)
+
+    nf = cfg.first_dense
+    new_caches = {}
+    if unroll:
+        def run_group(h, pstack, flags_all, cal, cstack, start):
+            n = jax.tree.leaves(pstack)[0].shape[0]
+            # hoist ONE stacked slice of the packed region for local layers:
+            # per-layer dynamic slices across a context-parallel-sharded seq
+            # dim force GSPMD full-rematerialization (measured in §Perf);
+            # slicing the whole (L, B, S, ...) stack once is a single cheap
+            # gather shared by every local layer.
+            presliced = None
+            lw = cfg.local_window
+            s_q = (cstack["qk_codes_hi"].shape[2]
+                   if "qk_codes_hi" in cstack else 0)
+            any_local = any(cfg.layer_is_local(start + i) for i in range(n))
+            if lw > 0 and any_local and s_q > lw:
+                qc = jnp.maximum(t - policy.n_sink - policy.window + 1, 0)
+                st0 = jnp.clip(qc - lw, 0, s_q - lw)
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, st0, lw, axis=2)
+                k_sl = {k2[3:]: sl(v2) for k2, v2 in cstack.items()
+                        if k2.startswith("qk_")}
+                v_sl = {k2[3:]: sl(v2) for k2, v2 in cstack.items()
+                        if k2.startswith("qv_")}
+                presliced = (k_sl, v_sl, st0 + jnp.arange(lw))
+            outs = []
+            for i in range(n):
+                p = _tree_slice(pstack, i, i + 1)
+                p = jax.tree.map(lambda a: a[0], p)
+                fl = {k2: v2[i] for k2, v2 in flags_all.items()}
+                cl = jax.tree.map(lambda a: a[i], cal)
+                cache = jax.tree.map(lambda a: a[i], cstack)
+                is_local = cfg.layer_is_local(start + i) and lw > 0
+                po = None
+                if is_local and presliced is not None:
+                    po = (jax.tree.map(lambda a: a[i], presliced[0]),
+                          jax.tree.map(lambda a: a[i], presliced[1]),
+                          presliced[2])
+                h, cnew = layer_fn(h, p, fl, cl, cache,
+                                   local_slice=lw if is_local else 0,
+                                   packed_override=po)
+                outs.append(cnew)
+            return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        if nf:
+            x, dc = run_group(x, params["dense_layers"], layer_flags(cfg, 0, nf),
+                              _tree_slice(calib, 0, nf), caches["dense"], 0)
+            new_caches["dense"] = dc
+        x, sc = run_group(x, params["layers"], layer_flags(cfg),
+                          _tree_slice(calib, nf, cfg.n_layers),
+                          caches["scan"], nf)
+        new_caches["scan"] = sc
+    else:
+        if nf:
+            x, dc = jax.lax.scan(
+                body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
+                          _tree_slice(calib, 0, nf), caches["dense"]))
+            new_caches["dense"] = dc
+        x, sc = jax.lax.scan(
+            body, x, (params["layers"], layer_flags(cfg),
+                      _tree_slice(calib, nf, cfg.n_layers), caches["scan"]))
+        new_caches["scan"] = sc
+    x = L.norm(x, params["final_norm"], cfg)
+    return L.unembed(x, params, cfg), new_caches
+
+
+def _inverse_perm_expanded(perm_v, n_q_heads):
+    """Runtime inverse of the V permutation, expanded to query heads."""
+    hd = perm_v.shape[-1]
+    inv = jnp.zeros_like(perm_v).at[
+        jnp.arange(perm_v.shape[0])[:, None], perm_v].set(
+        jnp.broadcast_to(jnp.arange(hd, dtype=perm_v.dtype), perm_v.shape))
+    return _expand_perm(inv, n_q_heads)
+
+
+# ===================================================== appendix-6 fusion demo
+
+def fuse_v_permutation(attn_params, perm_v, n_heads: int):
+    """Fuse the V permutation into W_v / W_o (paper Appendix 6) — the V path
+    has no RoPE so the fusion is exact; equivalence-tested in tests/."""
+    from ..core.reorder import fuse_out_channels, fuse_in_channels, expand_kv_perm_for_q
+    import numpy as _np
+    pv = _np.asarray(perm_v)
+    out = dict(attn_params)
+    out["wv"] = fuse_out_channels(attn_params["wv"], pv)
+    out["wo_attn"] = fuse_in_channels(attn_params["wo_attn"],
+                                      expand_kv_perm_for_q(pv, n_heads))
+    return out

@@ -1,0 +1,3 @@
+from .engine import ServeSession, make_prefill_fn, make_decode_fn
+
+__all__ = ["ServeSession", "make_prefill_fn", "make_decode_fn"]

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, schedules, train step, grad compression."""
+from .optim import adamw_init, adamw_update, global_norm
+from .schedule import warmup_cosine
+from .train_step import make_train_step, loss_fn, TrainState, init_train_state
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "warmup_cosine",
+           "make_train_step", "loss_fn", "TrainState", "init_train_state"]

@@ -1,0 +1,75 @@
+"""Train step: loss, value_and_grad, AdamW update, optional pod-axis gradient
+compression (int8 error-feedback all-reduce for the slow cross-pod link).
+
+The step is a pure function jit/pjit-compatible; distribution comes from the
+in/out shardings chosen by the launcher (DP over (pod, data), Megatron TP over
+model; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ArchConfig
+from ..models import transformer as T
+from .optim import adamw_init, adamw_update
+from .schedule import warmup_cosine
+
+TrainState = Dict  # {"params", "opt", "step"} (+ "ef" with compression)
+
+
+def init_train_state(cfg: ArchConfig, key, dtype=jnp.float32,
+                     grad_compress: bool = False) -> TrainState:
+    params = T.init_params(cfg, key, dtype=dtype)
+    state = {"params": params, "opt": adamw_init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if grad_compress:
+        # error-feedback residuals, one per param
+        state["ef"] = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return state
+
+
+def loss_fn(logits, labels, aux=0.0, z_coef=1e-4, aux_coef=1e-2):
+    """Causal LM cross-entropy (fp32) + z-loss + MoE aux.
+
+    ``labels`` are already next-token-aligned (labels[t] = tokens[t+1], as the
+    data pipeline emits them) — no internal shift here.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    zloss = jnp.square(lse).mean()
+    return nll + z_coef * zloss + aux_coef * aux, nll
+
+
+def make_train_step(cfg: ArchConfig, *, lr_fn: Optional[Callable] = None,
+                    compute_dtype=None, grad_compress: bool = False,
+                    mesh=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    lr_fn = lr_fn or warmup_cosine
+
+    def forward_loss(params, batch):
+        logits, aux = T.forward_train(params, cfg, batch, dtype=compute_dtype)
+        loss, nll = loss_fn(logits, batch["labels"], aux)
+        return loss, nll
+
+    def train_step(state: TrainState, batch) -> tuple:
+        (loss, nll), grads = jax.value_and_grad(forward_loss, has_aux=True)(
+            state["params"], batch)
+        ef = state.get("ef")
+        if grad_compress and ef is not None:
+            from ..distributed.compression import ef_int8_compress
+            grads, ef = ef_int8_compress(grads, ef, mesh)
+        lr = lr_fn(state["step"])
+        params, opt, m = adamw_update(grads, state["opt"], state["params"], lr)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if ef is not None:
+            new_state["ef"] = ef
+        metrics = {"loss": loss, "nll": nll, "lr": lr, **m}
+        return new_state, metrics
+
+    return train_step

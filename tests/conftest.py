@@ -1,0 +1,31 @@
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.data import SyntheticCorpus, DataLoader
+from repro.training import make_train_step, init_train_state, warmup_cosine
+
+
+@pytest.fixture(scope="session")
+def tiny_trained():
+    """A llama-family smoke model trained ~120 steps on the synthetic corpus —
+    gives K/V activations channel structure for the quantization-quality tests."""
+    cfg = configs.get_smoke("llama3p2_1b")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=1)
+    dl = DataLoader(corpus, batch=8, seq=64)
+    lr = functools.partial(warmup_cosine, peak_lr=5e-3, warmup=10, total=120)
+    step = jax.jit(make_train_step(cfg, lr_fn=lr))
+    for i in range(120):
+        state, m = step(state, dl.batch_at(i))
+    return {"cfg": cfg, "params": state["params"], "corpus": corpus,
+            "final_nll": float(m["nll"])}
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

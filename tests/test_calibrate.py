@@ -1,0 +1,51 @@
+"""Offline calibration: alpha search beats alpha=1; attention-MSE refinement."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.calibrate import (calibrate_layer, refine_attention_mse,
+                                  ALPHA_GRID)
+from repro.core.quant import fake_quant
+
+POL = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=32, window=8, n_sink=2)
+
+
+def _structured(rng, n=512, h=2, d=64, outliers=True):
+    x = rng.normal(size=(n, h, d))
+    scales = np.exp(rng.normal(size=(1, h, d)))
+    if outliers:
+        scales[..., :3] *= 30
+    return (x * scales).astype(np.float32)
+
+
+def test_calibrate_layer_shapes(rng):
+    k = _structured(rng)
+    v = _structured(rng)
+    c = calibrate_layer(k, v, POL)
+    assert c.perm_k.shape == (2, 64)
+    assert c.alpha_k.shape[0] == 2
+    grid = np.asarray(ALPHA_GRID, np.float32)
+    assert all(np.any(np.isclose(a, grid, atol=1e-5))
+               for a in np.unique(c.alpha_k))
+
+
+def test_alpha_improves_reconstruction(rng):
+    k = _structured(rng)
+    c = calibrate_layer(k, k.copy(), POL)
+    kj = jnp.asarray(np.take_along_axis(k, c.perm_k[None], axis=2))
+    e_cal = float(jnp.square(
+        fake_quant(kj, 2.0, 32, alpha=jnp.asarray(c.alpha_k)) - kj).mean())
+    e_raw = float(jnp.square(fake_quant(kj, 2.0, 32) - kj).mean())
+    assert e_cal <= e_raw * 1.001, (e_cal, e_raw)
+
+
+def test_refine_attention_mse_runs(rng):
+    b, s, h, d = 1, 32, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(_structured(rng, n=s, h=h, d=d)[None], jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    c = calibrate_layer(np.asarray(k[0]), np.asarray(v[0]), POL)
+    m = refine_attention_mse(q, k, v, c, POL)
+    assert m in (0.85, 0.9, 0.95, 1.0)

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/bits sweeps (interpret mode)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core.quant import quantize_groups, n_meta_groups
+from repro.core import kv_cache as kvc
+from repro.kernels.kv_quant import kv_quant_pallas
+from repro.kernels.decode_attn import decode_attn_pallas
+from repro.kernels import ref as R
+from repro.kernels.ops import skvq_decode_attention
+
+
+@pytest.mark.parametrize("bits,gs,d,dtype", [
+    (2.0, 64, 128, jnp.float32), (1.5, 64, 128, jnp.float32),
+    (4.0, 32, 64, jnp.float32), (1.0, 16, 64, jnp.float32),
+    (2.0, 128, 128, jnp.bfloat16), (1.5, 32, 64, jnp.bfloat16),
+    (8.0, 64, 64, jnp.float32),
+])
+def test_kv_quant_exact_sweep(bits, gs, d, dtype, rng):
+    x = jnp.asarray(rng.normal(size=(256, d)), dtype)
+    got = kv_quant_pallas(x, bits, gs)
+    want = R.kv_quant_ref(x, bits, gs)
+    assert sorted(got) == sorted(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]),
+                                      err_msg=f"{bits}/{gs}/{d}/{k}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([1.5, 2.0, 4.0]), blocks=st.integers(1, 4),
+       seed=st.integers(0, 999))
+def test_kv_quant_property(bits, blocks, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(blocks * 64, 64)) * 3, jnp.float32)
+    got = kv_quant_pallas(x, bits, 32, block_t=64)
+    want = R.kv_quant_ref(x, bits, 32)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(want[k]))
+
+
+@pytest.mark.parametrize("bits_k,bits_v,gs,d,s,qc", [
+    (2.0, 1.5, 64, 128, 512, 400),   # paper headline
+    (2.0, 2.0, 128, 128, 256, 256),  # paper table setting
+    (4.0, 4.0, 32, 64, 256, 100),
+    (2.0, 1.5, 64, 64, 128, 77),
+])
+def test_decode_attn_sweep(bits_k, bits_v, gs, d, s, qc, rng):
+    pol = QuantPolicy(bits_k=bits_k, bits_v=bits_v, group_size=gs,
+                      window=0, n_sink=0)
+    b, hkv, gq = 2, 2, 4
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(b, hkv, gq, d)), jnp.float32)
+    g = min(gs, d)
+    k_qt = quantize_groups(k, bits_k, g, fp8_meta=pol.fp8_meta)
+    v_qt = quantize_groups(v, bits_v, g, fp8_meta=pol.fp8_meta)
+    mask = (jnp.arange(s) < qc).astype(jnp.float32)
+    num, m, l = decode_attn_pallas(q, k_qt, v_qt, mask, pol, d, d ** -0.5,
+                                   block_s=128)
+    rn, rm, rl = R.decode_attn_ref(q, k_qt, v_qt, qc, pol, d, d ** -0.5)
+    np.testing.assert_allclose(np.asarray(num / l), np.asarray(rn / rl[..., None]),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_ops_wrapper_matches_model_path(rng):
+    """Full wrapper (kernel + fp segments merge) == model jnp reference."""
+    from repro.models.attention import decode_attention_skvq
+    from repro.models.config import ArchConfig
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=64, window=16, n_sink=4)
+    b, s, h, d, hq = 2, 200, 2, 128, 8
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=128,
+                     n_heads=hq, n_kv_heads=h, head_dim=d, d_ff=16, vocab_size=16)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    cache = kvc.prefill(k, v, 256, pol)
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    ref = decode_attention_skvq(q, cache, cfg, pol, dtype=jnp.float32)
+    got = skvq_decode_attention(q, cache, pol, d, d ** -0.5, block_s=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=3e-5,
+                               rtol=1e-4)
+
+
+def test_merge_segments_equals_joint_softmax(rng):
+    """Flash logsumexp merge across segments == softmax over the union."""
+    q = jnp.asarray(rng.normal(size=(1, 1, 2, 16)), jnp.float32)
+    k1 = jnp.asarray(rng.normal(size=(1, 1, 32, 16)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(1, 1, 16, 16)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(size=(1, 1, 32, 16)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(1, 1, 16, 16)), jnp.float32)
+
+    def part(k, v):
+        s = jnp.einsum("bhgd,bhtd->bhgt", q, k)
+        m = s.max(-1)
+        p = jnp.exp(s - m[..., None])
+        return jnp.einsum("bhgt,bhtd->bhgd", p, v), m, p.sum(-1)
+
+    merged = R.merge_segments([part(k1, v1), part(k2, v2)])
+    s = jnp.einsum("bhgd,bhtd->bhgt", q, jnp.concatenate([k1, k2], 2))
+    p = jax.nn.softmax(s, -1)
+    joint = jnp.einsum("bhgt,bhtd->bhgd", p, jnp.concatenate([v1, v2], 2))
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(joint), atol=1e-6)

@@ -1,0 +1,91 @@
+"""Sliding-window cache semantics: sink/window exactness, streaming equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core import kv_cache as kvc
+
+POL = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=32, window=8, n_sink=2,
+                  fp8_meta=True)
+
+
+def _mk(rng, b, s, h, d):
+    return (jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32))
+
+
+def test_window_and_sink_exact(rng):
+    b, s, h, d = 2, 40, 2, 64
+    k, v = _mk(rng, b, s, h, d)
+    cache = kvc.prefill(k, v, 64, POL)
+    K, V = kvc.materialize_kv(cache, d, POL, s)
+    np.testing.assert_allclose(np.asarray(K[:, :2]), np.asarray(k[:, :2]),
+                               atol=1e-2)  # sinks fp
+    np.testing.assert_allclose(np.asarray(K[:, -8:]), np.asarray(k[:, -8:]),
+                               atol=1e-2)  # window fp
+    # middle is quantized: nonzero but bounded error
+    err = np.abs(np.asarray(K[:, 2:-8] - k[:, 2:-8]))
+    assert err.mean() > 1e-4 and err.max() < 4.0
+
+
+def test_streaming_equals_batch(rng):
+    """prefill(s) + decode_append×k must equal prefill(s+k) exactly —
+    the paper's decode phase quantizes exactly the token leaving the window."""
+    b, s, h, d, extra = 1, 24, 2, 64, 10
+    k, v = _mk(rng, b, s + extra, h, d)
+    c_stream = kvc.prefill(k[:, :s], v[:, :s], 64, POL)
+    for t in range(s, s + extra):
+        c_stream = kvc.decode_append(c_stream, k[:, t:t + 1], v[:, t:t + 1], POL)
+    c_batch = kvc.prefill(k, v, 64, POL)
+    Ks, Vs = kvc.materialize_kv(c_stream, d, POL, s + extra)
+    Kb, Vb = kvc.materialize_kv(c_batch, d, POL, s + extra)
+    np.testing.assert_allclose(np.asarray(Ks), np.asarray(Kb), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(Vs), np.asarray(Vb), atol=1e-5)
+
+
+def test_no_window_policy(rng):
+    pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, window=0, n_sink=0)
+    b, s, h, d = 1, 16, 2, 64
+    k, v = _mk(rng, b, s, h, d)
+    cache = kvc.prefill(k, v, 32, pol)
+    K, V = kvc.materialize_kv(cache, d, pol, s)
+    err = np.abs(np.asarray(K - k))
+    assert err.mean() > 1e-4  # everything quantized
+
+
+def test_short_prefill_only_sinks(rng):
+    b, s, h, d = 1, 1, 2, 64
+    k, v = _mk(rng, b, s, h, d)
+    cache = kvc.prefill(k, v, 32, POL)
+    K, _ = kvc.materialize_kv(cache, d, POL, s)
+    np.testing.assert_allclose(np.asarray(K[:, 0]), np.asarray(k[:, 0]), atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(3, 30), extra=st.integers(1, 12), seed=st.integers(0, 999))
+def test_streaming_property(s, extra, seed):
+    """Invariant across arbitrary prefill/decode splits."""
+    r = np.random.default_rng(seed)
+    b, h, d = 1, 1, 64
+    k = jnp.asarray(r.normal(size=(b, s + extra, h, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, s + extra, h, d)), jnp.float32)
+    pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, window=4, n_sink=1)
+    c1 = kvc.prefill(k[:, :s], v[:, :s], 64, pol)
+    for t in range(s, s + extra):
+        c1 = kvc.decode_append(c1, k[:, t:t + 1], v[:, t:t + 1], pol)
+    c2 = kvc.prefill(k, v, 64, pol)
+    K1, _ = kvc.materialize_kv(c1, d, pol, s + extra)
+    K2, _ = kvc.materialize_kv(c2, d, pol, s + extra)
+    np.testing.assert_allclose(np.asarray(K1), np.asarray(K2), atol=1e-5)
+
+
+def test_gather_positions_cover_all(rng):
+    b, s, h, d = 1, 30, 1, 64
+    k, v = _mk(rng, b, s, h, d)
+    cache = kvc.prefill(k, v, 40, POL)
+    _, _, pos, valid = kvc.gather_attention_inputs(cache, d, POL)
+    got = sorted(np.asarray(pos)[np.asarray(valid)].tolist())
+    assert got == list(range(s))  # every token attended exactly once

@@ -1,0 +1,53 @@
+"""Pipeline parallelism: pipelined forward == sequential forward (subprocess
+with 4 fake devices so the main process keeps single-device jax)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import AxisType
+    from repro.distributed.pipeline import pipeline_forward
+
+    mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    L, B, D = 8, 8, 16
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(L, D, D)) * 0.3, jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(L, D)) * 0.1, jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+
+    def block(h, p):
+        return jnp.tanh(h @ p["w"] + p["b"])
+
+    def sequential(x):
+        def body(c, p):
+            return block(c, p), None
+        out, _ = jax.lax.scan(body, x, params)
+        return out
+
+    ref = sequential(x)
+    with mesh:
+        got = jax.jit(lambda x: pipeline_forward(
+            block, params, x, mesh=mesh, axis="pod", microbatches=4))(x)
+    err = float(jnp.abs(got - ref).max())
+    print(json.dumps({"err": err}))
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"},
+                         cwd="/root/repo", timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["err"] < 1e-5, res

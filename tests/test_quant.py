@@ -1,0 +1,83 @@
+"""Clipped dynamic group quantization: error bounds, planes, fp8 metadata."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy, bit_planes, PAPER_POLICY
+from repro.core.quant import (quantize_groups, dequantize_groups, fake_quant,
+                              plane_layout, n_meta_groups, packed_nbytes)
+
+
+def test_bit_planes():
+    assert bit_planes(2.0) == ((2, 1.0),)
+    assert bit_planes(1.5) == ((2, 0.5), (1, 0.5))
+    assert bit_planes(3.0) == ((4, 0.5), (2, 0.5))
+    with pytest.raises(ValueError):
+        bit_planes(2.7)
+
+
+def test_plane_layout_groups():
+    # paper main setting: head_dim 128, group 128 -> K one group, V1.5 two planes
+    assert plane_layout(128, 2.0, 128) == [(0, 128, 2, 128)]
+    lo = plane_layout(128, 1.5, 128)
+    assert lo == [(0, 64, 2, 64), (64, 64, 1, 64)]
+    assert n_meta_groups(128, 1.5, 128) == 2
+
+
+@pytest.mark.parametrize("bits,max_err_scale", [(8.0, 0.04), (4.0, 0.35),
+                                                (2.0, 1.3), (1.5, 3.5)])
+def test_quant_error_bound(bits, max_err_scale, rng):
+    x = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    y = fake_quant(x, bits, 64, fp8_meta=False)
+    # error bounded by half a quant step of the worst group range
+    assert float(jnp.abs(y - x).max()) < max_err_scale
+
+
+def test_fp8_meta_close_to_fp16(rng):
+    x = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    y8 = fake_quant(x, 2.0, 64, fp8_meta=True)
+    y16 = fake_quant(x, 2.0, 64, fp8_meta=False)
+    e8 = float(jnp.square(y8 - x).mean())
+    e16 = float(jnp.square(y16 - x).mean())
+    assert e8 < e16 * 1.15  # paper Table 3: FP8 costs ~nothing
+
+
+def test_clipping_helps_outliers(rng):
+    x = rng.normal(size=(512, 64)).astype(np.float32)
+    x[:, 0] *= 50.0  # one outlier channel per group
+    xj = jnp.asarray(x)
+    e_noclip = float(jnp.square(fake_quant(xj, 2.0, 64) - xj)[:, 1:].mean())
+    e_clip = float(jnp.square(
+        fake_quant(xj, 2.0, 64, alpha=jnp.float32(0.5)) - xj)[:, 1:].mean())
+    assert e_clip < e_noclip  # non-outlier channels quantize better clipped
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([1.5, 2.0, 4.0]), gs=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2 ** 31))
+def test_roundtrip_monotone_property(bits, gs, seed):
+    """dequant(quant(x)) stays within the clipped group range (invariant)."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(32, 64)), jnp.float32)
+    qt = quantize_groups(x, bits, gs, fp8_meta=False)
+    y = dequantize_groups(qt, 64, bits, gs, fp8_meta=False, dtype=jnp.float32)
+    assert np.isfinite(np.asarray(y)).all()
+    # reconstruction never exceeds the observed range by more than a step
+    assert float(y.max()) <= float(x.max()) + 0.6 * float(x.max() - x.min())
+    assert float(y.min()) >= float(x.min()) - 0.6 * float(x.max() - x.min())
+
+
+def test_avg_bits_matches_paper():
+    # paper: K2 g32 fp16 meta -> 3.0 avg bits; fp8 meta -> 2.5 (16.7% less)
+    p16 = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, fp8_meta=False)
+    p8 = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=32, fp8_meta=True)
+    assert abs(p16.avg_bits(128) - 3.0) < 1e-6
+    assert abs(p8.avg_bits(128) - 2.5) < 1e-6
+
+
+def test_packed_nbytes_compression():
+    fp16 = 128 * 2
+    skvq_k = packed_nbytes(128, 2.0, 128, 8)
+    assert fp16 / skvq_k > 7  # ~7.5x for keys at g128+fp8

@@ -1,0 +1,89 @@
+"""Channel reorder: invariance, fusion equivalence, clustering quality."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reorder as ro
+from repro.core.quant import fake_quant
+
+
+def test_permutation_invariance_qk(rng):
+    """q·k == perm(q)·perm(k) — the transformation the paper exploits."""
+    q = rng.normal(size=(5, 64))
+    k = rng.normal(size=(7, 64))
+    perm = rng.permutation(64)
+    s1 = q @ k.T
+    s2 = q[:, perm] @ k[:, perm].T
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+
+
+def test_compute_permutations_structure(rng):
+    # channels with 4 distinct scales; reorder should group same-scale channels
+    scales = np.repeat([0.1, 1.0, 10.0, 100.0], 16)
+    rng.shuffle(scales)
+    x = rng.normal(size=(512, 1, 64)) * scales
+    perm = ro.compute_permutations(x.astype(np.float32), group_size=16)
+    assert perm.shape == (1, 64)
+    assert sorted(perm[0].tolist()) == list(range(64))
+    # within each reordered group of 16, scales should be homogeneous
+    reordered = scales[perm[0]]
+    spread = [np.std(np.log10(reordered[i:i + 16])) for i in range(0, 64, 16)]
+    assert np.mean(spread) < 0.4, spread
+
+
+def test_reorder_reduces_quant_error(rng):
+    scales = np.repeat([0.05, 1.0, 20.0, 400.0], 16)
+    rng.shuffle(scales)
+    x = (rng.normal(size=(512, 1, 64)) * scales).astype(np.float32)
+    perm = ro.compute_permutations(x, group_size=16)
+    xj = jnp.asarray(x)
+    xp = jnp.take_along_axis(xj, jnp.asarray(perm)[None], axis=2)
+    rel = lambda y, x: float(jnp.square(y - x).sum() / jnp.square(x).sum())
+    e_plain = rel(fake_quant(xj, 2.0, 16, fp8_meta=False), xj)
+    e_reord = rel(fake_quant(xp, 2.0, 16, fp8_meta=False), xp)
+    assert e_reord < e_plain * 0.8, (e_plain, e_reord)
+
+
+def test_invert_permutation():
+    perm = np.array([[2, 0, 1, 3]], dtype=np.int32)
+    inv = ro.invert_permutation(perm)
+    x = np.arange(4)
+    np.testing.assert_array_equal(x[perm[0]][inv[0]], x)
+
+
+def test_fuse_v_permutation_equivalence(rng):
+    """Appendix 6: fusing the V perm into W_v/W_o leaves attention unchanged."""
+    from repro.models.transformer import fuse_v_permutation
+    d, hq, hkv, hd = 32, 4, 2, 8
+    attn = {
+        "wq": jnp.asarray(rng.normal(size=(d, hq * hd)), jnp.float32),
+        "wk": jnp.asarray(rng.normal(size=(d, hkv * hd)), jnp.float32),
+        "wv": jnp.asarray(rng.normal(size=(d, hkv * hd)), jnp.float32),
+        "wo_attn": jnp.asarray(rng.normal(size=(hq * hd, d)), jnp.float32),
+    }
+    perm_v = np.stack([rng.permutation(hd), rng.permutation(hd)]).astype(np.int32)
+    fused = fuse_v_permutation(attn, perm_v, hq)
+    x = jnp.asarray(rng.normal(size=(2, 6, d)), jnp.float32)
+
+    def run(p):
+        b, s, _ = x.shape
+        q = (x @ p["wq"]).reshape(b, s, hq, hd)
+        k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+        qg = q.reshape(b, s, hkv, hq // hkv, hd)
+        sc = jnp.einsum("bskgd,btkd->bkgst", q.reshape(b, s, hkv, -1, hd), k)
+        p_ = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", p_, v).reshape(b, s, hq * hd)
+        return o @ p["wo_attn"]
+
+    np.testing.assert_allclose(np.asarray(run(attn)), np.asarray(run(fused)),
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_smooth_factors(rng):
+    x = rng.normal(size=(128, 2, 16)) * 3.0
+    s = ro.smooth_factors(x)
+    assert s.shape == (2, 16)
+    assert (s > 0).all()

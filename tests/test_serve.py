@@ -1,0 +1,116 @@
+"""Serving integration: decode-vs-full-forward consistency across families,
+sliding-window quality ordering, end-to-end generation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.policy import QuantPolicy
+from repro.models import transformer as T
+from repro.serving import ServeSession
+
+HI_POL = QuantPolicy(bits_k=8.0, bits_v=8.0, group_size=16, window=8, n_sink=2,
+                     fp8_meta=False)
+
+FAMILIES = ["llama3p2_1b", "gemma2_27b", "gemma3_4b", "hymba_1p5b",
+            "rwkv6_3b", "seamless_m4t_large_v2", "qwen2_vl_7b",
+            "granite_moe_1b_a400m"]
+
+
+def _mk_batch(cfg, rng, b, s):
+    batch = {}
+    if cfg.input_embeds:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)),
+                                      jnp.float32)
+        if cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s), (3, b, s)).astype(jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.enc_seq_len, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_decode_matches_forward(arch, rng):
+    """prefill + decode_step ≈ forward_train at 8-bit (integration invariant)."""
+    cfg = configs.get_smoke(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # dropless
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 24
+    batch = _mk_batch(cfg, rng, b, s + 1)
+    if cfg.input_embeds:
+        pre = {k: (v[:, :s] if k != "positions" else v[..., :s])
+               for k, v in batch.items()}
+        nxt = batch["embeds"][:, s:s + 1]
+    else:
+        pre = dict(batch, tokens=batch["tokens"][:, :s])
+        if "enc_embeds" in batch:
+            pre["enc_embeds"] = batch["enc_embeds"]
+        nxt = batch["tokens"][:, s:s + 1]
+    ref, _ = T.forward_train(params, cfg, batch)
+    l0, caches = T.prefill_model(params, cfg, pre, HI_POL, max_len=s + 8)
+    np.testing.assert_allclose(np.asarray(l0[:, 0]), np.asarray(ref[:, s - 1]),
+                               atol=2e-3, rtol=1e-3)
+    l1, caches = T.decode_step(params, cfg, nxt, caches, HI_POL)
+    scale = float(jnp.abs(ref).max())
+    err = float(jnp.abs(l1[:, 0] - ref[:, s]).max())
+    assert err < 0.05 * max(scale, 1.0) + 0.02, (arch, err, scale)
+
+
+def test_paper_policy_decode_reasonable(tiny_trained, rng):
+    """K2V1.5 decode still tracks the fp16 forward on a trained model."""
+    cfg, params = tiny_trained["cfg"], tiny_trained["params"]
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=16, n_sink=2)
+    corpus = tiny_trained["corpus"]
+    toks = np.stack([corpus.sample(49, np.random.default_rng(i))
+                     for i in range(4)])
+    batch = {"tokens": jnp.asarray(toks[:, :48], jnp.int32)}
+    ref, _ = T.forward_train(params, cfg, {"tokens": jnp.asarray(toks, jnp.int32)})
+    _, caches = T.prefill_model(params, cfg, batch, pol, max_len=64)
+    l1, _ = T.decode_step(params, cfg, jnp.asarray(toks[:, 48:49], jnp.int32),
+                          caches, pol)
+    ref_top = np.asarray(jnp.argsort(ref[:, 48], axis=-1)[:, -5:])
+    got_top1 = np.asarray(jnp.argmax(l1[:, 0], axis=-1))
+    hits = sum(got_top1[i] in ref_top[i] for i in range(4))
+    assert hits >= 3, "2-bit decode diverged from fp16 top-5"
+
+
+def test_generation_deterministic(tiny_trained):
+    cfg, params = tiny_trained["cfg"], tiny_trained["params"]
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=8, n_sink=2)
+    corpus = tiny_trained["corpus"]
+    prompts = np.stack([corpus.sample(32, np.random.default_rng(i))
+                        for i in range(2)])
+    s1 = ServeSession(params, cfg, pol, batch_slots=2, max_len=64)
+    s2 = ServeSession(params, cfg, pol, batch_slots=2, max_len=64)
+    o1 = s1.generate(prompts, max_new=8)
+    o2 = s2.generate(prompts, max_new=8)
+    np.testing.assert_array_equal(o1, o2)
+
+
+def test_window_improves_quality(tiny_trained, rng):
+    """Paper Fig. 6: larger fp window -> decode logits closer to fp16."""
+    cfg, params = tiny_trained["cfg"], tiny_trained["params"]
+    corpus = tiny_trained["corpus"]
+    toks = np.stack([corpus.sample(49, np.random.default_rng(100 + i))
+                     for i in range(4)])
+    batch = {"tokens": jnp.asarray(toks[:, :48], jnp.int32)}
+    ref, _ = T.forward_train(params, cfg,
+                             {"tokens": jnp.asarray(toks, jnp.int32)})
+    errs = {}
+    for w in (0, 8, 32):
+        pol = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=16, window=w,
+                          n_sink=0)
+        _, caches = T.prefill_model(params, cfg, batch, pol, max_len=64)
+        l1, _ = T.decode_step(params, cfg,
+                              jnp.asarray(toks[:, 48:49], jnp.int32), caches, pol)
+        errs[w] = float(jnp.square(l1[:, 0] - ref[:, 48]).mean())
+    assert errs[32] <= errs[0] * 1.05, errs

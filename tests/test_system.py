@@ -1,0 +1,92 @@
+"""End-to-end system behaviour: the paper's claims at miniature scale.
+
+train -> calibrate (reorder + clip) -> SKVQ serve -> quality ordering of
+methods on real (trained-model) KV distributions.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.policy import QuantPolicy
+from repro.core.calibrate import calibrate_layer, Calibration
+from repro.models import transformer as T
+
+
+def _ppl(params, cfg, tokens):
+    logits, _ = T.forward_train(params, cfg, {"tokens": tokens})
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32)[:, :-1], axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32)[:, :-1],
+                               tokens[:, 1:, None], axis=-1)[..., 0]
+    return float(jnp.exp((lse - gold).mean()))
+
+
+def _decode_nll(params, cfg, tokens, policy, calib=None, prefix=32):
+    """Teacher-forced decode NLL over the suffix, with the SKVQ cache."""
+    batch = {"tokens": tokens[:, :prefix]}
+    logits, caches = T.prefill_model(params, cfg, batch, policy, calib=calib,
+                                     max_len=tokens.shape[1] + 8)
+    total, n = 0.0, 0
+    for t in range(prefix, tokens.shape[1]):
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32)[:, -1], axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32)[:, -1],
+                                   tokens[:, t, None], axis=-1)[..., 0]
+        total += float((lse - gold).sum())
+        n += int(tokens.shape[0])
+        logits, caches = T.decode_step(params, cfg, tokens[:, t:t + 1], caches,
+                                       policy, calib=calib)
+    return total / n
+
+
+def test_skvq_end_to_end_quality(tiny_trained):
+    """SKVQ@K2V1.5 decode NLL stays near fp-window-only; RTN-no-window is worse.
+
+    Mirrors the paper's core claim (Table 1 + Table 3 ablation direction)."""
+    cfg, params, corpus = (tiny_trained["cfg"], tiny_trained["params"],
+                           tiny_trained["corpus"])
+    toks = jnp.asarray(np.stack([corpus.sample(64, np.random.default_rng(i))
+                                 for i in range(8)]), jnp.int32)
+
+    # calibrate on held-out samples
+    calib_toks = jnp.asarray(
+        np.stack([corpus.sample(64, np.random.default_rng(100 + i))
+                  for i in range(8)]), jnp.int32)
+    pol_skvq = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=16,
+                           n_sink=2)
+    ks, vs = T.collect_kv(params, cfg, {"tokens": calib_toks})
+    layers = [calibrate_layer(np.asarray(ks[l]), np.asarray(vs[l]), pol_skvq)
+              for l in range(ks.shape[0])]
+    calib = Calibration(layers).stacked()
+
+    nll_hi = _decode_nll(params, cfg, toks,
+                         QuantPolicy(bits_k=8.0, bits_v=8.0, group_size=16,
+                                     window=16, n_sink=2, fp8_meta=False))
+    nll_skvq = _decode_nll(params, cfg, toks, pol_skvq, calib=calib)
+    nll_rtn = _decode_nll(params, cfg, toks,
+                          QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16,
+                                      window=0, n_sink=0, clip=False,
+                                      reorder=False))
+    # SKVQ must be close to the 8-bit reference and beat raw RTN-no-window
+    assert nll_skvq < nll_rtn, (nll_skvq, nll_rtn)
+    assert nll_skvq - nll_hi < 0.75 * (nll_rtn - nll_hi) + 0.02, \
+        (nll_hi, nll_skvq, nll_rtn)
+
+
+def test_collect_kv_shapes(tiny_trained):
+    cfg, params = tiny_trained["cfg"], tiny_trained["params"]
+    toks = jnp.zeros((2, 32), jnp.int32)
+    ks, vs = T.collect_kv(params, cfg, {"tokens": toks})
+    assert ks.shape == (cfg.n_layers, 64, cfg.n_kv_heads, cfg.head_dim)
+    assert not bool(jnp.isnan(ks).any())
+
+
+def test_rwkv_no_kv_cache():
+    """SKVQ inapplicability is enforced, not silently ignored."""
+    cfg = configs.get_smoke("rwkv6_3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        T.collect_kv(params, cfg, {"tokens": jnp.zeros((1, 16), jnp.int32)})
