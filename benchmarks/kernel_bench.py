@@ -1,10 +1,15 @@
-"""Kernel-level benchmark: packed-vs-fp16 decode attention byte traffic.
+"""Kernel/backend benchmark: packed-vs-fp16 byte traffic + decode backends.
 
 No TPU in this container, so instead of wall clock we compare the two
 compiled artifacts' HLO cost analysis and argument byte counts: the packed
 path's cache operand bytes must be ~8× smaller (the paper's bandwidth win).
 CPU timings of the jitted jnp paths are reported as us_per_call for
 completeness (directional only; noted in EXPERIMENTS.md).
+
+Beyond the bare kernel, this suite drives the *full* ``decode_step`` through
+each registered decode backend (reference jnp vs pallas interpret/compiled)
+and times the scanned multi-token engine at different sync granularities, so
+a backend regression in the served path — not just the kernel — shows up.
 """
 from __future__ import annotations
 
@@ -39,13 +44,72 @@ def _packed_attn(q, k_qt, v_qt, policy):
     return jnp.einsum("bhgt,bhtd->bhgd", p, v)
 
 
-def run(emit):
+def _bench_decode_step_backends(emit, smoke: bool):
+    """reference vs pallas through the FULL decode_step (not the bare kernel)."""
+    from repro import configs
+    from repro.core.policy import QuantPolicy as QP
+    from repro.models import transformer as T
+    from repro.models import backends as BK
+    from repro.serving import ServeSession
+
+    rng = np.random.default_rng(1)
+    cfg = configs.get_smoke("llama3p2_1b")
+    pol = QP(bits_k=2.0, bits_v=1.5, group_size=min(64, cfg.head_dim),
+             window=16, n_sink=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    s, reps = (32, 2) if smoke else (96, 3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, s)), jnp.int32)
+    _, caches = T.prefill_model(params, cfg, {"tokens": toks}, pol,
+                                max_len=s + 32)
+    nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 1)), jnp.int32)
+
+    outs = {}
+    for name in BK.available_backends():
+
+        @jax.jit
+        def step(p, t, c, _bk=BK.get_backend(name)):
+            return T.decode_step(p, cfg, t, c, pol, backend=_bk)
+
+        logits, _ = step(params, nxt, caches)
+        logits.block_until_ready()
+        t0 = time.time()
+        for _ in range(reps):
+            logits, _ = step(params, nxt, caches)
+            logits.block_until_ready()
+        us = (time.time() - t0) / reps * 1e6
+        outs[name] = np.asarray(logits)
+        note = ("interpret-mode (CPU correctness path, not perf)"
+                if name == "pallas" and jax.default_backend() != "tpu"
+                else "compiled")
+        emit(C.csv_row(f"decode_step_backend_{name}", us, note))
+    drift = float(np.abs(outs["pallas"] - outs["reference"]).max())
+    emit(C.csv_row("decode_step_backend_drift", 0.0,
+                   f"max_abs_logit_diff={drift:.2e} (gate: 2e-2)"))
+    if drift > 2e-2:  # hard gate: run.py reports the suite failed (exit 1)
+        raise AssertionError(f"backend parity drift {drift:.3e} > 2e-2")
+
+    # scanned engine: host syncs per generated token vs per chunk
+    max_new = 8 if smoke else 16
+    prompts = np.asarray(rng.integers(0, cfg.vocab_size, (2, s)), np.int32)
+    for n_sync in (1, max_new):
+        sess = ServeSession(params, cfg, pol, batch_slots=2, max_len=s + 32,
+                            steps_per_sync=n_sync)
+        sess.generate(prompts, max_new=max_new)  # compile + warm
+        t0 = time.time()
+        out = sess.generate(prompts, max_new=max_new)
+        us = (time.time() - t0) * 1e6
+        emit(C.csv_row(f"engine_generate_sync{n_sync}", us,
+                       f"max_new={max_new},host_syncs~{-(-max_new // n_sync)}"))
+
+
+def run(emit, smoke: bool = False):
     rng = np.random.default_rng(0)
     pol = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=128, window=0,
                       n_sink=0)
+    s_full = 512 if smoke else S
     q = jnp.asarray(rng.normal(size=(B, H, GQ, D)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
-    v = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, s_full, H, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, s_full, H, D)), jnp.bfloat16)
     k_qt = quantize_groups(k, pol.bits_k, pol.group_size)
     v_qt = quantize_groups(v, pol.bits_v, pol.group_size)
 
@@ -68,7 +132,7 @@ def run(emit):
     cq = fpk.lower(q, k_qt, v_qt).compile()
     a16 = c16.memory_analysis().argument_size_in_bytes
     aq = cq.memory_analysis().argument_size_in_bytes
-    cache16 = 2 * B * S * H * D * 2
+    cache16 = 2 * B * s_full * H * D * 2
     cacheq = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                  for x in list(k_qt.values()) + list(v_qt.values()))
     emit(C.csv_row("kernel_fp16_attn", t_fp,
@@ -79,3 +143,5 @@ def run(emit):
     emit(C.csv_row("kernel_hbm_win", 0.0,
                    f"operand_reduction={(a16)/(aq):.2f}x "
                    f"(TPU kernel reads packed bytes only)"))
+
+    _bench_decode_step_backends(emit, smoke)

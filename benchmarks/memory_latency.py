@@ -42,7 +42,10 @@ def decode_step_time(cfg, batch, seq, policy, n_params):
     return t, pbytes + kv
 
 
-def run(emit):
+T_SYNC = 0.5e-3     # host round-trip per decode sync (dispatch + D2H copy)
+
+
+def run(emit, smoke: bool = False):
     cfg = configs.get("llama2_7b")
     n_params = 6.74e9
     kv2 = PAPER_POLICY                       # K2V1.5 g128 fp8
@@ -63,6 +66,19 @@ def run(emit):
     sp = rows[(128, 200000)][0] / rows[(128, 200000)][2]
     emit(C.csv_row("table6_paper_7x_claim", 0.0,
                    f"b128_s200k_speedup={sp:.2f}x (paper: ~7x)"))
+
+    # scanned multi-token decode: the engine syncs with the host once per N
+    # tokens (serving/engine.make_multi_decode_fn); per-token syncing adds a
+    # full host round-trip to every step, which dominates exactly when SKVQ
+    # has made the device step cheap.
+    for batch, seq in ((1, 32768), (64, 131072)):
+        t2 = rows[(batch, seq)][2]
+        per_tok = {n: t2 + T_SYNC / n for n in (1, 8, 32)}
+        emit(C.csv_row(
+            f"scan_sync_amortization_b{batch}_s{seq}", per_tok[1] * 1e6,
+            f"tok_ms_N1={per_tok[1]*1e3:.2f},tok_ms_N8={per_tok[8]*1e3:.2f},"
+            f"tok_ms_N32={per_tok[32]*1e3:.2f},"
+            f"speedup_N32={per_tok[1]/per_tok[32]:.2f}x"))
 
     # max context at batch 1 on one 80GB device (paper's 1M-token claim)
     for name, pol in (("fp16", None), ("kv4", kv4), ("kv2", kv2)):

@@ -17,6 +17,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,table4,fig5,table6,kernel")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (analytic table6 + shrunk kernel/"
+                         "backend benches); suites honoring it get smoke=True")
     args = ap.parse_args(argv)
 
     from . import (quality_ladder, component_ablation, group_window,
@@ -29,19 +32,28 @@ def main(argv=None) -> None:
         "table6": memory_latency.run,        # + App. 9
         "kernel": kernel_bench.run,
     }
-    pick = set(args.only.split(",")) if args.only else set(suites)
+    if args.only:
+        pick = set(args.only.split(","))
+    elif args.smoke:
+        pick = {"table6", "kernel"}
+    else:
+        pick = set(suites)
     print("name,us_per_call,derived")
 
     def emit(row: str):
         print(row, flush=True)
 
+    import inspect
     t0 = time.time()
     failures = []
     for name, fn in suites.items():
         if name not in pick:
             continue
         try:
-            fn(emit)
+            if "smoke" in inspect.signature(fn).parameters:
+                fn(emit, smoke=args.smoke)
+            else:
+                fn(emit)
         except Exception as e:  # keep the harness going; report at the end
             failures.append((name, repr(e)))
             emit(f"{name}_FAILED,0.0,{type(e).__name__}")

@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import segments as seg
 from .policy import QuantPolicy
 from .quant import quantize_groups, dequantize_groups, plane_layout
 
@@ -81,12 +82,17 @@ def _split_q(cache: Cache, pref: str):
 
 def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
             alpha_k: Optional[jnp.ndarray] = None,
-            alpha_v: Optional[jnp.ndarray] = None) -> Cache:
+            alpha_v: Optional[jnp.ndarray] = None, quant_fn=None) -> Cache:
     """Build a cache from prefill K/V of shape (B, S, H_kv, D), S <= max_len.
 
     K/V are already channel-reordered (the permutation lives in the fused
     projection weights).  alpha_*: (H_kv, G_total) calibrated clip factors.
+    ``quant_fn(x, bits, group_size, alpha, fp8_meta) -> QTensor`` overrides the
+    quantizer (decode backends route it through the fused Pallas kernel so
+    quantization and attention share one layout contract); default is the
+    pure-jnp :func:`repro.core.quant.quantize_groups`.
     """
+    qf = quant_fn or quantize_groups
     b, s, h, d = k.shape
     dtype = k.dtype
     w, ns = policy.window, policy.n_sink
@@ -110,10 +116,8 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
     qc = max(0, s - ns - w)
     if qc > 0:
         gsz = min(policy.group_size, d)
-        qk = quantize_groups(k[:, ns:ns + qc], policy.bits_k, gsz,
-                             alpha_k, policy.fp8_meta)
-        qv = quantize_groups(v[:, ns:ns + qc], policy.bits_v, gsz,
-                             alpha_v, policy.fp8_meta)
+        qk = qf(k[:, ns:ns + qc], policy.bits_k, gsz, alpha_k, policy.fp8_meta)
+        qv = qf(v[:, ns:ns + qc], policy.bits_v, gsz, alpha_v, policy.fp8_meta)
         for name, qt in (("qk", qk), ("qv", qv)):
             for kk, vv in qt.items():
                 full = cache[f"{name}_{kk}"]
@@ -128,8 +132,13 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
 def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                   policy: QuantPolicy,
                   alpha_k: Optional[jnp.ndarray] = None,
-                  alpha_v: Optional[jnp.ndarray] = None) -> Cache:
-    """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one."""
+                  alpha_v: Optional[jnp.ndarray] = None, quant_fn=None) -> Cache:
+    """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one.
+
+    ``quant_fn`` as in :func:`prefill` — lets the pallas backend fuse the
+    per-step quantize+pack of the token sliding out of the window.
+    """
+    qf = quant_fn or quantize_groups
     b, _, h, d = k_new.shape
     w, ns = policy.window, policy.n_sink
     t = cache["length"]
@@ -152,8 +161,8 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             idx = jnp.clip(u_e, 0, sq - 1)
             ek = jax.lax.dynamic_slice_in_dim(cache["win_k"], slot, 1, axis=1)
             ev = jax.lax.dynamic_slice_in_dim(cache["win_v"], slot, 1, axis=1)
-            qk = quantize_groups(ek, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
-            qv = quantize_groups(ev, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
+            qk = qf(ek, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
+            qv = qf(ev, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
             do_write = u_e >= 0
             for name, qt in (("qk", qk), ("qv", qv)):
                 for kk, vv in qt.items():
@@ -181,8 +190,8 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         u = jnp.maximum(t - ns, 0)
         sq = cache["qk_codes_hi"].shape[1]
         idx = jnp.clip(u, 0, sq - 1)
-        qk = quantize_groups(k_new, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
-        qv = quantize_groups(v_new, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
+        qk = qf(k_new, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
+        qv = qf(v_new, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
         for name, qt in (("qk", qk), ("qv", qv)):
             for kk, vv in qt.items():
                 cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice_in_dim(
@@ -219,32 +228,28 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
     if ns > 0:
         ks.append(cache["sink_k"].astype(dtype))
         vs.append(cache["sink_v"].astype(dtype))
-        p = jnp.arange(ns, dtype=jnp.int32)
+        p, stored = seg.sink_segment(ns, t_total)
         pos.append(p)
-        val.append(p < t_total)
+        val.append(stored)
 
     if "qk_codes_hi" in cache and cache["qk_codes_hi"].shape[1] > 0:
         kq = dequantize_groups(_split_q(cache, "qk"), head_dim, policy.bits_k,
                                gsz, policy.fp8_meta, dtype)
         vq = dequantize_groups(_split_q(cache, "qv"), head_dim, policy.bits_v,
                                gsz, policy.fp8_meta, dtype)
-        sq = kq.shape[1]
         ks.append(kq)
         vs.append(vq)
-        j = jnp.arange(sq, dtype=jnp.int32)
-        qc = jnp.maximum(t_total - ns - w, 0)  # number of quantized tokens
-        pos.append(ns + j)
-        val.append(j < qc)
+        j = jnp.arange(kq.shape[1], dtype=jnp.int32)
+        p, stored = seg.packed_segment(j, t_total, ns, w)
+        pos.append(p)
+        val.append(stored)
 
     if w > 0:
         ks.append(cache["win_k"].astype(dtype))
         vs.append(cache["win_v"].astype(dtype))
-        s = jnp.arange(w, dtype=jnp.int32)
-        u_last = t_total - 1 - ns  # u-index of newest token
-        u_s = u_last - ((u_last - s) % w)
-        p = u_s + ns
-        pos.append(p.astype(jnp.int32))
-        val.append((u_s >= 0) & (u_s > u_last - w) & (p < t_total))
+        p, stored = seg.window_segment(w, ns, t_total)
+        pos.append(p)
+        val.append(stored)
 
     return (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1),
             jnp.concatenate(pos), jnp.concatenate(val))

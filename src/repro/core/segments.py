@@ -1,0 +1,119 @@
+"""Shared index math + flash partials for the SKVQ segment layout.
+
+Single source of truth for the ``[sinks, quantized, window]`` token ordering
+(DESIGN.md §1).  Before this module the position/validity arithmetic lived in
+three hand-maintained copies — ``kv_cache.gather_attention_inputs``, the
+reference ``attention.decode_attention_skvq``, and the Pallas wrapper in
+``kernels.ops`` — which is exactly the kind of triplication that silently
+drifts.  Both decode backends and the cache container now import from here.
+
+Conventions
+-----------
+* ``length`` is the number of tokens currently *stored* in the cache buffers
+  (``cache["length"]``).  All positions are absolute token indices.
+* Segment helpers return ``(positions, stored)`` where ``stored`` says "this
+  buffer slot holds a real token"; causality/locality against the query is a
+  separate concern (:func:`attend_ok`) because the pre-append decode path
+  queries from a position not yet in the buffers.
+* The ring slot of absolute token ``t`` is ``(t - n_sink) % window``.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+NEG = -1e30
+_NO_WINDOW = 2 ** 30
+
+
+def effective_window(window) -> jnp.ndarray:
+    """Traced-scalar local window: 0 (or None) means unlimited."""
+    w = jnp.int32(0) if window is None else window
+    return jnp.where(w > 0, w, jnp.int32(_NO_WINDOW))
+
+
+def quantized_count(length, n_sink: int, window: int) -> jnp.ndarray:
+    """Number of tokens actually written to the packed region."""
+    return jnp.maximum(length - n_sink - window, 0)
+
+
+def sink_segment(n_sink: int, length) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Positions/stored-mask of the fp sink buffer (absolute [0, n_sink))."""
+    p = jnp.arange(n_sink, dtype=jnp.int32)
+    return p, p < length
+
+
+def packed_segment(j, length, n_sink: int, window: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Positions/stored-mask for packed-region slots ``j`` (u-indices)."""
+    pos = (n_sink + j).astype(jnp.int32)
+    return pos, j < quantized_count(length, n_sink, window)
+
+
+def window_segment(window: int, n_sink: int, length
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Positions/stored-mask of the fp ring buffer, slot-ordered.
+
+    Slot ``s`` holds the newest absolute token ``t`` with
+    ``(t - n_sink) % window == s``; a slot is stored iff that token is within
+    the last ``window`` tokens and at/after the sink boundary.
+    """
+    sl = jnp.arange(window, dtype=jnp.int32)
+    u_last = length - 1 - n_sink            # u-index of the newest stored token
+    u_s = u_last - ((u_last - sl) % window)
+    pos = (u_s + n_sink).astype(jnp.int32)
+    stored = (u_s >= 0) & (u_s > u_last - window) & (pos < length)
+    return pos, stored
+
+
+def attend_ok(pos, stored, t_now, window_eff) -> jnp.ndarray:
+    """Final attendability: stored ∧ causal ∧ inside the local band."""
+    dlt = t_now - pos
+    return stored & (dlt >= 0) & (dlt < window_eff)
+
+
+# --------------------------------------------------- flash-style partials
+
+def softcap(x, cap: float):
+    """Gemma-style logit soft-capping (identity when cap <= 0)."""
+    if cap and cap > 0:
+        return cap * jnp.tanh(x / cap)
+    return x
+
+
+def partial_attend(qg, keys, values, ok, scale, cap: float = 0.0
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Unnormalized attention over one segment.
+
+    qg: (B, Hkv, Gq, D); keys/values: (B, T, Hkv, D); ok: (T,) bool.
+    Returns the flash triple (num (B,Hkv,Gq,D), m (B,Hkv,Gq), l (B,Hkv,Gq)).
+    """
+    k = jnp.swapaxes(keys, 1, 2).astype(jnp.float32)
+    v = jnp.swapaxes(values, 1, 2).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, k)
+    s = softcap(s, cap)
+    s = jnp.where(ok[None, None, None, :], s, NEG)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    return jnp.einsum("bhgt,bhtd->bhgd", p, v), m, p.sum(axis=-1)
+
+
+def merge_partials(a, b):
+    """Online-softmax merge of two (num, m, l) partials."""
+    num_a, m_a, l_a = a
+    num_b, m_b, l_b = b
+    m = jnp.maximum(m_a, m_b)
+    wa = jnp.exp(m_a - m)
+    wb = jnp.exp(m_b - m)
+    return (num_a * wa[..., None] + num_b * wb[..., None],
+            m, l_a * wa + l_b * wb)
+
+
+def finalize(parts: List[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]]
+             ) -> jnp.ndarray:
+    """Merge flash partials and normalize -> (B, Hkv, Gq, D)."""
+    num, m, l = parts[0]
+    for pt in parts[1:]:
+        num, m, l = merge_partials((num, m, l), pt)
+    return num / jnp.maximum(l, 1e-30)[..., None]

@@ -55,8 +55,8 @@ def int8_allreduce_pod(x: jnp.ndarray, mesh) -> jnp.ndarray:
         brd = ss.reshape((ss.shape[0],) + (1,) * g.ndim)
         return (qs.astype(jnp.float32) * brd).mean(0).astype(x.dtype)
 
-    return jax.shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P(),
-                         axis_names={"pod"}, check_vma=False)(x)
+    from .sharding import shard_map_compat
+    return shard_map_compat(inner, mesh, P(), P(), {"pod"})(x)
 
 
 def int8_allreduce_tree(tree, mesh):

@@ -59,7 +59,7 @@ def _dequant_tile(refs, off, layout, fp8_meta):
 
 
 def _kernel(q_ref, mask_ref, *refs, layout_k, layout_v, fp8_meta, scale,
-            n_sblocks):
+            softcap, n_sblocks):
     nk = 3 * len(layout_k)
     k_refs = refs[:nk]
     v_refs = refs[nk:nk + 3 * len(layout_v)]
@@ -80,11 +80,16 @@ def _kernel(q_ref, mask_ref, *refs, layout_k, layout_v, fp8_meta, scale,
     mask = mask_ref[...][:, 0]                            # (BS,)
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Gq, BS)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
     s = jnp.where(mask[None, :] > 0, s, _NEG)
 
     m_prev = m_sc[...]                                    # (Gq, 1)
     m_cur = jnp.maximum(m_prev[:, 0], s.max(axis=-1))     # (Gq,)
-    p = jnp.exp(s - m_cur[:, None])
+    # multiply by the mask so a fully-masked tile (e.g. padding past the
+    # packed region) contributes exactly zero weight instead of exp(0)=1
+    # per lane when m_cur is still _NEG.
+    p = jnp.exp(s - m_cur[:, None]) * mask[None, :]
     alpha = jnp.exp(m_prev[:, 0] - m_cur)                 # rescale old acc
     l_sc[...] = (l_sc[...][:, 0] * alpha + p.sum(axis=-1))[:, None]
     acc[...] = acc[...] * alpha[:, None] + jnp.dot(
@@ -101,12 +106,13 @@ def _kernel(q_ref, mask_ref, *refs, layout_k, layout_v, fp8_meta, scale,
 def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
                        mask: jnp.ndarray, policy: QuantPolicy, head_dim: int,
                        scale: float, interpret: bool = True,
-                       block_s: int = BLOCK_S
+                       block_s: int = BLOCK_S, softcap: float = 0.0
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns flash triple (num (B,H,Gq,D), m (B,H,Gq,1), l (B,H,Gq,1)).
 
     k_qt/v_qt leaves have shape (B, S, Hkv, ...) (cache layout) — transposed
     here to (B, Hkv, S, ...) tile order.  ``mask``: (S,) float validity.
+    ``softcap`` > 0 applies the gemma-style tanh logit cap in-kernel.
     """
     b, hkv, gq, d = q.shape
     s_len = k_qt["codes_hi"].shape[1]
@@ -147,17 +153,20 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
                pltpu.VMEM((gq, 1), jnp.float32)]
     n_sblocks = s_len // block_s
 
+    # jax renamed TPUCompilerParams -> CompilerParams across releases
+    params_cls = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
     num, m, l = pl.pallas_call(
         functools.partial(_kernel, layout_k=layout_k, layout_v=layout_v,
                           fp8_meta=policy.fp8_meta, scale=scale,
-                          n_sblocks=n_sblocks),
+                          softcap=softcap, n_sblocks=n_sblocks),
         grid=(b * hkv, n_sblocks),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=params_cls(
             dimension_semantics=("parallel", "arbitrary")),
     )(*ins)
     return num, m[..., 0:1], l[..., 0:1]

@@ -59,7 +59,7 @@ def _kernel(x_ref, alpha_ref, *out_refs, layout, fp8_meta):
         xg = xp.reshape(t, g, gs)
         lo = xg.min(axis=-1)
         hi = xg.max(axis=-1)
-        a = alpha_ref[0, g_off:g_off + g]
+        a = alpha_ref[:, g_off:g_off + g]      # (1, G) shared or (BT, G) rows
         lo = lo * a
         hi = hi * a
         h = jnp.maximum((hi - lo) / (2 ** bits - 1), _EPS)
@@ -79,8 +79,11 @@ def kv_quant_pallas(x: jnp.ndarray, bits: float, group_size: int,
                     interpret: bool = True, block_t: int = BLOCK_T):
     """x: (N, D) tokens -> QTensor dict matching repro.core.quant layout.
 
-    N must divide by block_t (wrapper pads). Validated in interpret mode on
-    CPU; compiled path targets TPU v5e VMEM tiles of (block_t, D).
+    N must divide by block_t (wrapper pads). ``alpha`` may be a scalar,
+    (G_total,) shared clip factors, or (N, G_total) per-row factors (used by
+    the serving path, where rows are (batch·head) tokens with per-head
+    calibration).  Validated in interpret mode on CPU; compiled path targets
+    TPU v5e VMEM tiles of (block_t, D).
     """
     n, d = x.shape
     assert n % block_t == 0, (n, block_t)
@@ -88,7 +91,13 @@ def kv_quant_pallas(x: jnp.ndarray, bits: float, group_size: int,
     g_total = sum(w // gs for (_, w, _, gs) in layout)
     if alpha is None:
         alpha = jnp.ones((g_total,), jnp.float32)
-    alpha = jnp.broadcast_to(alpha.astype(jnp.float32), (g_total,)).reshape(1, g_total)
+    alpha = alpha.astype(jnp.float32)
+    if alpha.ndim < 2:  # shared factors: one (1, G) block reused per grid step
+        alpha = jnp.broadcast_to(alpha, (g_total,)).reshape(1, g_total)
+        alpha_spec = pl.BlockSpec((1, g_total), lambda i: (0, 0))
+    else:               # per-row factors (serving path: per-head calibration)
+        alpha = jnp.broadcast_to(alpha, (n, g_total))
+        alpha_spec = pl.BlockSpec((block_t, g_total), lambda i: (i, 0))
 
     meta_dt = jnp.uint8 if fp8_meta else jnp.float16
     out_shapes, out_specs, names = [], [], []
@@ -105,8 +114,7 @@ def kv_quant_pallas(x: jnp.ndarray, bits: float, group_size: int,
     outs = pl.pallas_call(
         functools.partial(_kernel, layout=layout, fp8_meta=fp8_meta),
         grid=(n // block_t,),
-        in_specs=[pl.BlockSpec((block_t, d), lambda i: (i, 0)),
-                  pl.BlockSpec((1, g_total), lambda i: (0, 0))],
+        in_specs=[pl.BlockSpec((block_t, d), lambda i: (i, 0)), alpha_spec],
         out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,

@@ -1,9 +1,18 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels.
 
-``skvq_decode_attention`` is a drop-in alternative to the pure-jnp reference
-path in ``repro.models.attention.decode_attention_skvq``: the packed segment
+:func:`pallas_decode_attention` is the "pallas" decode backend
+(``repro.models.backends``): a drop-in replacement for the pure-jnp reference
+path in ``repro.models.attention.decode_attention_skvq``.  The packed segment
 goes through the fused dequant+flash kernel; the (tiny) fp sink/window
-segments run in plain jnp; the three partials merge by logsumexp.
+segments (plus the pre-append extra token) run in plain jnp; all partials
+merge by logsumexp.  Segment index math comes from ``repro.core.segments`` —
+the same source the reference path and the cache container use, so the two
+backends share one layout contract.
+
+:func:`make_kernel_quant_fn` routes the cache-side group quantize through the
+fused pack kernel (``kv_quant_pallas``); it is bit-exact against
+``repro.core.quant.quantize_groups`` so either quantizer can feed either
+attention backend.
 """
 from __future__ import annotations
 
@@ -14,19 +23,37 @@ import jax
 import jax.numpy as jnp
 
 from ..core.policy import QuantPolicy
-from ..core import kv_cache as kvc
+from ..core.quant import n_meta_groups
+from ..core import segments as seg
 from .decode_attn import decode_attn_pallas, BLOCK_S
 from .kv_quant import kv_quant_pallas
-from . import ref as R
+
+# bit pattern of float8_e4m3fn(1.0): sign 0, exponent 0111 (bias 7), mantissa 0
+_FP8_ONE = 0x38
+_FAR = 2 ** 30  # position sentinel for padded slots (always masked out)
 
 
-def _pad_to(x, s_to, axis=1):
+def _pad_to(x, s_to, axis=1, fill=0):
     pad = s_to - x.shape[axis]
     if pad <= 0:
         return x
     cfgp = [(0, 0)] * x.ndim
     cfgp[axis] = (0, pad)
-    return jnp.pad(x, cfgp)
+    return jnp.pad(x, cfgp, constant_values=fill)
+
+
+def _pad_planes(qt: dict, s_pad: int, fp8_meta: bool) -> dict:
+    """Pad packed planes along the token axis to a block multiple.
+
+    Scale planes are padded with the encoding of 1.0, NOT zero: a scale=0
+    group is a degenerate quantization step that only stayed harmless because
+    every padded slot also happened to be masked.  With a real nonzero scale
+    the dequantized padding is ordinary finite data regardless of masking.
+    """
+    one = _FP8_ONE if fp8_meta else jnp.float16(1.0)
+    return {k: _pad_to(v, s_pad, axis=1,
+                       fill=(one if k.startswith("scale") else 0))
+            for k, v in qt.items()}
 
 
 def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=True):
@@ -40,67 +67,147 @@ def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=True):
                            interpret=interpret, block_t=max(blk, 1))
 
 
+def make_kernel_quant_fn(interpret: bool = True):
+    """Build a ``quant_fn`` for ``kv_cache.prefill`` / ``decode_append``.
+
+    Flattens the leading (batch, seq, head) axes to kernel rows, tiles the
+    per-head clip factors to per-row factors, and calls the fused
+    quantize+pack kernel.  Bit-exact vs ``quantize_groups`` (asserted in
+    tests/test_backends.py), so caches built by either quantizer are
+    interchangeable between backends.
+    """
+    def quant_fn(x, bits, group_size, alpha, fp8_meta):
+        *lead, d = x.shape
+        n = 1
+        for s in lead:
+            n *= s
+        rows = x.reshape(n, d)
+        a_rows = None
+        if alpha is not None:
+            g_total = n_meta_groups(d, bits, min(group_size, d))
+            a_rows = jnp.broadcast_to(alpha, (*lead, g_total)).reshape(n, g_total)
+        blk = min(128, n)
+        while n % blk:
+            blk -= 1
+        qt = kv_quant_pallas(rows, bits, min(group_size, d), alpha=a_rows,
+                             fp8_meta=fp8_meta, interpret=interpret,
+                             block_t=blk)
+        return {k: v.reshape(*lead, v.shape[-1]) for k, v in qt.items()}
+    return quant_fn
+
+
+def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
+                            softcap: float = 0.0, window=None,
+                            dtype=jnp.bfloat16, chunk: int = 0,
+                            local_slice: int = 0, packed_override=None,
+                            extra_kv=None, q_pos=None, interpret: bool = True,
+                            block_s: int = BLOCK_S):
+    """Fused-kernel decode over the SKVQ cache.
+
+    Interface mirrors the reference ``decode_attention_skvq`` (same cache
+    dict, traced ``window`` scalar, ``local_slice``/``packed_override`` perf
+    levers, pre-append ``extra_kv``/``q_pos``); GQA/MQA via the Gq axis.
+    ``chunk`` is accepted for signature parity but ignored — the kernel always
+    streams ``block_s``-token tiles with an online-softmax accumulator, so the
+    dequantized cache never materializes.
+
+    q: (B, 1, Hq, D) -> (B, 1, Hq, D).
+    """
+    w, ns = policy.window, policy.n_sink
+    t_now = cache["length"] - 1 if q_pos is None else q_pos
+    b, _, hq, d = q.shape
+    weff = seg.effective_window(window)
+
+    if policy.is_fp16:
+        # fp16 baseline fallback: nothing is packed, so there is no fused
+        # kernel to run — attend over the dense cache with the shared flash
+        # partial (same math the reference backend uses).
+        hkv = cache["k"].shape[2]
+        qg = q.reshape(b, hkv, hq // hkv, d)
+        pos = jnp.arange(cache["k"].shape[1])
+        ok = seg.attend_ok(pos, pos < cache["length"], t_now, weff)
+        part = seg.partial_attend(qg, cache["k"].astype(dtype),
+                                  cache["v"].astype(dtype), ok, scale, softcap)
+        return seg.finalize([part]).reshape(b, 1, hq, d).astype(q.dtype)
+
+    hkv = (cache.get("win_k") if cache.get("win_k") is not None
+           else cache["qk_codes_hi"]).shape[2]
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    parts = []
+
+    s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
+    if s_q > 0:
+        qc = seg.quantized_count(cache["length"], ns, w)
+        if packed_override is not None:
+            # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
+            k_qt, v_qt, j = packed_override
+        else:
+            k_qt = {kk[3:]: vv for kk, vv in cache.items()
+                    if kk.startswith("qk_")}
+            v_qt = {kk[3:]: vv for kk, vv in cache.items()
+                    if kk.startswith("qv_")}
+            if local_slice and s_q > local_slice:
+                start = jnp.clip(qc - local_slice, 0, s_q - local_slice)
+                k_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
+                                                         local_slice, 1)
+                        for kk, vv in k_qt.items()}
+                v_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
+                                                         local_slice, 1)
+                        for kk, vv in v_qt.items()}
+                j = start + jnp.arange(local_slice)
+            else:
+                j = jnp.arange(k_qt["codes_hi"].shape[1])
+        s_eff = k_qt["codes_hi"].shape[1]
+        bs = min(block_s, max(s_eff, 8))
+        s_pad = -(-s_eff // bs) * bs
+        k_qt = _pad_planes(k_qt, s_pad, policy.fp8_meta)
+        v_qt = _pad_planes(v_qt, s_pad, policy.fp8_meta)
+        j = _pad_to(jnp.asarray(j, jnp.int32), s_pad, axis=0, fill=_FAR)
+        pos_q, stored_q = seg.packed_segment(j, cache["length"], ns, w)
+        ok = seg.attend_ok(pos_q, stored_q, t_now, weff)
+        num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
+                                       policy, d, scale, interpret=interpret,
+                                       block_s=bs, softcap=softcap)
+        parts.append((num, m[..., 0], l[..., 0]))
+
+    # fp segments: sinks + sliding-window ring (+ pre-append current token)
+    ks, vs, pos, valid = [], [], [], []
+    if ns > 0 and "sink_k" in cache:
+        ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
+        p, stored = seg.sink_segment(ns, cache["length"])
+        pos.append(p); valid.append(stored)
+    if w > 0 and "win_k" in cache:
+        ks.append(cache["win_k"]); vs.append(cache["win_v"])
+        p, stored = seg.window_segment(w, ns, cache["length"])
+        pos.append(p); valid.append(stored)
+    if extra_kv is not None:
+        k1, v1, p1 = extra_kv
+        ks.append(k1); vs.append(v1)
+        pos.append(jnp.asarray(p1).reshape(1))
+        valid.append(jnp.ones((1,), bool))
+    if ks:
+        kf = jnp.concatenate(ks, axis=1).astype(dtype)
+        vf = jnp.concatenate(vs, axis=1).astype(dtype)
+        ok = seg.attend_ok(jnp.concatenate(pos), jnp.concatenate(valid),
+                           t_now, weff)
+        parts.append(seg.partial_attend(qg, kf, vf, ok, scale, softcap))
+
+    return seg.finalize(parts).reshape(b, 1, hq, d).astype(q.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("policy", "head_dim", "scale",
                                              "window", "interpret", "block_s"))
 def skvq_decode_attention(q, cache, policy: QuantPolicy, head_dim: int,
                           scale: float, window: int = 0, interpret: bool = True,
                           block_s: int = BLOCK_S):
-    """q: (B, 1, Hq, D); cache: SKVQ cache dict. Returns (B, 1, Hq, D).
+    """Legacy jit'd entry point (pre-backend API).
 
-    The packed segment is consumed by the fused kernel; sinks+window (fp)
-    are attended in jnp and merged flash-style.
+    Prefer :func:`pallas_decode_attention` or the ``"pallas"`` backend in
+    ``repro.models.backends``, which additionally thread softcap, GQA config
+    and the pre-append decode protocol.
     """
-    b, _, hq, d = q.shape
-    ns, w = policy.n_sink, policy.window
-    t_now = cache["length"] - 1
-    hkv = cache["qk_codes_hi"].shape[2]
-    gq = hq // hkv
-    qg = q.reshape(b, hkv, gq, d) if hq == hkv * gq else None
-    qg = jnp.swapaxes(q.reshape(b, 1, hkv, gq, d)[:, 0], 0, 0)
-
-    parts = []
-    s_q = cache["qk_codes_hi"].shape[1]
-    if s_q > 0:
-        s_pad = -(-s_q // block_s) * block_s
-        k_qt = {k[3:]: _pad_to(v, s_pad) for k, v in cache.items()
-                if k.startswith("qk_")}
-        v_qt = {k[3:]: _pad_to(v, s_pad) for k, v in cache.items()
-                if k.startswith("qv_")}
-        j = jnp.arange(s_pad)
-        qc = jnp.maximum(t_now + 1 - ns - w, 0)
-        ok = j < qc
-        if window > 0:
-            ok = ok & (t_now - (ns + j) < window)
-        num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
-                                       policy, head_dim, scale,
-                                       interpret=interpret, block_s=block_s)
-        parts.append((num, m[..., 0], l[..., 0]))
-
-    # fp segments (sinks + sliding window) in plain jnp
-    ks, vs, pos, valid = [], [], [], []
-    if ns > 0 and "sink_k" in cache:
-        ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
-        p = jnp.arange(ns); pos.append(p); valid.append(p < t_now + 1)
-    if w > 0 and "win_k" in cache:
-        ks.append(cache["win_k"]); vs.append(cache["win_v"])
-        s = jnp.arange(w)
-        u_last = t_now - ns
-        u_s = u_last - ((u_last - s) % w)
-        p = u_s + ns
-        pos.append(p)
-        valid.append((u_s >= 0) & (u_s > u_last - w) & (p <= t_now))
-    if ks:
-        kf = jnp.swapaxes(jnp.concatenate(ks, axis=1), 1, 2).astype(jnp.float32)
-        vf = jnp.swapaxes(jnp.concatenate(vs, axis=1), 1, 2).astype(jnp.float32)
-        pf = jnp.concatenate(pos)
-        ok = jnp.concatenate(valid)
-        if window > 0:
-            ok = ok & (t_now - pf < window)
-        s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, kf)
-        s = jnp.where(ok[None, None, None, :], s, -1e30)
-        m = s.max(axis=-1)
-        p_ = jnp.exp(s - m[..., None])
-        parts.append((jnp.einsum("bhgt,bhtd->bhgd", p_, vf), m, p_.sum(axis=-1)))
-
-    out = R.merge_segments(parts)
-    return out.reshape(b, 1, hq, d).astype(q.dtype)
+    del head_dim  # derived from q
+    return pallas_decode_attention(q, cache, policy, scale=scale,
+                                   window=jnp.int32(window),
+                                   dtype=jnp.float32, interpret=interpret,
+                                   block_s=block_s)

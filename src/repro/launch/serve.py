@@ -31,6 +31,10 @@ def main(argv=None):
     ap.add_argument("--group-size", type=int, default=64)
     ap.add_argument("--window", type=int, default=32)
     ap.add_argument("--sinks", type=int, default=5)
+    ap.add_argument("--backend", default=None,
+                    help="decode backend: reference | pallas (default: host)")
+    ap.add_argument("--steps-per-sync", type=int, default=8,
+                    help="decode tokens per host sync (scanned decode)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -44,7 +48,8 @@ def main(argv=None):
 
     max_len = args.prompt_len + args.new_tokens + 8
     sess = ServeSession(params, cfg, policy, batch_slots=args.batch,
-                        max_len=max_len)
+                        max_len=max_len, backend=args.backend,
+                        steps_per_sync=args.steps_per_sync)
     t0 = time.time()
     out = sess.generate(prompts, max_new=args.new_tokens)
     dt = time.time() - t0

@@ -1,7 +1,11 @@
 """Model substrate: every assigned architecture family, in pure JAX."""
 from .config import ArchConfig
+from .backends import (DecodeBackend, ReferenceBackend, PallasBackend,
+                       available_backends, get_backend, resolve_backend)
 from .transformer import (init_params, forward_train, prefill_model,
                           decode_step, collect_kv, count_params)
 
 __all__ = ["ArchConfig", "init_params", "forward_train", "prefill_model",
-           "decode_step", "collect_kv", "count_params"]
+           "decode_step", "collect_kv", "count_params", "DecodeBackend",
+           "ReferenceBackend", "PallasBackend", "available_backends",
+           "get_backend", "resolve_backend"]

@@ -18,6 +18,7 @@ from .config import ArchConfig
 from .layers import softcap
 from ..core.policy import QuantPolicy
 from ..core import kv_cache as kvc
+from ..core import segments as seg
 from ..distributed.sharding import logical
 
 _NEG = -1e30
@@ -113,27 +114,14 @@ def decode_attention(q, keys, values, pos_k, valid, t_now, cfg: ArchConfig,
     return o.reshape(b, 1, hq, d).astype(q.dtype)
 
 
-def _merge_partials(a, b):
-    """Online-softmax merge of two (num, m, l) partials."""
-    num_a, m_a, l_a = a
-    num_b, m_b, l_b = b
-    m = jnp.maximum(m_a, m_b)
-    wa = jnp.exp(m_a - m)
-    wb = jnp.exp(m_b - m)
-    return (num_a * wa[..., None] + num_b * wb[..., None],
-            m, l_a * wa + l_b * wb)
+# flash partial/merge math lives in repro.core.segments (shared with the
+# Pallas wrapper in repro.kernels.ops)
+_merge_partials = seg.merge_partials
 
 
-def _segment_partial(qg, keys, values, pos, ok, scale, cfg):
+def _segment_partial(qg, keys, values, ok, scale, cfg):
     """Partial attention over one segment. qg: (B,Hkv,G,D); keys (B,T,Hkv,D)."""
-    k = jnp.swapaxes(keys, 1, 2).astype(jnp.float32)
-    v = jnp.swapaxes(values, 1, 2).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, k)
-    s = softcap(s, cfg.attn_softcap)
-    s = jnp.where(ok[None, None, None, :], s, _NEG)
-    m = s.max(axis=-1)
-    p = jnp.exp(s - m[..., None])
-    return jnp.einsum("bhgt,bhtd->bhgd", p, v), m, p.sum(axis=-1)
+    return seg.partial_attend(qg, keys, values, ok, scale, cfg.attn_softcap)
 
 
 def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
@@ -159,18 +147,17 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
     t_now = cache["length"] - 1 if q_pos is None else q_pos
     b, _, hq, d = q.shape
     scale = _scale(cfg)
-    weff_t = (jnp.int32(0) if window is None else window)
-    weff = jnp.where(weff_t > 0, weff_t, jnp.int32(2 ** 30))
+    weff = seg.effective_window(window)
 
     if policy.is_fp16:  # uncompressed-cache baseline
         hkv = cache["k"].shape[2]
         qg = q.reshape(b, hkv, hq // hkv, d)
         pos = jnp.arange(cache["k"].shape[1])
-        ok = (pos <= t_now) & (t_now - pos < weff)
+        ok = seg.attend_ok(pos, pos < cache["length"], t_now, weff)
         kf = logical(cache["k"], "batch", "kv_seq", "kv_heads", None)
         vf = logical(cache["v"], "batch", "kv_seq", "kv_heads", None)
         num, m, l = _segment_partial(qg, kf.astype(dtype), vf.astype(dtype),
-                                     pos, ok, scale, cfg)
+                                     ok, scale, cfg)
         out = num / jnp.maximum(l, 1e-30)[..., None]
         return out.reshape(b, 1, hq, d).astype(q.dtype)
 
@@ -183,7 +170,7 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
     if s_q > 0:
         # count of tokens actually WRITTEN to the packed region (pre-append
         # path: the current token is not in the buffers yet)
-        qc = jnp.maximum(cache["length"] - ns - w, 0)
+        qc = seg.quantized_count(cache["length"], ns, w)
         if packed_override is not None:
             # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
             k_qt, v_qt, j = packed_override
@@ -203,8 +190,8 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
                 j = start + jnp.arange(local_slice)
             else:
                 j = jnp.arange(k_qt["codes_hi"].shape[1])
-        pos_q = ns + j
-        ok_q = (j < qc) & (t_now - pos_q < weff) & (t_now - pos_q >= 0)
+        pos_q, stored_q = seg.packed_segment(j, cache["length"], ns, w)
+        ok_q = seg.attend_ok(pos_q, stored_q, t_now, weff)
         gsz = min(policy.group_size, d)
 
         def dq(qt, bits):
@@ -216,16 +203,16 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
             nc = sq_eff // chunk
 
             def body(carry, xs):
-                kq_c, vq_c, j_c, ok_c = xs
+                kq_c, vq_c, ok_c = xs
                 part = _segment_partial(
                     qg, dq(kq_c, policy.bits_k), dq(vq_c, policy.bits_v),
-                    j_c, ok_c, scale, cfg)
+                    ok_c, scale, cfg)
                 return _merge_partials(carry, part), None
 
             resh = lambda t: jnp.swapaxes(
                 t.reshape(t.shape[0], nc, chunk, *t.shape[2:]), 0, 1)
             xs = (jax.tree.map(resh, k_qt), jax.tree.map(resh, v_qt),
-                  j.reshape(nc, chunk), ok_q.reshape(nc, chunk))
+                  ok_q.reshape(nc, chunk))
             init = (jnp.zeros((b, hkv, hq // hkv, d), jnp.float32),
                     jnp.full((b, hkv, hq // hkv), _NEG, jnp.float32),
                     jnp.zeros((b, hkv, hq // hkv), jnp.float32))
@@ -236,24 +223,19 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
                            "batch", "kv_seq", "kv_heads", None)
             values = logical(dq(v_qt, policy.bits_v),
                              "batch", "kv_seq", "kv_heads", None)
-            parts.append(_segment_partial(qg, keys, values, pos_q, ok_q,
-                                          scale, cfg))
+            parts.append(_segment_partial(qg, keys, values, ok_q, scale, cfg))
 
     # fp segments: sinks + window ring (+ current token, already in the ring
     # on the append-first path, or passed via extra_kv on the pre-append path)
-    stored_last = cache["length"] - 1  # newest token actually in the buffers
     ks, vs, pos, valid = [], [], [], []
     if ns > 0 and "sink_k" in cache:
         ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
-        p = jnp.arange(ns); pos.append(p); valid.append(p <= stored_last)
+        p, stored = seg.sink_segment(ns, cache["length"])
+        pos.append(p); valid.append(stored)
     if w > 0 and "win_k" in cache:
         ks.append(cache["win_k"]); vs.append(cache["win_v"])
-        sl = jnp.arange(w)
-        u_last = stored_last - ns
-        u_s = u_last - ((u_last - sl) % w)
-        p = u_s + ns
-        pos.append(p)
-        valid.append((u_s >= 0) & (u_s > u_last - w) & (p <= stored_last))
+        p, stored = seg.window_segment(w, ns, cache["length"])
+        pos.append(p); valid.append(stored)
     if extra_kv is not None:
         k1, v1, p1 = extra_kv
         ks.append(k1); vs.append(v1)
@@ -262,14 +244,11 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
     if ks:
         kf = jnp.concatenate(ks, axis=1).astype(dtype)
         vf = jnp.concatenate(vs, axis=1).astype(dtype)
-        pf = jnp.concatenate(pos)
-        ok = jnp.concatenate(valid) & (t_now - jnp.concatenate(pos) < weff)
-        parts.append(_segment_partial(qg, kf, vf, pf, ok, scale, cfg))
+        ok = seg.attend_ok(jnp.concatenate(pos), jnp.concatenate(valid),
+                           t_now, weff)
+        parts.append(_segment_partial(qg, kf, vf, ok, scale, cfg))
 
-    num, m, l = parts[0]
-    for pt in parts[1:]:
-        num, m, l = _merge_partials((num, m, l), pt)
-    out = num / jnp.maximum(l, 1e-30)[..., None]
+    out = seg.finalize(parts)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
 

@@ -1,0 +1,154 @@
+"""Pluggable decode-attention backends (DESIGN.md §4).
+
+A :class:`DecodeBackend` answers one question — "given a query token and the
+SKVQ cache, what is the attention output?" — and optionally supplies the
+quantizer used when tokens slide out of the fp window, so attention and
+quantization always agree on the packed layout.
+
+Two implementations are registered:
+
+* ``"reference"`` — the pure-jnp path (``attention.decode_attention_skvq``).
+  Dequantizes through ``repro.core.quant`` and attends with the shared flash
+  partials.  Always available; the default on CPU hosts.
+* ``"pallas"`` — the fused dequant+flash kernel
+  (``repro.kernels.ops.pallas_decode_attention``).  The packed 2-bit K /
+  1.5-bit V planes stream straight into the kernel; the bf16 cache never
+  materializes in HBM.  Default on TPU hosts; on CPU it runs the kernel in
+  interpret mode (used by tests and the parity benchmarks).
+
+Selection: pass ``backend=`` to ``transformer.decode_step`` /
+``serving.ServeSession`` as a name, a backend instance, or None for the
+host-appropriate default.  Backends are frozen dataclasses so jitted step
+functions can close over them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from ..core.policy import QuantPolicy
+
+
+@runtime_checkable
+class DecodeBackend(Protocol):
+    """One decode-attention strategy over the SKVQ cache."""
+
+    name: str
+
+    def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
+               window=None, dtype=jnp.bfloat16, chunk: int = 0,
+               local_slice: int = 0, packed_override=None, extra_kv=None,
+               q_pos=None):
+        """q: (B, 1, Hq, D) against the cache dict -> (B, 1, Hq, D)."""
+        ...
+
+    def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
+        """Quantizer for ``kv_cache.prefill``/``decode_append`` (None = jnp)."""
+        ...
+
+
+_REGISTRY: Dict[str, Callable[..., "DecodeBackend"]] = {}
+
+
+def register_backend(name: str):
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_backends():
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str, **kwargs) -> DecodeBackend:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown decode backend {name!r}; "
+                         f"available: {available_backends()}")
+    return _REGISTRY[name](**kwargs)
+
+
+def default_backend_name() -> str:
+    """Pallas on TPU (compiled kernels); reference elsewhere — the interpret
+    -mode kernel is a correctness tool, not a fast CPU path."""
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def resolve_backend(backend: Union[None, str, DecodeBackend]) -> DecodeBackend:
+    if backend is None:
+        return get_backend(default_backend_name())
+    if isinstance(backend, str):
+        return get_backend(backend)
+    return backend
+
+
+# ------------------------------------------------------------------ reference
+
+@register_backend("reference")
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    """Pure-jnp dequantize -> attend (the paper-faithful oracle path)."""
+
+    name: str = "reference"
+
+    def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
+               window=None, dtype=jnp.bfloat16, chunk: int = 0,
+               local_slice: int = 0, packed_override=None, extra_kv=None,
+               q_pos=None):
+        from .attention import decode_attention_skvq
+        return decode_attention_skvq(
+            q, cache, cfg, policy, window=window, dtype=dtype, chunk=chunk,
+            local_slice=local_slice, packed_override=packed_override,
+            extra_kv=extra_kv, q_pos=q_pos)
+
+    def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
+        return None  # kv_cache defaults to repro.core.quant.quantize_groups
+
+
+# --------------------------------------------------------------------- pallas
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    """Fused dequant+flash decode kernel (+ optional fused quantize+pack).
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
+    ``kernel_quant`` additionally routes the window-eviction quantize through
+    ``kv_quant_pallas`` (bit-exact vs the jnp quantizer, so caches stay
+    backend-portable).
+    """
+
+    name: str = "pallas"
+    interpret: Optional[bool] = None
+    block_s: int = 256
+    kernel_quant: bool = False
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        return jax.default_backend() != "tpu"
+
+    def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
+               window=None, dtype=jnp.bfloat16, chunk: int = 0,
+               local_slice: int = 0, packed_override=None, extra_kv=None,
+               q_pos=None):
+        from ..kernels.ops import pallas_decode_attention
+        from .attention import _scale
+        scale = _scale(cfg)
+        return pallas_decode_attention(
+            q, cache, policy, scale=scale, softcap=cfg.attn_softcap,
+            window=window, dtype=dtype, chunk=chunk, local_slice=local_slice,
+            packed_override=packed_override, extra_kv=extra_kv, q_pos=q_pos,
+            interpret=self._interpret(), block_s=self.block_s)
+
+    def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
+        if not self.kernel_quant or policy.is_fp16:
+            return None
+        from ..kernels.ops import make_kernel_quant_fn
+        return make_kernel_quant_fn(interpret=self._interpret())
+
+
+register_backend("pallas")(PallasBackend)

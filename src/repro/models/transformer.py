@@ -25,7 +25,8 @@ import numpy as np
 
 from .config import ArchConfig
 from . import layers as L
-from .attention import full_attention, decode_attention_skvq, decode_attention_fp
+from . import backends as bk
+from .attention import full_attention
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from . import rwkv6 as rwkv_lib
@@ -429,10 +430,16 @@ def stacked_calib(calib, cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
 
 def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
                   policy: QuantPolicy, calib: Optional[Dict] = None,
-                  max_len: Optional[int] = None, dtype=None):
+                  max_len: Optional[int] = None, dtype=None, backend=None):
     """Paper Sec 3.2 prefill: full-precision attention, then quantize all but
     the last ``window`` tokens. Returns (last-token logits, caches dict with
-    a "scan" group and, for first_dense archs, a "dense" group)."""
+    a "scan" group and, for first_dense archs, a "dense" group).
+
+    ``backend`` (name | DecodeBackend | None): supplies the cache quantizer so
+    the built cache and the decode attention share one layout contract; the
+    attention itself runs in full precision here regardless (paper workflow).
+    """
+    quant_fn = bk.resolve_backend(backend).quant_fn(policy)
     params = _cast_params(params, dtype)
     x = _embed_in(params, cfg, batch)
     if dtype is not None:
@@ -481,7 +488,8 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
             kxp = _apply_perm(kx, cl["perm_k"])
             vxp = _apply_perm(vx, cl["perm_v"])
             xc = kvc.prefill(kxp.astype(cache_dtype), vxp.astype(cache_dtype),
-                             kx.shape[1], xpol, cl["alpha_k"], cl["alpha_v"])
+                             kx.shape[1], xpol, cl["alpha_k"], cl["alpha_v"],
+                             quant_fn=quant_fn)
             cache_extra.update({f"x_{k2}": v2 for k2, v2 in xc.items()})
         h2 = L.norm(h, p["norm2"], cfg)
         f, _ = _ffn(h2, p, cfg)
@@ -490,7 +498,8 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
         kp = _apply_perm(k, cl["perm_k"])
         vp = _apply_perm(v, cl["perm_v"])
         cache = kvc.prefill(kp.astype(cache_dtype), vp.astype(cache_dtype),
-                            ml, policy, cl["alpha_k"], cl["alpha_v"])
+                            ml, policy, cl["alpha_k"], cl["alpha_v"],
+                            quant_fn=quant_fn)
         cache.update(cache_extra)
         return h, cache
 
@@ -520,14 +529,19 @@ def _ssm_with_state(x, p, cfg):
 def decode_step(params: Params, cfg: ArchConfig, token, caches,
                 policy: QuantPolicy, calib: Optional[Dict] = None,
                 positions=None, dtype=None, chunk: int = 0,
-                unroll: bool = False):
+                unroll: bool = False, backend=None):
     """One decode step. token: (B, 1) int32 (or (B,1,D) embeds).
     Returns (logits (B,1,V), new caches).
 
     ``chunk``: tile the packed-segment attention (§Perf peak-memory lever).
     ``unroll``: Python-loop the layers instead of scanning — layer locality
     becomes STATIC, so local-attention layers slice the packed region to
-    their window before dequantizing (§Perf long-context lever)."""
+    their window before dequantizing (§Perf long-context lever).
+    ``backend``: decode-attention backend (name | DecodeBackend | None =
+    host default) — "reference" jnp path or the fused "pallas" kernels
+    (DESIGN.md §4)."""
+    backend = bk.resolve_backend(backend)
+    quant_fn = backend.quant_fn(policy)
     params = _cast_params(params, dtype)
     if token.ndim == 3:
         x = token
@@ -577,19 +591,21 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             # pre-append ordering: the hoisted packed slice reflects the
             # pre-step cache, so attend first (current token rides as an
             # explicit fp segment), then append.
-            attn = decode_attention_skvq(
+            attn = backend.attend(
                 qp, kvcache, cfg, policy, window=fl["window"], dtype=h.dtype,
                 chunk=chunk, packed_override=packed_override,
                 extra_kv=(kp.astype(h.dtype), vp.astype(h.dtype), t), q_pos=t)
             kvcache = kvc.decode_append(kvcache, kp, vp, policy,
-                                        cl["alpha_k"], cl["alpha_v"])
+                                        cl["alpha_k"], cl["alpha_v"],
+                                        quant_fn=quant_fn)
         else:
             kvcache = kvc.decode_append(kvcache, kp, vp, policy,
-                                        cl["alpha_k"], cl["alpha_v"])
-            attn = decode_attention_skvq(qp, kvcache, cfg, policy,
-                                         window=fl["window"], dtype=h.dtype,
-                                         chunk=chunk, local_slice=local_slice,
-                                         packed_override=None)
+                                        cl["alpha_k"], cl["alpha_v"],
+                                        quant_fn=quant_fn)
+            attn = backend.attend(qp, kvcache, cfg, policy,
+                                  window=fl["window"], dtype=h.dtype,
+                                  chunk=chunk, local_slice=local_slice,
+                                  packed_override=None)
         attn = _apply_perm(attn, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
         attn = _attn_out(attn, p["attn"])
         if "ssm" in p:
@@ -605,7 +621,7 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             qx = (hx @ p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
             qxp = _apply_perm(qx, _expand_perm(cl["perm_k"], cfg.n_heads))
             xpol = dataclasses.replace(policy, window=0, n_sink=0)
-            xo = decode_attention_skvq(qxp, xcache, cfg, xpol, dtype=h.dtype)
+            xo = backend.attend(qxp, xcache, cfg, xpol, dtype=h.dtype)
             xo = _apply_perm(xo, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
             h = h + _attn_out(xo, p["xattn"])
         h2 = L.norm(h, p["norm2"], cfg)

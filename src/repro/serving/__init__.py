@@ -1,3 +1,5 @@
-from .engine import ServeSession, make_prefill_fn, make_decode_fn
+from .engine import (ServeSession, make_prefill_fn, make_decode_fn,
+                     make_multi_decode_fn, sample_token)
 
-__all__ = ["ServeSession", "make_prefill_fn", "make_decode_fn"]
+__all__ = ["ServeSession", "make_prefill_fn", "make_decode_fn",
+           "make_multi_decode_fn", "sample_token"]

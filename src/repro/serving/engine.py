@@ -1,16 +1,26 @@
-"""Serving engine: SKVQ prefill/decode steps + a slot-based batch scheduler.
+"""Serving engine: SKVQ prefill + scanned multi-token decode + slot scheduler.
 
-``serve_step`` is the paper's deployment target: decode is KV-bandwidth-bound,
-and the SKVQ cache cuts the bytes per step ~8× (K2V1.5 + fp8 metadata).  The
-engine below is deliberately simple but real: fixed batch slots, greedy or
-temperature sampling, per-slot lengths, join/leave between steps (continuous
-batching at step granularity).
+Decode is the paper's deployment target: each step is KV-bandwidth-bound and
+the SKVQ cache cuts bytes/step ~8× (K2V1.5 + fp8 metadata).  Two engine-level
+design points make that win *servable*:
+
+* **Backend-pluggable decode** — every step dispatches through
+  ``repro.models.backends`` ("reference" jnp vs fused "pallas" kernels).
+* **Scanned multi-token decode** — ``make_multi_decode_fn`` jits a
+  ``jax.lax.scan`` over N decode steps with on-device sampling (greedy or
+  temperature via ``jax.random.categorical``) and per-slot done/length masks,
+  so the host syncs once per N tokens instead of once per token.  The old
+  per-token loop round-tripped to host (``np.asarray``) after every step —
+  at ~1 ms/sync that dominated small-model decode.
+
+The scheduler below stays deliberately simple but real: fixed batch slots,
+per-slot EOS masking, join between admission waves (continuous batching at
+step granularity).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable, Dict, List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 import jax
@@ -21,22 +31,72 @@ from ..models.config import ArchConfig
 from ..models import transformer as T
 
 
+def sample_token(logits, temperature: float, key) -> jnp.ndarray:
+    """logits (B, 1, V) -> (B, 1) int32, entirely on device."""
+    if temperature <= 0:
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits[:, -1] / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
 def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
-                    calib=None, dtype=None) -> Callable:
+                    calib=None, dtype=None, backend=None) -> Callable:
     @jax.jit
     def prefill(params, batch):
         return T.prefill_model(params, cfg, batch, policy, calib=calib,
-                               max_len=max_len, dtype=dtype)
+                               max_len=max_len, dtype=dtype, backend=backend)
     return prefill
 
 
 def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
-                   dtype=None) -> Callable:
+                   dtype=None, backend=None) -> Callable:
+    """Single-token decode step (kept for tooling/tests; the engine's hot
+    path is :func:`make_multi_decode_fn`)."""
     @jax.jit
     def decode(params, token, caches):
         return T.decode_step(params, cfg, token, caches, policy, calib=calib,
-                             dtype=dtype)
+                             dtype=dtype, backend=backend)
     return decode
+
+
+def make_multi_decode_fn(cfg: ArchConfig, policy: QuantPolicy, n_tokens: int,
+                         calib=None, dtype=None, backend=None,
+                         temperature: float = 0.0,
+                         eos_id: Optional[int] = None) -> Callable:
+    """Jitted ``lax.scan`` over ``n_tokens`` decode steps.
+
+    Signature: ``(params, token, caches, key, done, lengths, n_valid) ->
+    (tokens (B, n), token, caches, key, done, lengths)`` — one host sync per
+    call, everything else (sampling, EOS masking, per-slot lengths) on device.
+    Slots that hit EOS keep stepping (the scan is shape-static) but their
+    emitted tokens are pinned to ``eos_id`` and their length stops counting.
+
+    ``n_valid`` (traced scalar ≤ n_tokens) marks how many steps the caller
+    will actually consume: the engine always runs the same-size scan (ONE
+    compiled executable regardless of max_new) and discards the surplus;
+    lengths only count the consumed steps.
+    """
+    @jax.jit
+    def multi(params, token, caches, key, done, lengths, n_valid):
+        def step(carry, i):
+            tok, caches, key, done, lengths = carry
+            logits, caches = T.decode_step(params, cfg, tok, caches, policy,
+                                           calib=calib, dtype=dtype,
+                                           backend=backend)
+            key, sub = jax.random.split(key)
+            nxt = sample_token(logits, temperature, sub)
+            if eos_id is not None:
+                nxt = jnp.where(done[:, None], jnp.int32(eos_id), nxt)
+                done = done | (nxt[:, 0] == eos_id)
+            lengths = lengths + ((i < n_valid) & ~done).astype(jnp.int32)
+            return (nxt, caches, key, done, lengths), nxt[:, 0]
+
+        carry, toks = jax.lax.scan(
+            step, (token, caches, key, done, lengths), jnp.arange(n_tokens))
+        token, caches, key, done, lengths = carry
+        return jnp.swapaxes(toks, 0, 1), token, caches, key, done, lengths
+
+    return multi
 
 
 @dataclasses.dataclass
@@ -47,37 +107,76 @@ class Request:
 
 
 class ServeSession:
-    """Slot-based serving: one prefill per admission wave, shared decode step."""
+    """Slot-based serving: one prefill per admission wave, shared decode step.
+
+    ``steps_per_sync`` is N in the scanned decode: tokens stream back to the
+    host in N-sized chunks (≤ 1 host sync per N generated tokens).
+    ``backend`` selects the decode-attention implementation (None = host
+    default: pallas on TPU, reference elsewhere).
+    """
 
     def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
                  batch_slots: int, max_len: int, calib=None, temperature=0.0,
-                 seed: int = 0):
+                 seed: int = 0, backend=None, steps_per_sync: int = 8,
+                 eos_id: Optional[int] = None):
         self.params, self.cfg, self.policy = params, cfg, policy
         self.max_len = max_len
         self.calib = calib
         self.temperature = temperature
-        self.rng = np.random.default_rng(seed)
-        self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib)
-        self.decode_fn = make_decode_fn(cfg, policy, calib)
+        self.backend = backend
+        self.steps_per_sync = max(1, steps_per_sync)
+        self.eos_id = eos_id
+        self.key = jax.random.PRNGKey(seed)
+        self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib,
+                                          backend=backend)
         self.batch_slots = batch_slots
+        self._multi: Optional[Callable] = None  # lazily-built scanned step
+
+    def _multi_fn(self) -> Callable:
+        # ONE compiled executable of scan length steps_per_sync, reused for
+        # every max_new (the tail chunk passes n_valid < steps_per_sync and
+        # the surplus tokens are discarded) — a varied-max_new serving
+        # process would otherwise recompile per distinct tail size.
+        if self._multi is None:
+            self._multi = make_multi_decode_fn(
+                self.cfg, self.policy, self.steps_per_sync, calib=self.calib,
+                backend=self.backend, temperature=self.temperature,
+                eos_id=self.eos_id)
+        return self._multi
 
     def generate(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
-        """prompts: (B, S) int32 (B == batch_slots). Returns (B, max_new)."""
+        """prompts: (B, S) int32 (B == batch_slots). Returns (B, max_new).
+
+        Emits the same token sequence as a per-token loop (greedy-exact;
+        asserted in tests/test_backends.py) while syncing with the host only
+        once per ``steps_per_sync`` tokens.
+        """
+        b = prompts.shape[0]
         batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
         logits, caches = self.prefill_fn(self.params, batch)
-        outs = []
-        tok = self._sample(logits)
-        for _ in range(max_new):
-            outs.append(np.asarray(tok)[:, 0])
-            logits, caches = self.decode_fn(self.params, tok, caches)
-            tok = self._sample(logits)
-        return np.stack(outs, axis=1)
+        self.key, sub = jax.random.split(self.key)
+        tok = sample_token(logits, self.temperature, sub)
 
-    def _sample(self, logits) -> jnp.ndarray:
-        if self.temperature <= 0:
-            return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        p = jax.nn.softmax(logits[:, -1] / self.temperature, axis=-1)
-        c = np.cumsum(np.asarray(p), axis=-1)
-        u = self.rng.random((p.shape[0], 1))
-        idx = (c < u).sum(axis=-1, keepdims=True)
-        return jnp.asarray(idx, jnp.int32)
+        done = jnp.zeros((b,), bool)
+        lengths = jnp.ones((b,), jnp.int32)
+        if self.eos_id is not None:
+            done = tok[:, 0] == self.eos_id
+            lengths = (~done).astype(jnp.int32)
+
+        chunks = [np.asarray(tok)]          # sync 1 (first token + warm start)
+        remaining = max_new - 1
+        while remaining > 0:
+            n = min(self.steps_per_sync, remaining)
+            toks, tok, caches, self.key, done, lengths = self._multi_fn()(
+                self.params, tok, caches, self.key, done, lengths,
+                jnp.int32(n))
+            chunks.append(np.asarray(toks)[:, :n])  # ONE sync per n tokens
+            remaining -= n
+            if self.eos_id is not None and bool(np.asarray(done).all()):
+                break
+        out = np.concatenate(chunks, axis=1)
+        if out.shape[1] < max_new and self.eos_id is not None:
+            pad = np.full((b, max_new - out.shape[1]), self.eos_id, out.dtype)
+            out = np.concatenate([out, pad], axis=1)
+        self.lengths = np.asarray(lengths)  # per-slot generated-token counts
+        return out[:, :max_new]

@@ -1,0 +1,39 @@
+"""Hypothesis import shim: property tests degrade to a clean skip when the
+``hypothesis`` package is not installed (it is an optional [test] extra).
+
+Usage in test modules::
+
+    from _hyp import given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not try to resolve the
+            # hypothesis-injected parameters as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Accepts any strategy constructor call; values are never used."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

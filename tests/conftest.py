@@ -26,6 +26,8 @@ def tiny_trained():
             "final_nll": float(m["nll"])}
 
 
-@pytest.fixture(scope="session")
+@pytest.fixture()
 def rng():
+    # function-scoped: each test draws from a fresh seed-0 stream, so results
+    # don't depend on which other tests ran (or were skipped) before it.
     return np.random.default_rng(0)

@@ -62,8 +62,8 @@ def test_reshard_on_load(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     s = _state()
     save_checkpoint(str(tmp_path), 1, s)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), s)
     out = load_latest(str(tmp_path), s, shardings=sh)
     assert out["state"]["params"]["w"].sharding == NamedSharding(mesh, P())

@@ -18,10 +18,11 @@ from repro.distributed.sharding import param_partition_specs
 def test_param_specs_cover_big_matrices():
     cfg = configs.get_smoke("llama3p2_1b")
     params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     specs = param_partition_specs(params, mesh)
-    flat = jax.tree.flatten_with_path(specs, is_leaf=lambda x: isinstance(x, P))[0]
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
     named = {"/".join(str(getattr(p, "key", p)) for p in path): spec
              for path, spec in flat}
     assert named["layers/attn/wq"] == P(None, None, "model")
@@ -33,8 +34,8 @@ def test_param_specs_cover_big_matrices():
 def test_moe_expert_specs():
     cfg = configs.get_smoke("deepseek_moe_16b")
     params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     specs = param_partition_specs(params, mesh)
     assert specs["layers"]["moe"]["experts_up"] == P(None, "model", None, None)
 
@@ -44,7 +45,6 @@ _MULTIDEV = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro import configs
     from repro.training import make_train_step, init_train_state
     from repro.data import SyntheticCorpus, DataLoader
@@ -53,8 +53,8 @@ _MULTIDEV = textwrap.dedent("""
     from repro.distributed.sharding import use_sharding, TRAIN_RULES
 
     cfg = configs.get_smoke("llama3p2_1b")
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     state = init_train_state(cfg, jax.random.PRNGKey(0))
     st_sh = state_shardings(jax.eval_shape(lambda: state), mesh, fsdp=True)
     state = jax.device_put(state, st_sh)

@@ -1,7 +1,7 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype/bits sweeps (interpret mode)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Sliding-window cache semantics: sink/window exactness, streaming equivalence."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,7 +1,7 @@
 """Bit-packing: exact roundtrip, property-based over shapes/bits."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 

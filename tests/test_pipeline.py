@@ -13,10 +13,10 @@ _SCRIPT = textwrap.dedent("""
     import json
     import numpy as np
     import jax, jax.numpy as jnp
-    from jax.sharding import AxisType
     from repro.distributed.pipeline import pipeline_forward
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((4,), ("pod",))
     L, B, D = 8, 8, 16
     rng = np.random.default_rng(0)
     params = {"w": jnp.asarray(rng.normal(size=(L, D, D)) * 0.3, jnp.float32),

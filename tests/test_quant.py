@@ -1,7 +1,7 @@
 """Clipped dynamic group quantization: error bounds, planes, fp8 metadata."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import jax.numpy as jnp
 
