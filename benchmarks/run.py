@@ -9,6 +9,7 @@ the analytic roofline reproduction of the paper's memory/latency analysis.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -20,6 +21,9 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset (analytic table6 + shrunk kernel/"
                          "backend benches); suites honoring it get smoke=True")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI uploads this artifact "
+                         "so the perf trajectory is tracked across PRs)")
     args = ap.parse_args(argv)
 
     from . import (quality_ladder, component_ablation, group_window,
@@ -39,9 +43,17 @@ def main(argv=None) -> None:
     else:
         pick = set(suites)
     print("name,us_per_call,derived")
+    rows = []
 
     def emit(row: str):
         print(row, flush=True)
+        parts = row.split(",", 2)
+        try:
+            us = float(parts[1]) if len(parts) > 1 else 0.0
+        except ValueError:
+            us = 0.0
+        rows.append({"name": parts[0], "us_per_call": us,
+                     "derived": parts[2] if len(parts) > 2 else ""})
 
     import inspect
     t0 = time.time()
@@ -58,6 +70,12 @@ def main(argv=None) -> None:
             failures.append((name, repr(e)))
             emit(f"{name}_FAILED,0.0,{type(e).__name__}")
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "total_s": time.time() - t0,
+                       "rows": rows,
+                       "failures": [{"suite": n, "error": e}
+                                    for n, e in failures]}, f, indent=2)
     if failures:
         for name, err in failures:
             print(f"# FAILED {name}: {err}", file=sys.stderr)

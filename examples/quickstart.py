@@ -14,7 +14,7 @@ from repro import configs
 from repro.core import QuantPolicy, calibrate_layer, Calibration
 from repro.data import SyntheticCorpus
 from repro.models import transformer as T
-from repro.serving import ServeSession
+from repro.serving import Engine, Request
 
 # 1. model (trained briefly so K/V have real channel structure) --------------
 import functools
@@ -46,18 +46,25 @@ calib = Calibration([
 print(f"calibrated {cfg.n_layers} layers "
       f"(avg bits = {policy.avg_bits(cfg.head_dim):.2f} incl. fp8 metadata)")
 
-# 3. serve --------------------------------------------------------------------
-prompts = np.stack([corpus.sample(64, np.random.default_rng(10 + i))
-                    for i in range(4)])
-sess = ServeSession(params, cfg, policy, batch_slots=4, max_len=128,
-                    calib=calib)
-out = sess.generate(prompts, max_new=16)
-print("SKVQ decode :", out[0])
+# 3. serve (request-level engine: submit -> stream -> run) -------------------
+# ragged prompts + ragged budgets: each request prefills into its own slot
+# (no cross-slot padding) and streams tokens via its handle.
+prompts = [corpus.sample(48 + 8 * i, np.random.default_rng(10 + i))
+           for i in range(4)]
+eng = Engine(params, cfg, policy, batch_slots=2, max_len=160, calib=calib)
+handles = [eng.submit(Request(prompt=p, max_new=12 + 2 * i))
+           for i, p in enumerate(prompts)]
+eng.run(handles)          # 4 requests over 2 slots: two admission waves
+for h in handles:
+    print(f"SKVQ request {h.rid}: prompt {len(h.request.prompt):3d} toks -> "
+          f"{h.result()[:8]}... ({h.finish_reason})")
 
 fp16 = QuantPolicy(bits_k=8.0, bits_v=8.0, group_size=16, window=16, n_sink=4,
                    fp8_meta=False)
-ref = ServeSession(params, cfg, fp16, batch_slots=4, max_len=128)
-out_ref = ref.generate(prompts, max_new=16)
-print("8-bit decode:", out_ref[0])
-agree = (out == out_ref).mean()
+ref = Engine(params, cfg, fp16, batch_slots=2, max_len=160)
+ref_handles = [ref.submit(Request(prompt=p, max_new=12 + 2 * i))
+               for i, p in enumerate(prompts)]
+ref.run(ref_handles)
+agree = np.mean([np.mean(h.result() == r.result())
+                 for h, r in zip(handles, ref_handles)])
 print(f"token agreement @2/1.5-bit vs 8-bit: {agree:.0%}")

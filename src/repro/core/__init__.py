@@ -4,7 +4,8 @@ from .quant import (quantize_groups, dequantize_groups, fake_quant,
                     plane_layout, n_meta_groups, packed_nbytes)
 from .packing import pack, unpack, packed_width
 from .kv_cache import (init_cache, prefill, decode_append,
-                       gather_attention_inputs, materialize_kv, cache_shapes)
+                       gather_attention_inputs, materialize_kv, cache_shapes,
+                       reset_slot, insert_slot, slot_lengths)
 from .calibrate import (Calibration, LayerCalibration, calibrate_layer,
                         calibrate_model, refine_attention_mse, ALPHA_GRID)
 from . import reorder, filters, baselines
@@ -14,7 +15,8 @@ __all__ = [
     "quantize_groups", "dequantize_groups", "fake_quant", "plane_layout",
     "n_meta_groups", "packed_nbytes", "pack", "unpack", "packed_width",
     "init_cache", "prefill", "decode_append", "gather_attention_inputs",
-    "materialize_kv", "cache_shapes", "Calibration", "LayerCalibration",
+    "materialize_kv", "cache_shapes", "reset_slot", "insert_slot",
+    "slot_lengths", "Calibration", "LayerCalibration",
     "calibrate_layer", "calibrate_model", "refine_attention_mse", "ALPHA_GRID",
     "reorder", "filters", "baselines",
 ]

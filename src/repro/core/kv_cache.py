@@ -13,6 +13,13 @@ ring, and bumps ``length``.  The ring slot of absolute token ``t`` is
 ``(t - n_sink) % W``, so the evicted token ``t - W`` shares the slot being
 overwritten.
 
+``length`` is **per-slot** ``(B,)`` — each batch row is an independent
+request at its own position, so decode appends scatter at per-row indices
+and every downstream mask is per-row (``repro.core.segments``).  The
+request-level serving engine relies on this plus the slot lifecycle ops
+:func:`reset_slot` / :func:`insert_slot`.  Legacy scalar-``length`` caches
+are still accepted (broadcast on read).
+
 The container is a plain dict pytree so it flows through jit/scan/pjit.
 """
 from __future__ import annotations
@@ -48,12 +55,12 @@ def cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
                  policy: QuantPolicy, dtype=jnp.bfloat16):
     """Dict of (shape, dtype) — used both to build zeros and ShapeDtypeStructs."""
     if policy.is_fp16:  # uncompressed baseline (the paper's FP16 column)
-        return {"length": ((), jnp.int32),
+        return {"length": ((batch,), jnp.int32),
                 "k": ((batch, max_len, n_kv, head_dim), dtype),
                 "v": ((batch, max_len, n_kv, head_dim), dtype)}
     w, ns = policy.window, policy.n_sink
     sq = max(0, max_len - ns - w)
-    out = {"length": ((), jnp.int32)}
+    out = {"length": ((batch,), jnp.int32)}
     if ns > 0:
         out["sink_k"] = ((batch, ns, n_kv, head_dim), dtype)
         out["sink_v"] = ((batch, ns, n_kv, head_dim), dtype)
@@ -78,6 +85,67 @@ def _split_q(cache: Cache, pref: str):
     return {k[plen:]: v for k, v in cache.items() if k.startswith(pref + "_")}
 
 
+def slot_lengths(cache: Cache, batch: Optional[int] = None) -> jnp.ndarray:
+    """Per-slot lengths (B,).  Legacy scalar-length caches broadcast."""
+    t = jnp.asarray(cache["length"])
+    if t.ndim == 0:
+        if batch is None:
+            batch = next(v.shape[0] for k, v in cache.items() if k != "length")
+        t = jnp.broadcast_to(t, (batch,))
+    return t
+
+
+# ------------------------------------------------- per-slot token gather/put
+
+def _gat_tok(buf, idx):
+    """buf (B, S, H, W), idx (B,) -> the per-row token (B, 1, H, W)."""
+    b = buf.shape[0]
+    return jnp.take_along_axis(buf, idx.reshape(b, 1, 1, 1), axis=1)
+
+
+def _put_tok(buf, idx, val):
+    """Scatter val (B, 1, H, W) at per-row token index idx (B,)."""
+    return buf.at[jnp.arange(buf.shape[0]), idx].set(val[:, 0])
+
+
+def _put_tok_where(buf, idx, val, cond):
+    """Per-row conditional scatter: rows with cond False keep the old token."""
+    old = _gat_tok(buf, idx)[:, 0]
+    new = jnp.where(cond[:, None, None], val[:, 0], old)
+    return buf.at[jnp.arange(buf.shape[0]), idx].set(new)
+
+
+# ------------------------------------------------------- slot lifecycle ops
+
+def reset_slot(caches, i, batch_axis: int = 0):
+    """Zero batch slot ``i`` across every leaf (KV, metadata, and length).
+
+    Works on a single-layer cache dict (leaves ``(B, ...)``, batch_axis=0) or
+    the engine's layer-stacked cache groups (leaves ``(L, B, ...)``,
+    batch_axis=1).  ``i`` may be a traced scalar — one compiled executable
+    serves every slot."""
+    sel = (slice(None),) * batch_axis
+
+    def one(leaf):
+        return leaf.at[sel + (i,)].set(jnp.zeros((), leaf.dtype))
+
+    return jax.tree.map(one, caches)
+
+
+def insert_slot(dst, i, src, src_slot: int = 0, batch_axis: int = 0):
+    """Copy batch row ``src_slot`` of ``src`` into slot ``i`` of ``dst``.
+
+    ``src`` is a structurally-identical cache with its own (smaller) batch —
+    typically a freshly prefilled batch-of-1 request being admitted into a
+    serving slot.  Non-batch dims must match (same max_len/policy/layout)."""
+    sel = (slice(None),) * batch_axis
+
+    def one(d, s):
+        return d.at[sel + (i,)].set(s[sel + (src_slot,)])
+
+    return jax.tree.map(one, dst, src)
+
+
 # ------------------------------------------------------------------- prefill
 
 def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
@@ -100,7 +168,7 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
     if policy.is_fp16:
         cache["k"] = cache["k"].at[:, :s].set(k)
         cache["v"] = cache["v"].at[:, :s].set(v)
-        cache["length"] = jnp.int32(s)
+        cache["length"] = jnp.full((b,), s, jnp.int32)
         return cache
     if ns > 0:
         take = min(ns, s)
@@ -123,7 +191,7 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
                 full = cache[f"{name}_{kk}"]
                 cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice(
                     full, vv.astype(full.dtype), (0,) * full.ndim)
-    cache["length"] = jnp.int32(s)
+    cache["length"] = jnp.full((b,), s, jnp.int32)
     return cache
 
 
@@ -135,19 +203,22 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                   alpha_v: Optional[jnp.ndarray] = None, quant_fn=None) -> Cache:
     """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one.
 
+    Every batch row advances at its own per-slot ``length`` — indices below
+    are ``(B,)`` and writes are per-row scatters, so a ragged serving batch
+    (slots at different positions) appends correctly in one call.
+
     ``quant_fn`` as in :func:`prefill` — lets the pallas backend fuse the
     per-step quantize+pack of the token sliding out of the window.
     """
     qf = quant_fn or quantize_groups
     b, _, h, d = k_new.shape
     w, ns = policy.window, policy.n_sink
-    t = cache["length"]
+    t = slot_lengths(cache, b)  # (B,)
     cache = dict(cache)
     if policy.is_fp16:
         idx = jnp.clip(t, 0, cache["k"].shape[1] - 1)
         for buf, x in (("k", k_new), ("v", v_new)):
-            cache[buf] = jax.lax.dynamic_update_slice_in_dim(
-                cache[buf], x.astype(cache[buf].dtype), idx, axis=1)
+            cache[buf] = _put_tok(cache[buf], idx, x.astype(cache[buf].dtype))
         cache["length"] = t + 1
         return cache
     gsz = min(policy.group_size, d)
@@ -159,32 +230,26 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         if has_q:
             sq = cache["qk_codes_hi"].shape[1]
             idx = jnp.clip(u_e, 0, sq - 1)
-            ek = jax.lax.dynamic_slice_in_dim(cache["win_k"], slot, 1, axis=1)
-            ev = jax.lax.dynamic_slice_in_dim(cache["win_v"], slot, 1, axis=1)
+            ek = _gat_tok(cache["win_k"], slot)
+            ev = _gat_tok(cache["win_v"], slot)
             qk = qf(ek, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
             qv = qf(ev, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
-            do_write = u_e >= 0
+            do_write = u_e >= 0  # rows whose window is already full
             for name, qt in (("qk", qk), ("qv", qv)):
                 for kk, vv in qt.items():
                     full = cache[f"{name}_{kk}"]
-                    old = jax.lax.dynamic_slice_in_dim(full, idx, 1, axis=1)
-                    new = jnp.where(do_write, vv.astype(full.dtype), old)
-                    cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice_in_dim(
-                        full, new, idx, axis=1)
+                    cache[f"{name}_{kk}"] = _put_tok_where(
+                        full, idx, vv.astype(full.dtype), do_write)
         # write the new token into the ring (or the sink buffer when t < ns)
         is_sink = t < ns
         if ns > 0:
             sidx = jnp.clip(t, 0, ns - 1)
             for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
-                old = jax.lax.dynamic_slice_in_dim(cache[buf], sidx, 1, axis=1)
-                cache[buf] = jax.lax.dynamic_update_slice_in_dim(
-                    cache[buf], jnp.where(is_sink, x.astype(cache[buf].dtype), old),
-                    sidx, axis=1)
+                cache[buf] = _put_tok_where(cache[buf], sidx,
+                                            x.astype(cache[buf].dtype), is_sink)
         for buf, x in (("win_k", k_new), ("win_v", v_new)):
-            old = jax.lax.dynamic_slice_in_dim(cache[buf], slot, 1, axis=1)
-            cache[buf] = jax.lax.dynamic_update_slice_in_dim(
-                cache[buf], jnp.where(is_sink, old, x.astype(cache[buf].dtype)),
-                slot, axis=1)
+            cache[buf] = _put_tok_where(cache[buf], slot,
+                                        x.astype(cache[buf].dtype), ~is_sink)
     else:
         # no window: quantize immediately (the paper's no-window ablation)
         u = jnp.maximum(t - ns, 0)
@@ -194,17 +259,15 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         qv = qf(v_new, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
         for name, qt in (("qk", qk), ("qv", qv)):
             for kk, vv in qt.items():
-                cache[f"{name}_{kk}"] = jax.lax.dynamic_update_slice_in_dim(
-                    cache[f"{name}_{kk}"], vv.astype(cache[f"{name}_{kk}"].dtype),
-                    idx, axis=1)
+                full = cache[f"{name}_{kk}"]
+                cache[f"{name}_{kk}"] = _put_tok(full, idx,
+                                                 vv.astype(full.dtype))
         if ns > 0:
             is_sink = t < ns
             sidx = jnp.clip(t, 0, ns - 1)
             for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
-                old = jax.lax.dynamic_slice_in_dim(cache[buf], sidx, 1, axis=1)
-                cache[buf] = jax.lax.dynamic_update_slice_in_dim(
-                    cache[buf], jnp.where(is_sink, x.astype(cache[buf].dtype), old),
-                    sidx, axis=1)
+                cache[buf] = _put_tok_where(cache[buf], sidx,
+                                            x.astype(cache[buf].dtype), is_sink)
     cache["length"] = t + 1
     return cache
 
@@ -216,21 +279,25 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Reference path: materialize (K, V, positions, valid) over all segments.
 
-    Returns K/V (B, T, H, D), positions (T,) int32, valid (T,) bool where
-    T = n_sink + S_q + W.  Ordering is [sinks, quantized, window].  The Pallas
-    decode kernel consumes the packed segments directly instead.
+    Returns K/V (B, T, H, D), positions (B, T) int32, valid (B, T) bool where
+    T = n_sink + S_q + W — per-slot because each batch row sits at its own
+    ``length``.  Ordering is [sinks, quantized, window].  The Pallas decode
+    kernel consumes the packed segments directly instead.
     """
     w, ns = policy.window, policy.n_sink
-    t_total = cache["length"]  # tokens currently stored
+    t_total = slot_lengths(cache)  # (B,) tokens currently stored per slot
+    b = t_total.shape[0]
     gsz = min(policy.group_size, head_dim)
     ks, vs, pos, val = [], [], [], []
+
+    def push(p, stored):
+        pos.append(seg.bcast_rows(p, b))
+        val.append(seg.bcast_rows(stored, b))
 
     if ns > 0:
         ks.append(cache["sink_k"].astype(dtype))
         vs.append(cache["sink_v"].astype(dtype))
-        p, stored = seg.sink_segment(ns, t_total)
-        pos.append(p)
-        val.append(stored)
+        push(*seg.sink_segment(ns, t_total))
 
     if "qk_codes_hi" in cache and cache["qk_codes_hi"].shape[1] > 0:
         kq = dequantize_groups(_split_q(cache, "qk"), head_dim, policy.bits_k,
@@ -240,19 +307,15 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
         ks.append(kq)
         vs.append(vq)
         j = jnp.arange(kq.shape[1], dtype=jnp.int32)
-        p, stored = seg.packed_segment(j, t_total, ns, w)
-        pos.append(p)
-        val.append(stored)
+        push(*seg.packed_segment(j, t_total, ns, w))
 
     if w > 0:
         ks.append(cache["win_k"].astype(dtype))
         vs.append(cache["win_v"].astype(dtype))
-        p, stored = seg.window_segment(w, ns, t_total)
-        pos.append(p)
-        val.append(stored)
+        push(*seg.window_segment(w, ns, t_total))
 
     return (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1),
-            jnp.concatenate(pos), jnp.concatenate(val))
+            jnp.concatenate(pos, axis=1), jnp.concatenate(val, axis=1))
 
 
 def materialize_kv(cache: Cache, head_dim: int, policy: QuantPolicy,
@@ -261,8 +324,9 @@ def materialize_kv(cache: Cache, head_dim: int, policy: QuantPolicy,
     k, v, pos, valid = gather_attention_inputs(cache, head_dim, policy, dtype)
     b, _, h, d = k.shape
     # scatter into a buffer with one extra "dump" slot for invalid entries;
-    # valid positions are unique so plain set() is race-free.
-    safe = jnp.where(valid, pos, total_len)
-    out_k = jnp.zeros((b, total_len + 1, h, d), dtype).at[:, safe].set(k.astype(dtype))
-    out_v = jnp.zeros((b, total_len + 1, h, d), dtype).at[:, safe].set(v.astype(dtype))
+    # valid positions are unique per row so plain set() is race-free.
+    safe = jnp.where(valid, pos, total_len)            # (B, T)
+    bidx = jnp.arange(b)[:, None]
+    out_k = jnp.zeros((b, total_len + 1, h, d), dtype).at[bidx, safe].set(k.astype(dtype))
+    out_v = jnp.zeros((b, total_len + 1, h, d), dtype).at[bidx, safe].set(v.astype(dtype))
     return out_k[:, :total_len], out_v[:, :total_len]

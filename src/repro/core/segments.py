@@ -11,6 +11,11 @@ Conventions
 -----------
 * ``length`` is the number of tokens currently *stored* in the cache buffers
   (``cache["length"]``).  All positions are absolute token indices.
+* ``length`` (and the decode query position ``t_now``) may be a scalar — every
+  batch row at the same point — or **per-slot** ``(B,)``, the request-level
+  serving case where each batch slot holds an independent request.  Helpers
+  are shape-polymorphic: scalar lengths yield ``(T,)`` masks, per-slot lengths
+  yield ``(B, T)`` masks (broadcast against the trailing token axis).
 * Segment helpers return ``(positions, stored)`` where ``stored`` says "this
   buffer slot holds a real token"; causality/locality against the query is a
   separate concern (:func:`attend_ok`) because the pre-append decode path
@@ -33,22 +38,41 @@ def effective_window(window) -> jnp.ndarray:
     return jnp.where(w > 0, w, jnp.int32(_NO_WINDOW))
 
 
+def _col(x) -> jnp.ndarray:
+    """length/t_now -> broadcastable column: () -> (1,), (B,) -> (B, 1)."""
+    return jnp.asarray(x)[..., None]
+
+
+def bcast_rows(x, b: int) -> jnp.ndarray:
+    """(T,) or (B, T) -> (B, T): give per-token arrays an explicit slot axis
+    so segments with mixed scalar/per-slot metadata can concatenate."""
+    x = jnp.asarray(x)
+    if x.ndim == 1:
+        x = x[None]
+    return jnp.broadcast_to(x, (b, x.shape[-1]))
+
+
 def quantized_count(length, n_sink: int, window: int) -> jnp.ndarray:
     """Number of tokens actually written to the packed region."""
-    return jnp.maximum(length - n_sink - window, 0)
+    return jnp.maximum(jnp.asarray(length) - n_sink - window, 0)
 
 
 def sink_segment(n_sink: int, length) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Positions/stored-mask of the fp sink buffer (absolute [0, n_sink))."""
     p = jnp.arange(n_sink, dtype=jnp.int32)
-    return p, p < length
+    return p, p < (_col(length) if jnp.ndim(length) else length)
 
 
 def packed_segment(j, length, n_sink: int, window: int
                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Positions/stored-mask for packed-region slots ``j`` (u-indices)."""
-    pos = (n_sink + j).astype(jnp.int32)
-    return pos, j < quantized_count(length, n_sink, window)
+    """Positions/stored-mask for packed-region slots ``j`` (u-indices).
+
+    ``j`` may itself be per-slot ``(B, T)`` (the hoisted local-slice gather
+    picks a different packed range per slot)."""
+    pos = (n_sink + jnp.asarray(j)).astype(jnp.int32)
+    qc = quantized_count(length, n_sink, window)
+    stored = j < (_col(qc) if qc.ndim else qc)
+    return pos, stored
 
 
 def window_segment(window: int, n_sink: int, length
@@ -60,16 +84,26 @@ def window_segment(window: int, n_sink: int, length
     the last ``window`` tokens and at/after the sink boundary.
     """
     sl = jnp.arange(window, dtype=jnp.int32)
-    u_last = length - 1 - n_sink            # u-index of the newest stored token
+    # u-index of the newest stored token; explicitly (B|1, 1) so per-slot
+    # lengths give each row its own ring phase and the scalar case squeezes
+    # back to (window,)
+    lcol = jnp.asarray(length).reshape(-1)[:, None]
+    u_last = lcol - 1 - n_sink
     u_s = u_last - ((u_last - sl) % window)
     pos = (u_s + n_sink).astype(jnp.int32)
-    stored = (u_s >= 0) & (u_s > u_last - window) & (pos < length)
+    stored = (u_s >= 0) & (u_s > u_last - window) & (pos < lcol)
+    if jnp.ndim(length) == 0:
+        pos, stored = pos[0], stored[0]
     return pos, stored
 
 
 def attend_ok(pos, stored, t_now, window_eff) -> jnp.ndarray:
-    """Final attendability: stored ∧ causal ∧ inside the local band."""
-    dlt = t_now - pos
+    """Final attendability: stored ∧ causal ∧ inside the local band.
+
+    ``t_now`` scalar or ``(B,)``; ``pos``/``stored`` ``(T,)`` or ``(B, T)``.
+    Per-slot inputs broadcast to a ``(B, T)`` mask."""
+    t_now = jnp.asarray(t_now)
+    dlt = (_col(t_now) if t_now.ndim else t_now) - pos
     return stored & (dlt >= 0) & (dlt < window_eff)
 
 
@@ -86,14 +120,16 @@ def partial_attend(qg, keys, values, ok, scale, cap: float = 0.0
                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Unnormalized attention over one segment.
 
-    qg: (B, Hkv, Gq, D); keys/values: (B, T, Hkv, D); ok: (T,) bool.
+    qg: (B, Hkv, Gq, D); keys/values: (B, T, Hkv, D); ok: (T,) bool shared
+    across slots, or (B, T) per-slot.
     Returns the flash triple (num (B,Hkv,Gq,D), m (B,Hkv,Gq), l (B,Hkv,Gq)).
     """
     k = jnp.swapaxes(keys, 1, 2).astype(jnp.float32)
     v = jnp.swapaxes(values, 1, 2).astype(jnp.float32)
     s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32) * scale, k)
     s = softcap(s, cap)
-    s = jnp.where(ok[None, None, None, :], s, NEG)
+    okb = ok[None, None, None, :] if ok.ndim == 1 else ok[:, None, None, :]
+    s = jnp.where(okb, s, NEG)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
     return jnp.einsum("bhgt,bhtd->bhgd", p, v), m, p.sum(axis=-1)

@@ -13,8 +13,10 @@ grid axis so the accumulator scratch persists across KV tiles):
     q         (B, Hkv, Gq, D)      Gq = query heads per kv head (GQA)
     k planes  (B, Hkv, S, W_b)     packed uint8 + (B, Hkv, S, G) metadata
     v planes  likewise
-    mask      (S, 1) f32           1.0 for attendable tokens (validity ∧ local
-                                   window — computed by the wrapper)
+    mask      (B, S, 1) f32        1.0 for attendable tokens (validity ∧ local
+                                   window — computed by the wrapper).  Per
+                                   batch slot: ragged serving batches place
+                                   each row's packed frontier independently.
 
 Returns the UNNORMALIZED flash triple (num, m, l) so the wrapper can
 logsumexp-merge with the fp sliding-window/sink segments (ops.py).
@@ -77,7 +79,7 @@ def _kernel(q_ref, mask_ref, *refs, layout_k, layout_v, fp8_meta, scale,
     q = q_ref[0, 0].astype(jnp.float32) * scale          # (Gq, D)
     k = _dequant_tile(k_refs, 0, layout_k, fp8_meta)      # (BS, D)
     v = _dequant_tile(v_refs, 0, layout_v, fp8_meta)      # (BS, D)
-    mask = mask_ref[...][:, 0]                            # (BS,)
+    mask = mask_ref[...][0, :, 0]                         # (BS,) — this slot's
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Gq, BS)
     if softcap > 0:
@@ -111,7 +113,8 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
     """Returns flash triple (num (B,H,Gq,D), m (B,H,Gq,1), l (B,H,Gq,1)).
 
     k_qt/v_qt leaves have shape (B, S, Hkv, ...) (cache layout) — transposed
-    here to (B, Hkv, S, ...) tile order.  ``mask``: (S,) float validity.
+    here to (B, Hkv, S, ...) tile order.  ``mask``: (B, S) per-slot float
+    validity ((S,) accepted and broadcast — uniform-length batches).
     ``softcap`` > 0 applies the gemma-style tanh logit cap in-kernel.
     """
     b, hkv, gq, d = q.shape
@@ -124,10 +127,13 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
     def _tile(qt, name):
         return jnp.swapaxes(qt[name], 1, 2)  # (B, Hkv, S, W)
 
-    ins = [q, mask.astype(jnp.float32).reshape(s_len, 1)]
+    mask = jnp.asarray(mask, jnp.float32)
+    if mask.ndim == 1:
+        mask = jnp.broadcast_to(mask[None], (b, s_len))
+    ins = [q, mask.reshape(b, s_len, 1)]
     in_specs = [
         pl.BlockSpec((1, 1, gq, d), lambda bh, s: (bh // hkv, bh % hkv, 0, 0)),
-        pl.BlockSpec((block_s, 1), lambda bh, s: (s, 0)),
+        pl.BlockSpec((1, block_s, 1), lambda bh, s: (bh // hkv, s, 0)),
     ]
     for qt, layout in ((k_qt, layout_k), (v_qt, layout_v)):
         for name, _ in zip(("hi", "lo"), layout):

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from ..core.policy import QuantPolicy
 from ..core.quant import n_meta_groups
 from ..core import segments as seg
+from ..core.kv_cache import slot_lengths as kvc_slot_lengths
 from .decode_attn import decode_attn_pallas, BLOCK_S
 from .kv_quant import kv_quant_pallas
 
@@ -107,15 +108,19 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
     Interface mirrors the reference ``decode_attention_skvq`` (same cache
     dict, traced ``window`` scalar, ``local_slice``/``packed_override`` perf
     levers, pre-append ``extra_kv``/``q_pos``); GQA/MQA via the Gq axis.
-    ``chunk`` is accepted for signature parity but ignored — the kernel always
-    streams ``block_s``-token tiles with an online-softmax accumulator, so the
+    Per-slot aware: ``cache["length"]``/``q_pos`` may be ``(B,)`` — the
+    kernel then takes a per-(slot, token) validity mask.  ``chunk`` is
+    accepted for signature parity but ignored — the kernel always streams
+    ``block_s``-token tiles with an online-softmax accumulator, so the
     dequantized cache never materializes.
 
     q: (B, 1, Hq, D) -> (B, 1, Hq, D).
     """
     w, ns = policy.window, policy.n_sink
-    t_now = cache["length"] - 1 if q_pos is None else q_pos
     b, _, hq, d = q.shape
+    lens = kvc_slot_lengths(cache, b)
+    t_now = lens - 1 if q_pos is None else jnp.broadcast_to(
+        jnp.asarray(q_pos), (b,))
     weff = seg.effective_window(window)
 
     if policy.is_fp16:
@@ -125,7 +130,7 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
         hkv = cache["k"].shape[2]
         qg = q.reshape(b, hkv, hq // hkv, d)
         pos = jnp.arange(cache["k"].shape[1])
-        ok = seg.attend_ok(pos, pos < cache["length"], t_now, weff)
+        ok = seg.attend_ok(pos, pos[None, :] < lens[:, None], t_now, weff)
         part = seg.partial_attend(qg, cache["k"].astype(dtype),
                                   cache["v"].astype(dtype), ok, scale, softcap)
         return seg.finalize([part]).reshape(b, 1, hq, d).astype(q.dtype)
@@ -137,7 +142,7 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
 
     s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
     if s_q > 0:
-        qc = seg.quantized_count(cache["length"], ns, w)
+        qc = seg.quantized_count(lens, ns, w)  # (B,)
         if packed_override is not None:
             # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
             k_qt, v_qt, j = packed_override
@@ -147,14 +152,13 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
             v_qt = {kk[3:]: vv for kk, vv in cache.items()
                     if kk.startswith("qv_")}
             if local_slice and s_q > local_slice:
+                # per-slot gather of each row's own last local_slice tokens
                 start = jnp.clip(qc - local_slice, 0, s_q - local_slice)
-                k_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
-                                                         local_slice, 1)
-                        for kk, vv in k_qt.items()}
-                v_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
-                                                         local_slice, 1)
-                        for kk, vv in v_qt.items()}
-                j = start + jnp.arange(local_slice)
+                j = start[:, None] + jnp.arange(local_slice)     # (B, ls)
+                tk = lambda a: jnp.take_along_axis(
+                    a, j[:, :, None, None], axis=1)
+                k_qt = {kk: tk(vv) for kk, vv in k_qt.items()}
+                v_qt = {kk: tk(vv) for kk, vv in v_qt.items()}
             else:
                 j = jnp.arange(k_qt["codes_hi"].shape[1])
         s_eff = k_qt["codes_hi"].shape[1]
@@ -162,9 +166,10 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
         s_pad = -(-s_eff // bs) * bs
         k_qt = _pad_planes(k_qt, s_pad, policy.fp8_meta)
         v_qt = _pad_planes(v_qt, s_pad, policy.fp8_meta)
-        j = _pad_to(jnp.asarray(j, jnp.int32), s_pad, axis=0, fill=_FAR)
-        pos_q, stored_q = seg.packed_segment(j, cache["length"], ns, w)
-        ok = seg.attend_ok(pos_q, stored_q, t_now, weff)
+        j = jnp.asarray(j, jnp.int32)
+        j = _pad_to(j, s_pad, axis=j.ndim - 1, fill=_FAR)
+        pos_q, stored_q = seg.packed_segment(j, lens, ns, w)
+        ok = seg.attend_ok(pos_q, stored_q, t_now, weff)  # (B, S_pad)
         num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
                                        policy, d, scale, interpret=interpret,
                                        block_s=bs, softcap=softcap)
@@ -172,24 +177,26 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
 
     # fp segments: sinks + sliding-window ring (+ pre-append current token)
     ks, vs, pos, valid = [], [], [], []
+
+    def push(p, stored):
+        pos.append(seg.bcast_rows(p, b))
+        valid.append(seg.bcast_rows(stored, b))
+
     if ns > 0 and "sink_k" in cache:
         ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
-        p, stored = seg.sink_segment(ns, cache["length"])
-        pos.append(p); valid.append(stored)
+        push(*seg.sink_segment(ns, lens))
     if w > 0 and "win_k" in cache:
         ks.append(cache["win_k"]); vs.append(cache["win_v"])
-        p, stored = seg.window_segment(w, ns, cache["length"])
-        pos.append(p); valid.append(stored)
+        push(*seg.window_segment(w, ns, lens))
     if extra_kv is not None:
         k1, v1, p1 = extra_kv
         ks.append(k1); vs.append(v1)
-        pos.append(jnp.asarray(p1).reshape(1))
-        valid.append(jnp.ones((1,), bool))
+        push(jnp.asarray(p1).reshape(-1)[:, None], jnp.ones((1, 1), bool))
     if ks:
         kf = jnp.concatenate(ks, axis=1).astype(dtype)
         vf = jnp.concatenate(vs, axis=1).astype(dtype)
-        ok = seg.attend_ok(jnp.concatenate(pos), jnp.concatenate(valid),
-                           t_now, weff)
+        ok = seg.attend_ok(jnp.concatenate(pos, axis=1),
+                           jnp.concatenate(valid, axis=1), t_now, weff)
         parts.append(seg.partial_attend(qg, kf, vf, ok, scale, softcap))
 
     return seg.finalize(parts).reshape(b, 1, hq, d).astype(q.dtype)

@@ -1,7 +1,14 @@
-"""End-to-end serving driver: prefill + batched decode with the SKVQ cache.
+"""End-to-end serving driver: continuous batching over the request Engine.
+
+Submits ``--requests`` generation jobs (ragged ``max_new`` via
+``--max-new-jitter``) onto ``--batch`` decode slots — more requests than
+slots means multiple admission waves, so freed slots immediately refill
+from the queue (the continuous-batching path the SKVQ cache is built for).
+Reports aggregate tok/s AND per-request latency percentiles.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_1b --smoke \
-        --batch 4 --prompt-len 256 --new-tokens 32 --bits-k 2 --bits-v 1.5
+        --batch 4 --requests 8 --prompt-len 256 --new-tokens 32 \
+        --max-new-jitter 8 --bits-k 2 --bits-v 1.5
 """
 from __future__ import annotations
 
@@ -16,16 +23,32 @@ from ..core.policy import QuantPolicy
 from ..core.quant import packed_nbytes
 from ..data import SyntheticCorpus
 from ..models import transformer as T
-from ..serving import ServeSession
+from ..serving import Engine, Request
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3p2_1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (concurrent requests)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests to serve (default: 2x batch — two "
+                         "admission waves exercise continuous batching)")
     ap.add_argument("--prompt-len", type=int, default=256)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32,
+                    help="base max_new per request")
+    ap.add_argument("--max-new-jitter", type=int, default=0,
+                    help="per-request max_new drawn from new-tokens ± jitter "
+                         "(ragged budgets -> slots free at different times)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop generation at this token id")
     ap.add_argument("--bits-k", type=float, default=2.0)
     ap.add_argument("--bits-v", type=float, default=1.5)
     ap.add_argument("--group-size", type=int, default=64)
@@ -43,28 +66,49 @@ def main(argv=None):
                          window=args.window, n_sink=args.sinks)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
-    prompts = np.stack([corpus.sample(args.prompt_len, np.random.default_rng(i))
-                        for i in range(args.batch)])
+    n_req = args.requests or 2 * args.batch
+    rng = np.random.default_rng(0)
+    jit = args.max_new_jitter
 
-    max_len = args.prompt_len + args.new_tokens + 8
-    sess = ServeSession(params, cfg, policy, batch_slots=args.batch,
-                        max_len=max_len, backend=args.backend,
-                        steps_per_sync=args.steps_per_sync)
+    reqs = []
+    for i in range(n_req):
+        max_new = args.new_tokens + (int(rng.integers(-jit, jit + 1)) if jit
+                                     else 0)
+        max_new = max(1, max_new)
+        prompt = corpus.sample(args.prompt_len, np.random.default_rng(i))
+        reqs.append(Request(prompt=prompt, max_new=max_new,
+                            temperature=args.temperature, eos_id=args.eos_id,
+                            seed=i))
+
+    max_len = args.prompt_len + args.new_tokens + jit + args.steps_per_sync
+    eng = Engine(params, cfg, policy, batch_slots=args.batch, max_len=max_len,
+                 backend=args.backend, steps_per_sync=args.steps_per_sync)
     t0 = time.time()
-    out = sess.generate(prompts, max_new=args.new_tokens)
+    handles = [eng.submit(r) for r in reqs]
+    eng.run(handles)
     dt = time.time() - t0
-    tput = args.batch * args.new_tokens / dt
+
+    total_toks = sum(len(h.tokens) for h in handles)
+    lat = [(h.finish_time - h.submit_time) * 1e3 for h in handles]
+    ttft = [(h.first_token_time - h.submit_time) * 1e3 for h in handles]
     fp16_b = 2 * cfg.head_dim * 2
     q_b = packed_nbytes(cfg.head_dim, policy.bits_k, policy.group_size,
                         policy.meta_dtype_bits) + \
         packed_nbytes(cfg.head_dim, policy.bits_v, policy.group_size,
                       policy.meta_dtype_bits)
     print(f"arch={cfg.name} policy=K{args.bits_k}V{args.bits_v} "
-          f"g{policy.group_size} w{policy.window}")
-    print(f"generated {out.shape} in {dt:.2f}s  ({tput:.1f} tok/s)")
+          f"g{policy.group_size} w{policy.window} slots={args.batch} "
+          f"requests={n_req}")
+    print(f"served {n_req} requests / {total_toks} tokens in {dt:.2f}s "
+          f"({total_toks / dt:.1f} tok/s aggregate)")
+    print(f"latency ms/request: p50={_pct(lat, 50):.0f} "
+          f"p90={_pct(lat, 90):.0f} p99={_pct(lat, 99):.0f} "
+          f"max={max(lat):.0f}")
+    print(f"time-to-first-token ms: p50={_pct(ttft, 50):.0f} "
+          f"p90={_pct(ttft, 90):.0f} p99={_pct(ttft, 99):.0f}")
     print(f"KV bytes/token-head: fp16={fp16_b}  skvq={q_b} "
           f"({fp16_b / q_b:.1f}x compression)")
-    print("sample:", out[0][:16])
+    print("sample:", handles[0].result()[:16])
 
 
 if __name__ == "__main__":

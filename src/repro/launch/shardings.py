@@ -97,7 +97,7 @@ def batch_shardings(batch_spec: Dict, mesh: Mesh):
 def cache_shardings(caches_shape, cfg: ArchConfig, mesh: Mesh,
                     long_ctx: bool = False):
     """Decode-cache shardings. Leaves are layer-stacked: (L, B, S, H, ...) for
-    KV segments, (L, B, ...) for SSM/RWKV states, (L,) for lengths.
+    KV segments, (L, B, ...) for SSM/RWKV states and per-slot lengths.
 
     Default: batch over (pod, data), kv-heads over model when divisible
     (KV replication otherwise).  long_ctx (batch=1): context parallelism —

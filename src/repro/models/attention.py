@@ -94,21 +94,21 @@ def decode_attention(q, keys, values, pos_k, valid, t_now, cfg: ArchConfig,
                      window: Optional[jnp.ndarray] = None):
     """One-token attention over gathered cache segments.
 
-    q: (B,1,Hq,D); keys/values: (B,T,Hkv,D); pos_k/valid: (T,).
-    t_now: scalar absolute position of the query token.
+    q: (B,1,Hq,D); keys/values: (B,T,Hkv,D); pos_k/valid: (T,) or per-slot
+    (B,T).  t_now: absolute position of the query token — scalar, or (B,)
+    when each slot decodes at its own length.
     """
     b, _, hq, d = q.shape
     hkv = keys.shape[2]
     g = hq // hkv
-    w = jnp.int32(0) if window is None else window
     qg = q.reshape(b, 1, hkv, g, d)
     s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32) * _scale(cfg),
                    keys.astype(jnp.float32))  # (B,Hkv,G,1,T)
     s = softcap(s, cfg.attn_softcap)
-    dlt = t_now - pos_k
-    weff = jnp.where(w > 0, w, jnp.int32(2 ** 30))
-    ok = valid & (dlt >= 0) & (dlt < weff)
-    s = jnp.where(ok[None, None, None, None, :], s, _NEG)
+    ok = seg.attend_ok(pos_k, valid, t_now, seg.effective_window(window))
+    okb = (ok[None, None, None, None, :] if ok.ndim == 1
+           else ok[:, None, None, None, :])
+    s = jnp.where(okb, s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", p, values.astype(jnp.float32))
     return o.reshape(b, 1, hq, d).astype(q.dtype)
@@ -131,21 +131,27 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
                           extra_kv=None, q_pos=None):
     """Reference decode over the SKVQ cache (dequantize -> attend).
 
+    Per-slot aware: ``cache["length"]`` (and ``q_pos``) may be ``(B,)`` —
+    each batch slot attends at its own position with its own segment masks
+    (the request-level serving case).
+
     Perf levers (§Perf iterations; default off to keep the paper-faithful
     baseline intact):
       * ``chunk``: process the packed region in ``chunk``-token tiles under a
         scan with online-softmax merging — the dequantized cache never exists
         as one tensor (peak-memory term).
       * ``local_slice``: for local-attention layers with a STATIC window,
-        slice the packed region to the last ``local_slice`` tokens before
+        gather the last ``local_slice`` packed tokens of each slot before
         dequantizing (gemma-style 5:1 local stacks touch 1/512th of a 500k
         cache).  Requires static knowledge of is_local (unrolled decode).
     """
     w, ns = policy.window, policy.n_sink
+    b, _, hq, d = q.shape
+    lens = kvc.slot_lengths(cache, b)  # (B,)
     # default (append-first) path: the query token is already in the cache;
     # the pre-append path passes it via extra_kv and sets q_pos explicitly.
-    t_now = cache["length"] - 1 if q_pos is None else q_pos
-    b, _, hq, d = q.shape
+    t_now = lens - 1 if q_pos is None else jnp.broadcast_to(
+        jnp.asarray(q_pos), (b,))
     scale = _scale(cfg)
     weff = seg.effective_window(window)
 
@@ -153,7 +159,7 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
         hkv = cache["k"].shape[2]
         qg = q.reshape(b, hkv, hq // hkv, d)
         pos = jnp.arange(cache["k"].shape[1])
-        ok = seg.attend_ok(pos, pos < cache["length"], t_now, weff)
+        ok = seg.attend_ok(pos, pos[None, :] < lens[:, None], t_now, weff)
         kf = logical(cache["k"], "batch", "kv_seq", "kv_heads", None)
         vf = logical(cache["v"], "batch", "kv_seq", "kv_heads", None)
         num, m, l = _segment_partial(qg, kf.astype(dtype), vf.astype(dtype),
@@ -169,8 +175,8 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
     s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
     if s_q > 0:
         # count of tokens actually WRITTEN to the packed region (pre-append
-        # path: the current token is not in the buffers yet)
-        qc = seg.quantized_count(cache["length"], ns, w)
+        # path: the current token is not in the buffers yet) — (B,)
+        qc = seg.quantized_count(lens, ns, w)
         if packed_override is not None:
             # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
             k_qt, v_qt, j = packed_override
@@ -180,18 +186,18 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
             v_qt = {kk[3:]: vv for kk, vv in cache.items()
                     if kk.startswith("qv_")}
             if local_slice and s_q > local_slice:
+                # per-slot gather: each row slices its own last local_slice
+                # packed tokens (rows sit at different qc)
                 start = jnp.clip(qc - local_slice, 0, s_q - local_slice)
-                k_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
-                                                         local_slice, 1)
-                        for kk, vv in k_qt.items()}
-                v_qt = {kk: jax.lax.dynamic_slice_in_dim(vv, start,
-                                                         local_slice, 1)
-                        for kk, vv in v_qt.items()}
-                j = start + jnp.arange(local_slice)
+                j = start[:, None] + jnp.arange(local_slice)     # (B, ls)
+                tk = lambda a: jnp.take_along_axis(
+                    a, j[:, :, None, None], axis=1)
+                k_qt = {kk: tk(vv) for kk, vv in k_qt.items()}
+                v_qt = {kk: tk(vv) for kk, vv in v_qt.items()}
             else:
                 j = jnp.arange(k_qt["codes_hi"].shape[1])
-        pos_q, stored_q = seg.packed_segment(j, cache["length"], ns, w)
-        ok_q = seg.attend_ok(pos_q, stored_q, t_now, weff)
+        pos_q, stored_q = seg.packed_segment(j, lens, ns, w)
+        ok_q = seg.attend_ok(pos_q, stored_q, t_now, weff)      # (B, S_eff)
         gsz = min(policy.group_size, d)
 
         def dq(qt, bits):
@@ -212,7 +218,7 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
             resh = lambda t: jnp.swapaxes(
                 t.reshape(t.shape[0], nc, chunk, *t.shape[2:]), 0, 1)
             xs = (jax.tree.map(resh, k_qt), jax.tree.map(resh, v_qt),
-                  ok_q.reshape(nc, chunk))
+                  resh(ok_q))
             init = (jnp.zeros((b, hkv, hq // hkv, d), jnp.float32),
                     jnp.full((b, hkv, hq // hkv), _NEG, jnp.float32),
                     jnp.zeros((b, hkv, hq // hkv), jnp.float32))
@@ -228,24 +234,26 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
     # fp segments: sinks + window ring (+ current token, already in the ring
     # on the append-first path, or passed via extra_kv on the pre-append path)
     ks, vs, pos, valid = [], [], [], []
+
+    def push(p, stored):
+        pos.append(seg.bcast_rows(p, b))
+        valid.append(seg.bcast_rows(stored, b))
+
     if ns > 0 and "sink_k" in cache:
         ks.append(cache["sink_k"]); vs.append(cache["sink_v"])
-        p, stored = seg.sink_segment(ns, cache["length"])
-        pos.append(p); valid.append(stored)
+        push(*seg.sink_segment(ns, lens))
     if w > 0 and "win_k" in cache:
         ks.append(cache["win_k"]); vs.append(cache["win_v"])
-        p, stored = seg.window_segment(w, ns, cache["length"])
-        pos.append(p); valid.append(stored)
+        push(*seg.window_segment(w, ns, lens))
     if extra_kv is not None:
         k1, v1, p1 = extra_kv
         ks.append(k1); vs.append(v1)
-        pos.append(jnp.asarray(p1).reshape(1))
-        valid.append(jnp.ones((1,), bool))
+        push(jnp.asarray(p1).reshape(-1)[:, None], jnp.ones((1, 1), bool))
     if ks:
         kf = jnp.concatenate(ks, axis=1).astype(dtype)
         vf = jnp.concatenate(vs, axis=1).astype(dtype)
-        ok = seg.attend_ok(jnp.concatenate(pos), jnp.concatenate(valid),
-                           t_now, weff)
+        ok = seg.attend_ok(jnp.concatenate(pos, axis=1),
+                           jnp.concatenate(valid, axis=1), t_now, weff)
         parts.append(_segment_partial(qg, kf, vf, ok, scale, cfg))
 
     out = seg.finalize(parts)
@@ -255,9 +263,10 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
 def decode_attention_fp(q, cache, cfg: ArchConfig,
                         window: Optional[jnp.ndarray] = None):
     """Decode over a plain full-precision cache {k, v, length} (baseline)."""
-    t_now = cache["length"] - 1
+    lens = kvc.slot_lengths(cache, q.shape[0])
+    t_now = lens - 1
     pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)
-    valid = pos < cache["length"]
+    valid = pos[None, :] < lens[:, None]
     k = logical(cache["k"], "batch", "kv_seq", "kv_heads", None)
     v = logical(cache["v"], "batch", "kv_seq", "kv_heads", None)
     return decode_attention(q, k, v, pos, valid, t_now, cfg, window)

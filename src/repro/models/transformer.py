@@ -568,15 +568,17 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
 
     if calib is None:
         calib = identity_calib(cfg, policy)
-    t = caches["scan"]["length"][0]
-    # position of the new token = current cache length (uniform across layers)
-    pos = t if positions is None else positions
+    # per-slot position of each row's new token = that row's cache length
+    # (uniform across layers); scalar legacy caches broadcast to (B,)
+    t = jnp.broadcast_to(jnp.asarray(caches["scan"]["length"][0]), (b,))
     if cfg.mrope_sections:
-        pos3 = jnp.broadcast_to(pos, (3, b, 1)) if positions is None else positions
+        pos3 = (jnp.broadcast_to(t[None, :, None], (3, b, 1))
+                if positions is None else positions)
         rope = _rope_tables(cfg, pos3)
     else:
-        rope = _rope_tables(cfg, jnp.asarray(pos).reshape(1, 1) *
-                            jnp.ones((b, 1), jnp.int32))
+        pos = t if positions is None else jnp.broadcast_to(
+            jnp.asarray(positions).reshape(-1), (b,))
+        rope = _rope_tables(cfg, pos[:, None])
 
     def layer_fn(h, p, fl, cl, cache, local_slice=0, packed_override=None):
         extra = {k2: v2 for k2, v2 in cache.items()
@@ -648,14 +650,18 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
                    if "qk_codes_hi" in cstack else 0)
             any_local = any(cfg.layer_is_local(start + i) for i in range(n))
             if lw > 0 and any_local and s_q > lw:
+                # per-slot window frontier: each row slices its own last lw
+                # packed tokens (one gather on the whole (L, B, S, ...) stack)
                 qc = jnp.maximum(t - policy.n_sink - policy.window + 1, 0)
-                st0 = jnp.clip(qc - lw, 0, s_q - lw)
-                sl = lambda a: jax.lax.dynamic_slice_in_dim(a, st0, lw, axis=2)
+                st0 = jnp.clip(qc - lw, 0, s_q - lw)          # (B,)
+                gidx = st0[:, None] + jnp.arange(lw)          # (B, lw)
+                sl = lambda a: jnp.take_along_axis(
+                    a, gidx[None, :, :, None, None], axis=2)
                 k_sl = {k2[3:]: sl(v2) for k2, v2 in cstack.items()
                         if k2.startswith("qk_")}
                 v_sl = {k2[3:]: sl(v2) for k2, v2 in cstack.items()
                         if k2.startswith("qv_")}
-                presliced = (k_sl, v_sl, st0 + jnp.arange(lw))
+                presliced = (k_sl, v_sl, gidx)
             outs = []
             for i in range(n):
                 p = _tree_slice(pstack, i, i + 1)

@@ -1,5 +1,7 @@
-from .engine import (ServeSession, make_prefill_fn, make_decode_fn,
-                     make_multi_decode_fn, sample_token)
+from .engine import (Engine, Request, StreamHandle, ServeSession,
+                     make_prefill_fn, make_decode_fn, make_multi_decode_fn,
+                     sample_token, sample_per_slot)
 
-__all__ = ["ServeSession", "make_prefill_fn", "make_decode_fn",
-           "make_multi_decode_fn", "sample_token"]
+__all__ = ["Engine", "Request", "StreamHandle", "ServeSession",
+           "make_prefill_fn", "make_decode_fn", "make_multi_decode_fn",
+           "sample_token", "sample_per_slot"]

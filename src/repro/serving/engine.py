@@ -1,43 +1,90 @@
-"""Serving engine: SKVQ prefill + scanned multi-token decode + slot scheduler.
+"""Request-level serving engine: per-slot admission, ragged continuous batching.
 
-Decode is the paper's deployment target: each step is KV-bandwidth-bound and
-the SKVQ cache cuts bytes/step ~8× (K2V1.5 + fp8 metadata).  Two engine-level
-design points make that win *servable*:
+The paper's deployment story is long-context *serving* — SKVQ exists so a 7b
+model can hold million-token contexts and decode ~7× faster.  Real serving
+traffic is request-shaped, not array-shaped: prompts arrive with different
+lengths, budgets and sampling settings, and a finished request should free
+its slot immediately.  This module is the front door for that workload:
 
-* **Backend-pluggable decode** — every step dispatches through
-  ``repro.models.backends`` ("reference" jnp vs fused "pallas" kernels).
-* **Scanned multi-token decode** — ``make_multi_decode_fn`` jits a
-  ``jax.lax.scan`` over N decode steps with on-device sampling (greedy or
-  temperature via ``jax.random.categorical``) and per-slot done/length masks,
-  so the host syncs once per N tokens instead of once per token.  The old
-  per-token loop round-tripped to host (``np.asarray``) after every step —
-  at ~1 ms/sync that dominated small-model decode.
+* :class:`Request` — one generation job (prompt, max_new, temperature,
+  eos_id, seed).
+* :class:`Engine` — ``submit() -> StreamHandle``, then ``step()``/``run()``.
+  ``batch_slots`` fixed decode lanes share one jitted scanned-decode
+  executable; admission prefills each queued request (requests with equal
+  prompt lengths batch together) and **inserts it into a free slot only**
+  (``kv_cache.insert_slot``) — no other slot is touched, no cross-slot
+  padding.  Retirement zeroes the slot (``kv_cache.reset_slot``) and the
+  next queued request takes it at the next step.
+* :class:`StreamHandle` — tokens stream into ``handle.tokens`` after every
+  sync; ``handle.finished``/``finish_reason`` and wall-clock latency marks
+  (submit/first-token/finish) ride along for percentile reporting.
 
-The scheduler below stays deliberately simple but real: fixed batch slots,
-per-slot EOS masking, join between admission waves (continuous batching at
-step granularity).
+The enabler underneath is the **per-slot cache length**: ``cache["length"]``
+is ``(B,)``, so every segment mask, RoPE position and decode-append scatter
+is per-row (``repro.core``), and slots at wildly different positions decode
+in one batched step.
+
+Decode itself is the scanned multi-token step of DESIGN.md §6: a jitted
+``lax.scan`` over ``steps_per_sync`` decode steps with on-device per-slot
+sampling (greedy or per-slot temperature via vmapped
+``jax.random.categorical``) and per-slot EOS pinning — one host sync per
+chunk, ONE compiled executable regardless of each request's ``max_new``
+(hosts discard the surplus tail of a chunk).
+
+:class:`ServeSession` remains as a thin compatibility shim: the lock-step
+array API expressed as ``batch_slots`` equal requests on an :class:`Engine`
+(greedy streams are bit-identical to the pre-engine behavior; asserted in
+tests/test_backends.py and tests/test_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..core import kv_cache as kvc
 from ..core.policy import QuantPolicy
 from ..models.config import ArchConfig
 from ..models import transformer as T
 
 
+# ------------------------------------------------------------------ sampling
+
 def sample_token(logits, temperature: float, key) -> jnp.ndarray:
-    """logits (B, 1, V) -> (B, 1) int32, entirely on device."""
+    """logits (B, 1, V) -> (B, 1) int32, entirely on device (shared temp)."""
     if temperature <= 0:
         return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     return jax.random.categorical(
         key, logits[:, -1] / temperature, axis=-1)[:, None].astype(jnp.int32)
 
+
+def sample_per_slot(logits, temps, keys) -> jnp.ndarray:
+    """Per-slot sampling: logits (B, V), temps (B,), keys (B, 2) -> (B,) i32.
+
+    Rows with ``temps <= 0`` take the greedy argmax; others draw from the
+    temperature-scaled categorical with their own PRNG key, so co-scheduled
+    requests never share randomness.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(key, row, t):
+        return jax.random.categorical(key, row / jnp.maximum(t, 1e-6), axis=-1)
+
+    samp = jax.vmap(one)(keys, logits.astype(jnp.float32), temps)
+    return jnp.where(temps > 0, samp.astype(jnp.int32), greedy)
+
+
+def _split_keys(keys):
+    """(B, 2) PRNG keys -> (new_keys, subkeys), each (B, 2)."""
+    sp = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    return sp[:, 0], sp[:, 1]
+
+
+# ------------------------------------------------------------- jitted pieces
 
 def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
                     calib=None, dtype=None, backend=None) -> Callable:
@@ -60,123 +107,379 @@ def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
 
 
 def make_multi_decode_fn(cfg: ArchConfig, policy: QuantPolicy, n_tokens: int,
-                         calib=None, dtype=None, backend=None,
-                         temperature: float = 0.0,
-                         eos_id: Optional[int] = None) -> Callable:
-    """Jitted ``lax.scan`` over ``n_tokens`` decode steps.
+                         calib=None, dtype=None, backend=None) -> Callable:
+    """Jitted ``lax.scan`` over ``n_tokens`` decode steps, per-slot everything.
 
-    Signature: ``(params, token, caches, key, done, lengths, n_valid) ->
-    (tokens (B, n), token, caches, key, done, lengths)`` — one host sync per
-    call, everything else (sampling, EOS masking, per-slot lengths) on device.
-    Slots that hit EOS keep stepping (the scan is shape-static) but their
-    emitted tokens are pinned to ``eos_id`` and their length stops counting.
-
-    ``n_valid`` (traced scalar ≤ n_tokens) marks how many steps the caller
-    will actually consume: the engine always runs the same-size scan (ONE
-    compiled executable regardless of max_new) and discards the surplus;
-    lengths only count the consumed steps.
+    Signature: ``(params, token (B,1), caches, keys (B,2), done (B,),
+    temps (B,), eos (B,)) -> (tokens (B, n), token, caches, keys, done)`` —
+    one host sync per call.  ``temps`` selects greedy vs categorical per
+    slot, ``eos`` is the per-slot EOS id (< 0 disables EOS handling for that
+    slot).  Slots that hit their EOS keep stepping (the scan is shape-static)
+    but their emitted tokens are pinned to their ``eos`` id; the host-side
+    engine discards whatever tail of the chunk a request does not need, so
+    ONE compiled executable serves every ``max_new``.
     """
     @jax.jit
-    def multi(params, token, caches, key, done, lengths, n_valid):
-        def step(carry, i):
-            tok, caches, key, done, lengths = carry
+    def multi(params, token, caches, keys, done, temps, eos):
+        def step(carry, _):
+            tok, caches, keys, done = carry
             logits, caches = T.decode_step(params, cfg, tok, caches, policy,
                                            calib=calib, dtype=dtype,
                                            backend=backend)
-            key, sub = jax.random.split(key)
-            nxt = sample_token(logits, temperature, sub)
-            if eos_id is not None:
-                nxt = jnp.where(done[:, None], jnp.int32(eos_id), nxt)
-                done = done | (nxt[:, 0] == eos_id)
-            lengths = lengths + ((i < n_valid) & ~done).astype(jnp.int32)
-            return (nxt, caches, key, done, lengths), nxt[:, 0]
+            keys, subs = _split_keys(keys)
+            nxt = sample_per_slot(logits[:, -1], temps, subs)
+            has = eos >= 0
+            nxt = jnp.where(done & has, eos, nxt)
+            done = done | (has & (nxt == eos))
+            return (nxt[:, None], caches, keys, done), nxt
 
-        carry, toks = jax.lax.scan(
-            step, (token, caches, key, done, lengths), jnp.arange(n_tokens))
-        token, caches, key, done, lengths = carry
-        return jnp.swapaxes(toks, 0, 1), token, caches, key, done, lengths
+        carry, toks = jax.lax.scan(step, (token, caches, keys, done), None,
+                                   length=n_tokens)
+        token, caches, keys, done = carry
+        return jnp.swapaxes(toks, 0, 1), token, caches, keys, done
 
     return multi
 
 
+# ------------------------------------------------------------------ requests
+
 @dataclasses.dataclass
 class Request:
-    prompt: np.ndarray
-    max_new: int = 32
-    out: Optional[List[int]] = None
+    """One generation job.
 
+    prompt: 1-D int32 token ids; max_new: generation budget (the stream
+    always ends at ``max_new`` tokens or at the first ``eos_id``);
+    temperature <= 0 means greedy; seed feeds this request's private PRNG
+    stream (independent of co-scheduled requests).
+    """
+    prompt: Sequence[int]
+    max_new: int = 32
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class StreamHandle:
+    """Live view of one submitted request.
+
+    ``tokens`` grows after every engine sync; ``finished`` flips when the
+    request hits EOS ("eos") or its max_new budget ("length").  Wall-clock
+    marks (``submit_time``/``first_token_time``/``finish_time``) support
+    per-request latency percentiles in the serving CLI.
+    """
+
+    def __init__(self, request: Request, rid: int):
+        self.request = request
+        self.rid = rid
+        self.tokens: List[int] = []
+        self.finished = False
+        self.finish_reason: Optional[str] = None
+        self.submit_time = time.time()
+        self.first_token_time: Optional[float] = None
+        self.finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished
+
+    def result(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+    def __repr__(self):
+        state = self.finish_reason if self.finished else "running"
+        return (f"StreamHandle(rid={self.rid}, tokens={len(self.tokens)}, "
+                f"{state})")
+
+
+# -------------------------------------------------------------------- engine
+
+class Engine:
+    """Continuous-batching serving engine over ``batch_slots`` decode lanes.
+
+    ``submit`` validates and queues a :class:`Request` and returns its
+    :class:`StreamHandle`; ``step`` retires finished slots, admits queued
+    requests into free slots (equal-length prompts prefill as one batch; a
+    freed slot is refilled without touching any other slot), and runs one
+    scanned decode chunk of ``steps_per_sync`` tokens; ``run`` steps until
+    the given handles (default: everything submitted) finish.
+
+    ``backend`` selects the decode-attention implementation (None = host
+    default: pallas on TPU, reference elsewhere).  ``max_len`` is the
+    per-slot cache capacity — every admitted request must satisfy
+    ``len(prompt) + max_new <= max_len`` (checked at submit time).
+    """
+
+    def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
+                 batch_slots: int, max_len: int, calib=None, seed: int = 0,
+                 backend=None, steps_per_sync: int = 8, dtype=None):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {max_len}")
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.max_len = max_len
+        self.calib = calib
+        self.backend = backend
+        self.dtype = dtype
+        self.seed = seed
+        self.steps_per_sync = max(1, steps_per_sync)
+        self.batch_slots = batch_slots
+        self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib,
+                                          dtype=dtype, backend=backend)
+        self._multi: Optional[Callable] = None  # lazily-built scanned step
+
+        # host-side per-slot state (tiny; round-trips exactly)
+        b = batch_slots
+        self._slot_handle: List[Optional[StreamHandle]] = [None] * b
+        self._tok = np.zeros((b, 1), np.int32)
+        self._done = np.ones((b,), bool)          # free slots ride as "done"
+        self._keys = np.zeros((b, 2), np.uint32)
+        self._temps = np.zeros((b,), np.float32)
+        self._eos = np.full((b,), -1, np.int32)
+        self._queue: List[StreamHandle] = []
+        self._caches = None                        # allocated at 1st admission
+        self._insert = None
+        self._reset = None
+        self._next_rid = 0
+        self.n_completed = 0   # callers keep their own handles for stats
+
+    # ------------------------------------------------------------ public API
+
+    def submit(self, request: Request) -> StreamHandle:
+        """Validate + queue a request; returns its stream handle.
+
+        Raises ``ValueError`` at submit time for inputs that would otherwise
+        fail deep inside jit with opaque shape errors.
+        """
+        prompt = np.asarray(request.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("Request.prompt must be a non-empty 1-D "
+                             "sequence of token ids")
+        if request.max_new < 1:
+            raise ValueError(f"Request.max_new must be >= 1, "
+                             f"got {request.max_new}")
+        if prompt.size + request.max_new > self.max_len:
+            raise ValueError(
+                f"prompt_len ({prompt.size}) + max_new ({request.max_new}) "
+                f"= {prompt.size + request.max_new} exceeds the engine's "
+                f"per-slot cache capacity max_len={self.max_len}; shorten "
+                f"the prompt/budget or build the Engine with a larger "
+                f"max_len")
+        request = dataclasses.replace(request, prompt=prompt)
+        handle = StreamHandle(request, self._next_rid)
+        self._next_rid += 1
+        self._queue.append(handle)
+        return handle
+
+    def step(self) -> bool:
+        """One scheduler tick: retire -> admit -> one decode chunk.
+
+        Returns False when there is nothing left to do (no active slots and
+        an empty queue)."""
+        self._retire()
+        self._admit()
+        active = [i for i in range(self.batch_slots)
+                  if self._slot_handle[i] is not None]
+        if not active:
+            return False
+        # a request can finish at admission (max_new=1 or instant EOS) —
+        # only spin the decode chunk when someone still needs tokens
+        if any(not self._slot_handle[i].finished for i in active):
+            self._decode_chunk()
+        self._retire()
+        return True
+
+    def run(self, handles: Optional[List[StreamHandle]] = None) -> None:
+        """Step until the given handles (default: all submitted) finish."""
+        def pending():
+            if handles is not None:
+                return any(not h.finished for h in handles)
+            return bool(self._queue) or any(
+                h is not None for h in self._slot_handle)
+
+        while pending():
+            if not self.step():
+                break
+
+    # --------------------------------------------------------------- details
+
+    def _multi_fn(self) -> Callable:
+        # ONE compiled executable of scan length steps_per_sync, reused for
+        # every request mix — per-slot temps/eos are traced arrays, so a
+        # varied serving process never recompiles the decode step.
+        if self._multi is None:
+            self._multi = make_multi_decode_fn(
+                self.cfg, self.policy, self.steps_per_sync, calib=self.calib,
+                dtype=self.dtype, backend=self.backend)
+        return self._multi
+
+    def _retire(self):
+        for i, h in enumerate(self._slot_handle):
+            if h is not None and h.finished:
+                self._slot_handle[i] = None
+                self._done[i] = True
+                self._eos[i] = -1
+                if self._caches is not None:
+                    if self._reset is None:
+                        self._reset = jax.jit(
+                            lambda c, j: kvc.reset_slot(c, j, batch_axis=1),
+                            donate_argnums=0)
+                    self._caches = self._reset(self._caches, jnp.int32(i))
+
+    def _admit(self):
+        free = [i for i in range(self.batch_slots)
+                if self._slot_handle[i] is None]
+        if not free or not self._queue:
+            return
+        take, rest = self._queue[:len(free)], self._queue[len(free):]
+        self._queue = rest
+        # group equal-length prompts into one batched prefill (a uniform
+        # ServeSession wave compiles/executes exactly like the legacy
+        # lock-step path); distinct lengths prefill batch-of-1 — no
+        # cross-slot padding ever enters the model.
+        groups: Dict[int, List[StreamHandle]] = {}
+        for h in take:
+            groups.setdefault(len(h.request.prompt), []).append(h)
+        it = iter(free)
+        for plen, hs in groups.items():
+            self._admit_group(hs, [next(it) for _ in hs])
+
+    def _admit_group(self, handles: List[StreamHandle], slots: List[int]):
+        prompts = np.stack([h.request.prompt for h in handles])
+        logits, caches = self.prefill_fn(
+            self.params, {"tokens": jnp.asarray(prompts, jnp.int32)})
+        # per-request stream = engine seed folded with the request seed:
+        # replayable per request, perturbable per engine
+        keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                             h.request.seed)
+                          for h in handles])
+        keys, subs = _split_keys(keys)
+        temps = jnp.asarray([h.request.temperature for h in handles],
+                            jnp.float32)
+        first = np.asarray(sample_per_slot(logits[:, -1], temps, subs))
+        keys = np.asarray(keys)
+
+        if self._caches is None:
+            self._caches = self._alloc_like(caches)
+        if self._insert is None:
+            self._insert = jax.jit(
+                lambda dst, src, j, row: kvc.insert_slot(
+                    dst, j, src, src_slot=row, batch_axis=1),
+                donate_argnums=0)
+        now = time.time()
+        for row, (h, slot) in enumerate(zip(handles, slots)):
+            self._caches = self._insert(self._caches, caches, jnp.int32(slot),
+                                        jnp.int32(row))
+            req = h.request
+            self._slot_handle[slot] = h
+            self._tok[slot, 0] = first[row]
+            self._keys[slot] = keys[row]
+            self._temps[slot] = max(req.temperature, 0.0)
+            self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+            self._done[slot] = (req.eos_id is not None
+                                and int(first[row]) == req.eos_id)
+            h.first_token_time = now
+            self._deliver(slot, [int(first[row])])
+
+    def _alloc_like(self, caches):
+        """Zeroed engine cache: the prefilled group's structure with the
+        batch axis (axis 1 of every layer-stacked leaf) widened to
+        batch_slots."""
+        def widen(x):
+            shape = (x.shape[0], self.batch_slots) + x.shape[2:]
+            return jnp.zeros(shape, x.dtype)
+        return jax.tree.map(widen, caches)
+
+    def _decode_chunk(self):
+        toks, tok, caches, keys, done = self._multi_fn()(
+            self.params, jnp.asarray(self._tok), self._caches,
+            jnp.asarray(self._keys), jnp.asarray(self._done),
+            jnp.asarray(self._temps), jnp.asarray(self._eos))
+        self._caches = caches
+        toks = np.asarray(toks)                 # ONE sync per chunk
+        # np.array copies: jax->numpy views are read-only and the scheduler
+        # mutates these in place at retire/admit time
+        self._tok = np.array(tok)
+        self._keys = np.array(keys)
+        self._done = np.array(done)
+        for i in range(self.batch_slots):
+            if self._slot_handle[i] is not None:
+                self._deliver(i, toks[i].tolist())
+
+    def _deliver(self, slot: int, tokens: List[int]):
+        """Append chunk tokens to a slot's handle, honoring eos/max_new."""
+        h = self._slot_handle[slot]
+        req = h.request
+        for t in tokens:
+            if h.finished:
+                break
+            h.tokens.append(int(t))
+            if req.eos_id is not None and int(t) == req.eos_id:
+                self._finish(h, "eos")
+            elif len(h.tokens) >= req.max_new:
+                self._finish(h, "length")
+
+    def _finish(self, h: StreamHandle, reason: str):
+        h.finished = True
+        h.finish_reason = reason
+        h.finish_time = time.time()
+        self.n_completed += 1
+
+
+# ------------------------------------------------------- compatibility shim
 
 class ServeSession:
-    """Slot-based serving: one prefill per admission wave, shared decode step.
+    """Lock-step array API over :class:`Engine` (compatibility shim).
 
-    ``steps_per_sync`` is N in the scanned decode: tokens stream back to the
-    host in N-sized chunks (≤ 1 host sync per N generated tokens).
-    ``backend`` selects the decode-attention implementation (None = host
-    default: pallas on TPU, reference elsewhere).
+    ``generate(prompts (B, S), max_new)`` submits one equal request per
+    batch slot and runs the engine to completion; the B requests share a
+    prompt length, so admission is a single batched prefill and the greedy
+    token streams are bit-identical to the pre-engine lock-step path
+    (asserted in tests).  New code should talk to :class:`Engine` directly —
+    it also admits ragged prompts and per-request budgets.
     """
 
     def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
                  batch_slots: int, max_len: int, calib=None, temperature=0.0,
                  seed: int = 0, backend=None, steps_per_sync: int = 8,
                  eos_id: Optional[int] = None):
-        self.params, self.cfg, self.policy = params, cfg, policy
-        self.max_len = max_len
-        self.calib = calib
-        self.temperature = temperature
-        self.backend = backend
-        self.steps_per_sync = max(1, steps_per_sync)
-        self.eos_id = eos_id
-        self.key = jax.random.PRNGKey(seed)
-        self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib,
-                                          backend=backend)
+        self.engine = Engine(params, cfg, policy, batch_slots=batch_slots,
+                             max_len=max_len, calib=calib, seed=seed,
+                             backend=backend, steps_per_sync=steps_per_sync)
         self.batch_slots = batch_slots
-        self._multi: Optional[Callable] = None  # lazily-built scanned step
-
-    def _multi_fn(self) -> Callable:
-        # ONE compiled executable of scan length steps_per_sync, reused for
-        # every max_new (the tail chunk passes n_valid < steps_per_sync and
-        # the surplus tokens are discarded) — a varied-max_new serving
-        # process would otherwise recompile per distinct tail size.
-        if self._multi is None:
-            self._multi = make_multi_decode_fn(
-                self.cfg, self.policy, self.steps_per_sync, calib=self.calib,
-                backend=self.backend, temperature=self.temperature,
-                eos_id=self.eos_id)
-        return self._multi
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.seed = seed
 
     def generate(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
-        """prompts: (B, S) int32 (B == batch_slots). Returns (B, max_new).
-
-        Emits the same token sequence as a per-token loop (greedy-exact;
-        asserted in tests/test_backends.py) while syncing with the host only
-        once per ``steps_per_sync`` tokens.
-        """
+        """prompts: (B, S) int32 (B == batch_slots). Returns (B, max_new);
+        post-EOS positions are padded with ``eos_id``."""
+        prompts = np.asarray(prompts)
+        if prompts.ndim != 2:
+            raise ValueError(f"prompts must be (B, S), got {prompts.shape}")
         b = prompts.shape[0]
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        logits, caches = self.prefill_fn(self.params, batch)
-        self.key, sub = jax.random.split(self.key)
-        tok = sample_token(logits, self.temperature, sub)
-
-        done = jnp.zeros((b,), bool)
-        lengths = jnp.ones((b,), jnp.int32)
-        if self.eos_id is not None:
-            done = tok[:, 0] == self.eos_id
-            lengths = (~done).astype(jnp.int32)
-
-        chunks = [np.asarray(tok)]          # sync 1 (first token + warm start)
-        remaining = max_new - 1
-        while remaining > 0:
-            n = min(self.steps_per_sync, remaining)
-            toks, tok, caches, self.key, done, lengths = self._multi_fn()(
-                self.params, tok, caches, self.key, done, lengths,
-                jnp.int32(n))
-            chunks.append(np.asarray(toks)[:, :n])  # ONE sync per n tokens
-            remaining -= n
-            if self.eos_id is not None and bool(np.asarray(done).all()):
-                break
-        out = np.concatenate(chunks, axis=1)
-        if out.shape[1] < max_new and self.eos_id is not None:
-            pad = np.full((b, max_new - out.shape[1]), self.eos_id, out.dtype)
-            out = np.concatenate([out, pad], axis=1)
-        self.lengths = np.asarray(lengths)  # per-slot generated-token counts
-        return out[:, :max_new]
+        if b != self.batch_slots:
+            raise ValueError(
+                f"prompts batch ({b}) != batch_slots ({self.batch_slots}); "
+                f"ServeSession is the lock-step shim — submit to Engine "
+                f"directly for ragged batches")
+        if prompts.shape[1] + max_new > self.max_len:
+            raise ValueError(
+                f"prompt_len ({prompts.shape[1]}) + max_new ({max_new}) "
+                f"exceeds max_len ({self.max_len})")
+        handles = [self.engine.submit(Request(
+            prompt=prompts[i], max_new=max_new, temperature=self.temperature,
+            eos_id=self.eos_id, seed=self.seed + i)) for i in range(b)]
+        self.engine.run(handles)
+        out = np.full((b, max_new),
+                      self.eos_id if self.eos_id is not None else 0, np.int32)
+        lengths = np.zeros((b,), np.int32)
+        for i, h in enumerate(handles):
+            toks = h.result()
+            out[i, :len(toks)] = toks     # tail keeps the eos_id fill
+            ne = toks != self.eos_id if self.eos_id is not None else \
+                np.ones(len(toks), bool)
+            lengths[i] = int(ne.argmin()) if not ne.all() else len(toks)
+        self.lengths = lengths            # per-slot generated-token counts
+        return out

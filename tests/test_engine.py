@@ -1,0 +1,239 @@
+"""Request-level engine: per-slot cache lengths, ragged continuous batching,
+slot lifecycle, and early input validation.
+
+Acceptance for the length redesign:
+  (a) uniform-length batches: Engine / ServeSession greedy streams are
+      bit-identical to a per-token decode loop;
+  (b) ragged batches across admission waves: every request's stream exactly
+      matches a batch-of-1 run of the same prompt — on BOTH backends;
+  (c) slot reuse after EOS leaves no stale KV (reset_slot + re-admit parity).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantPolicy
+from repro.core import kv_cache as kvc
+from repro.core import segments as seg
+from repro.models.config import ArchConfig
+from repro.models import transformer as T
+from repro.serving import Engine, Request, ServeSession, make_decode_fn
+
+CFG = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, head_dim=32, d_ff=32, vocab_size=64)
+POL = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=8, n_sink=4)
+BACKENDS = ["reference", "pallas"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(2))
+
+
+def _prompt(rng, n):
+    return np.asarray(rng.integers(0, CFG.vocab_size, (n,)), np.int32)
+
+
+# ----------------------------------------------------- per-slot segment math
+
+def test_per_slot_segment_masks_match_per_row_scalar(rng):
+    """(B,) lengths must give exactly the per-row scalar-length masks."""
+    lens = jnp.asarray([3, 11, 26], jnp.int32)
+    for fn in (lambda L: seg.sink_segment(4, L),
+               lambda L: seg.window_segment(8, 4, L),
+               lambda L: seg.packed_segment(jnp.arange(16), L, 4, 8)):
+        pos_b, stored_b = fn(lens)
+        for i, L in enumerate(np.asarray(lens)):
+            pos_1, stored_1 = fn(jnp.int32(L))
+            np.testing.assert_array_equal(
+                np.asarray(seg.bcast_rows(pos_b, 3)[i]), np.asarray(pos_1))
+            np.testing.assert_array_equal(
+                np.asarray(seg.bcast_rows(stored_b, 3)[i]),
+                np.asarray(stored_1))
+    ok_b = seg.attend_ok(jnp.arange(16), jnp.ones(16, bool), lens - 1,
+                         jnp.int32(2 ** 30))
+    for i, L in enumerate(np.asarray(lens)):
+        ok_1 = seg.attend_ok(jnp.arange(16), jnp.ones(16, bool),
+                             jnp.int32(L - 1), jnp.int32(2 ** 30))
+        np.testing.assert_array_equal(np.asarray(ok_b[i]), np.asarray(ok_1))
+
+
+# --------------------------------------------------- (a) uniform bit-parity
+
+def test_uniform_engine_bitmatches_per_token_loop(params, rng):
+    """Per-slot lengths must not change uniform-batch greedy numerics: the
+    Engine (and the ServeSession shim over it) reproduce a per-token decode
+    loop token-for-token."""
+    prompts = np.stack([_prompt(rng, 12) for _ in range(2)])
+    max_new = 9
+
+    logits, caches = T.prefill_model(params, CFG,
+                                     {"tokens": jnp.asarray(prompts)}, POL,
+                                     max_len=40)
+    decode = make_decode_fn(CFG, POL)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    want = []
+    for _ in range(max_new):
+        want.append(np.asarray(tok)[:, 0])
+        logits, caches = decode(params, tok, caches)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    want = np.stack(want, axis=1)
+
+    sess = ServeSession(params, CFG, POL, batch_slots=2, max_len=40,
+                        steps_per_sync=4)
+    np.testing.assert_array_equal(sess.generate(prompts, max_new=max_new),
+                                  want)
+
+    eng = Engine(params, CFG, POL, batch_slots=2, max_len=40,
+                 steps_per_sync=4)
+    handles = [eng.submit(Request(prompt=prompts[i], max_new=max_new))
+               for i in range(2)]
+    eng.run(handles)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(h.result(), want[i])
+
+
+# ----------------------------------- (b) ragged continuous batching parity
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_ragged_waves_match_batch_of_1(params, rng, backend):
+    """Two admission waves with unequal prompt lengths AND unequal max_new:
+    each request's greedy stream must exactly equal its batch-of-1 run."""
+    shapes = [(9, 6), (13, 3), (11, 7), (7, 5)]   # 4 requests on 2 slots
+    reqs = [Request(prompt=_prompt(rng, L), max_new=m) for L, m in shapes]
+
+    eng = Engine(params, CFG, POL, batch_slots=2, max_len=40,
+                 steps_per_sync=4, backend=backend)
+    handles = [eng.submit(r) for r in reqs]
+    eng.run(handles)
+
+    for h, r in zip(handles, reqs):
+        assert h.finished and h.finish_reason == "length"
+        assert len(h.tokens) == r.max_new
+        solo = Engine(params, CFG, POL, batch_slots=1, max_len=40,
+                      steps_per_sync=4, backend=backend)
+        ref = solo.submit(Request(prompt=r.prompt, max_new=r.max_new))
+        solo.run([ref])
+        np.testing.assert_array_equal(h.result(), ref.result())
+
+
+def test_freed_slot_admits_next_request(params, rng):
+    """A short request finishing frees its slot for the queue while the long
+    request keeps decoding (continuous batching at chunk granularity)."""
+    eng = Engine(params, CFG, POL, batch_slots=2, max_len=64,
+                 steps_per_sync=2)
+    long_h = eng.submit(Request(prompt=_prompt(rng, 10), max_new=12))
+    short_h = eng.submit(Request(prompt=_prompt(rng, 8), max_new=2))
+    queued_h = eng.submit(Request(prompt=_prompt(rng, 6), max_new=2))
+    eng.step()                      # wave 1 admitted + first chunk
+    assert short_h.finished and not long_h.finished
+    assert len(queued_h.tokens) == 0
+    eng.step()                      # freed slot admits the queued request
+    assert len(queued_h.tokens) > 0
+    eng.run()
+    assert long_h.finished and queued_h.finished
+
+
+# ------------------------------------------------ (c) slot reuse, no stale KV
+
+def test_slot_reuse_after_eos_no_stale_kv(params, rng):
+    """Retire-by-EOS then re-admit into the same slot: the re-admitted
+    request's stream must match a fresh batch-of-1 run (reset_slot left
+    nothing behind)."""
+    p_a, p_b = _prompt(rng, 10), _prompt(rng, 10)
+    probe = Engine(params, CFG, POL, batch_slots=1, max_len=40,
+                   steps_per_sync=4)
+    hp = probe.submit(Request(prompt=p_a, max_new=8))
+    probe.run([hp])
+    eos = int(hp.tokens[2])        # force request A to "finish" at token 3
+
+    eng = Engine(params, CFG, POL, batch_slots=1, max_len=40,
+                 steps_per_sync=4)
+    ha = eng.submit(Request(prompt=p_a, max_new=8, eos_id=eos))
+    hb = eng.submit(Request(prompt=p_b, max_new=6))   # reuses the only slot
+    eng.run([ha, hb])
+    assert ha.finish_reason == "eos" and hb.finish_reason == "length"
+
+    solo = Engine(params, CFG, POL, batch_slots=1, max_len=40,
+                  steps_per_sync=4)
+    ref = solo.submit(Request(prompt=p_b, max_new=6))
+    solo.run([ref])
+    np.testing.assert_array_equal(hb.result(), ref.result())
+
+
+def test_reset_and_insert_slot_leaf_parity(rng):
+    """kv-level: reset_slot zeroes exactly one slot; insert_slot reproduces a
+    fresh prefill bit-for-bit in that slot."""
+    k = jnp.asarray(rng.normal(size=(2, 20, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 20, 2, 32)), jnp.float32)
+    cache = kvc.prefill(k, v, 40, POL)
+    reset = kvc.reset_slot(cache, 0)
+    for name, leaf in reset.items():
+        assert float(jnp.abs(leaf[0].astype(jnp.float32)).max()) == 0.0, name
+        np.testing.assert_array_equal(np.asarray(leaf[1]),
+                                      np.asarray(cache[name][1]), err_msg=name)
+    solo = kvc.prefill(k[:1], v[:1], 40, POL)
+    back = kvc.insert_slot(reset, 0, solo)
+    for name, leaf in back.items():
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(cache[name]), err_msg=name)
+
+
+# ----------------------------------------------------------- early validation
+
+def test_submit_validation_errors(params):
+    eng = Engine(params, CFG, POL, batch_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=np.zeros(30, np.int32), max_new=8))
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.submit(Request(prompt=np.zeros(0, np.int32)))
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit(Request(prompt=np.zeros(4, np.int32), max_new=0))
+    with pytest.raises(ValueError, match="batch_slots"):
+        Engine(params, CFG, POL, batch_slots=0, max_len=32)
+
+
+def test_session_validation_errors(params):
+    sess = ServeSession(params, CFG, POL, batch_slots=2, max_len=32)
+    with pytest.raises(ValueError, match="batch_slots"):
+        sess.generate(np.zeros((3, 8), np.int32), max_new=4)
+    with pytest.raises(ValueError, match="max_len"):
+        sess.generate(np.zeros((2, 30), np.int32), max_new=8)
+
+
+# -------------------------------------------------------- streaming + timing
+
+def test_stream_handle_progress_and_latency_marks(params, rng):
+    eng = Engine(params, CFG, POL, batch_slots=1, max_len=40,
+                 steps_per_sync=2)
+    h = eng.submit(Request(prompt=_prompt(rng, 8), max_new=5))
+    assert not h.finished and h.first_token_time is None
+    seen = [len(h.tokens)]
+    while eng.step():
+        seen.append(len(h.tokens))
+    assert h.finished and h.finish_reason == "length"
+    assert seen[-1] == 5 and seen == sorted(seen)   # tokens only accumulate
+    assert h.first_token_time is not None
+    assert h.finish_time >= h.first_token_time >= h.submit_time
+
+
+def test_per_request_seed_and_temperature(params, rng):
+    """Same seed -> same sampled stream; co-scheduled requests keep private
+    RNG streams (seeds differ -> streams almost surely differ)."""
+    p = _prompt(rng, 10)
+
+    def sample(seeds):
+        eng = Engine(params, CFG, POL, batch_slots=2, max_len=40,
+                     steps_per_sync=4)
+        hs = [eng.submit(Request(prompt=p, max_new=8, temperature=1.5,
+                                 seed=s)) for s in seeds]
+        eng.run(hs)
+        return [h.result() for h in hs]
+
+    a0, a1 = sample([7, 7])
+    b0, b1 = sample([7, 123])
+    np.testing.assert_array_equal(a0, a1)   # same seed, same prompt
+    np.testing.assert_array_equal(a0, b0)   # independent of the OTHER slot
+    assert not np.array_equal(b0, b1)       # different seeds diverge

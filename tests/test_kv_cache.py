@@ -87,5 +87,6 @@ def test_gather_positions_cover_all(rng):
     k, v = _mk(rng, b, s, h, d)
     cache = kvc.prefill(k, v, 40, POL)
     _, _, pos, valid = kvc.gather_attention_inputs(cache, d, POL)
-    got = sorted(np.asarray(pos)[np.asarray(valid)].tolist())
+    # positions/valid are per-slot (B, T) under the per-slot length contract
+    got = sorted(np.asarray(pos)[0][np.asarray(valid)[0]].tolist())
     assert got == list(range(s))  # every token attended exactly once
