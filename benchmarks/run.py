@@ -27,7 +27,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (quality_ladder, component_ablation, group_window,
-                   needle_proxy, memory_latency, kernel_bench)
+                   needle_proxy, memory_latency, kernel_bench, serving_bench)
     suites = {
         "table1": quality_ladder.run,        # + Table 5
         "table3": component_ablation.run,
@@ -35,11 +35,12 @@ def main(argv=None) -> None:
         "fig5": needle_proxy.run,            # + Fig 7
         "table6": memory_latency.run,        # + App. 9
         "kernel": kernel_bench.run,
+        "serve": serving_bench.run,          # TTFT + prefill compile shapes
     }
     if args.only:
         pick = set(args.only.split(","))
     elif args.smoke:
-        pick = {"table6", "kernel"}
+        pick = {"table6", "kernel", "serve"}
     else:
         pick = set(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,86 @@
+"""Serving-path benchmark: ragged traffic, TTFT, and prefill compile counts.
+
+Chunked prefill (DESIGN.md §7) exists for two serving symptoms that the
+aggregate tok/s number hides:
+
+* **unbounded recompiles** — whole-prompt admission jits one prefill
+  executable per distinct prompt length, so ragged real-world traffic keeps
+  paying compile latency; chunked admission compiles at most
+  ``len(chunk_buckets)`` shapes ever;
+* **head-of-line blocking** — a long whole-prompt prefill stalls every
+  decode lane for that tick, which shows up as decode-stall time for the
+  co-scheduled request.
+
+This suite serves the same ragged request mix through both admission modes
+and emits TTFT percentiles plus the *measured* prefill-shape counts, so the
+bounded-compile-shape contract is tracked in the benchmarks JSON artifact
+across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.core.policy import QuantPolicy
+from repro.data import SyntheticCorpus
+from repro.models import transformer as T
+from repro.serving import Engine, Request
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _serve(params, cfg, pol, reqs, max_len, prefill_chunk):
+    eng = Engine(params, cfg, pol, batch_slots=2, max_len=max_len,
+                 steps_per_sync=4, prefill_chunk=prefill_chunk)
+    t0 = time.time()
+    handles = [eng.submit(Request(prompt=r.prompt, max_new=r.max_new,
+                                  seed=r.seed)) for r in reqs]
+    eng.run(handles)
+    wall = time.time() - t0
+    toks = sum(len(h.tokens) for h in handles)
+    ttft = [(h.first_token_time - h.submit_time) * 1e3 for h in handles]
+    if prefill_chunk:
+        shapes = len(eng.prefill_shapes)
+    else:
+        shapes = len({len(r.prompt) for r in reqs})  # one jit per length
+    return {"wall_s": wall, "tok_s": toks / max(wall, 1e-9),
+            "ttft_p50_ms": _pct(ttft, 50), "ttft_max_ms": max(ttft),
+            "prefill_shapes": shapes}
+
+
+def run(emit, smoke: bool = False):
+    cfg = configs.get_smoke("llama3p2_1b")
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
+                      group_size=min(16, cfg.head_dim), window=16, n_sink=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+
+    # >= 6 distinct prompt lengths: the ragged regime whole-prompt admission
+    # pays one compile each for
+    lens = [24, 41, 57, 33, 62, 49] if smoke else [24, 41, 57, 33, 62, 49,
+                                                   70, 91, 108, 77]
+    reqs = [Request(prompt=corpus.sample(n, np.random.default_rng(i)),
+                    max_new=int(rng.integers(4, 9)), seed=i)
+            for i, n in enumerate(lens)]
+    max_len = max(lens) + 16
+    chunk = 16
+
+    whole = _serve(params, cfg, pol, reqs, max_len, None)
+    chunked = _serve(params, cfg, pol, reqs, max_len, chunk)
+
+    for name, r in (("serve_ragged_whole_prompt", whole),
+                    (f"serve_ragged_chunked_c{chunk}", chunked)):
+        emit(f"{name},{r['wall_s'] * 1e6 / max(len(reqs), 1):.1f},"
+             f"ttft_p50_ms={r['ttft_p50_ms']:.0f};"
+             f"ttft_max_ms={r['ttft_max_ms']:.0f};"
+             f"tok_s={r['tok_s']:.2f};"
+             f"prefill_shapes={r['prefill_shapes']}")
+    emit(f"serve_prefill_shape_ratio,0.0,"
+         f"whole={whole['prefill_shapes']};chunked={chunked['prefill_shapes']}"
+         f";bound=len(chunk_buckets)")

@@ -48,16 +48,22 @@ print(f"calibrated {cfg.n_layers} layers "
 
 # 3. serve (request-level engine: submit -> stream -> run) -------------------
 # ragged prompts + ragged budgets: each request prefills into its own slot
-# (no cross-slot padding) and streams tokens via its handle.
+# (no cross-slot padding) and streams tokens via its handle.  prefill_chunk
+# streams each prompt through the cache in fixed-size chunks, so the 4
+# distinct prompt lengths share a bounded set of compiled prefill shapes
+# (DESIGN.md §7) and long prompts never stall the decode lanes.
 prompts = [corpus.sample(48 + 8 * i, np.random.default_rng(10 + i))
            for i in range(4)]
-eng = Engine(params, cfg, policy, batch_slots=2, max_len=160, calib=calib)
+eng = Engine(params, cfg, policy, batch_slots=2, max_len=160, calib=calib,
+             prefill_chunk=16)
 handles = [eng.submit(Request(prompt=p, max_new=12 + 2 * i))
            for i, p in enumerate(prompts)]
 eng.run(handles)          # 4 requests over 2 slots: two admission waves
 for h in handles:
     print(f"SKVQ request {h.rid}: prompt {len(h.request.prompt):3d} toks -> "
           f"{h.result()[:8]}... ({h.finish_reason})")
+print(f"compiled prefill shapes {eng.prefill_shapes} for "
+      f"{len(set(map(len, prompts)))} distinct prompt lengths")
 
 fp16 = QuantPolicy(bits_k=8.0, bits_v=8.0, group_size=16, window=16, n_sink=4,
                    fp8_meta=False)

@@ -53,7 +53,11 @@ def _qtensor_shapes(batch: int, slots: int, n_kv: int, head_dim: int,
 
 def cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
                  policy: QuantPolicy, dtype=jnp.bfloat16):
-    """Dict of (shape, dtype) — used both to build zeros and ShapeDtypeStructs."""
+    """Dict of (shape, dtype) — used both to build zeros and ShapeDtypeStructs.
+
+    The keys follow the [sinks, quantized, window] segment layout of
+    DESIGN.md §1; packed-plane names come from the plane layout of §3.
+    """
     if policy.is_fp16:  # uncompressed baseline (the paper's FP16 column)
         return {"length": ((batch,), jnp.int32),
                 "k": ((batch, max_len, n_kv, head_dim), dtype),
@@ -76,6 +80,7 @@ def cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
 
 
 def init_cache(batch, max_len, n_kv, head_dim, policy, dtype=jnp.bfloat16) -> Cache:
+    """Zero-filled cache dict for one layer (layout per DESIGN.md §1)."""
     return {k: jnp.zeros(s, d) for k, (s, d) in
             cache_shapes(batch, max_len, n_kv, head_dim, policy, dtype).items()}
 
@@ -86,7 +91,11 @@ def _split_q(cache: Cache, pref: str):
 
 
 def slot_lengths(cache: Cache, batch: Optional[int] = None) -> jnp.ndarray:
-    """Per-slot lengths (B,).  Legacy scalar-length caches broadcast."""
+    """Per-slot lengths (B,).  Legacy scalar-length caches broadcast.
+
+    The per-slot length contract is DESIGN.md §6: every batch row is an
+    independent request at its own absolute position.
+    """
     t = jnp.asarray(cache["length"])
     if t.ndim == 0:
         if batch is None:
@@ -120,6 +129,7 @@ def _put_tok_where(buf, idx, val, cond):
 def reset_slot(caches, i, batch_axis: int = 0):
     """Zero batch slot ``i`` across every leaf (KV, metadata, and length).
 
+    Slot-lifecycle op for the serving engine (DESIGN.md §6: retirement).
     Works on a single-layer cache dict (leaves ``(B, ...)``, batch_axis=0) or
     the engine's layer-stacked cache groups (leaves ``(L, B, ...)``,
     batch_axis=1).  ``i`` may be a traced scalar — one compiled executable
@@ -135,6 +145,7 @@ def reset_slot(caches, i, batch_axis: int = 0):
 def insert_slot(dst, i, src, src_slot: int = 0, batch_axis: int = 0):
     """Copy batch row ``src_slot`` of ``src`` into slot ``i`` of ``dst``.
 
+    Slot-lifecycle op for the serving engine (DESIGN.md §6: admission).
     ``src`` is a structurally-identical cache with its own (smaller) batch —
     typically a freshly prefilled batch-of-1 request being admitted into a
     serving slot.  Non-batch dims must match (same max_len/policy/layout)."""
@@ -152,6 +163,11 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
             alpha_k: Optional[jnp.ndarray] = None,
             alpha_v: Optional[jnp.ndarray] = None, quant_fn=None) -> Cache:
     """Build a cache from prefill K/V of shape (B, S, H_kv, D), S <= max_len.
+
+    Whole-prompt prefill (paper Sec. 3.2; DESIGN.md §1): all three segments
+    are written at once, after attention already ran in full precision.
+    Chunked prefill (DESIGN.md §7) instead grows the cache through
+    :func:`prefill_chunk_append` and produces bit-identical contents.
 
     K/V are already channel-reordered (the permutation lives in the fused
     projection weights).  alpha_*: (H_kv, G_total) calibrated clip factors.
@@ -200,8 +216,10 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
 def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                   policy: QuantPolicy,
                   alpha_k: Optional[jnp.ndarray] = None,
-                  alpha_v: Optional[jnp.ndarray] = None, quant_fn=None) -> Cache:
-    """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one.
+                  alpha_v: Optional[jnp.ndarray] = None, quant_fn=None,
+                  valid=None) -> Cache:
+    """Append one token (k/v_new: (B, 1, H_kv, D)); quantize the evicted one
+    (DESIGN.md §1).
 
     Every batch row advances at its own per-slot ``length`` — indices below
     are ``(B,)`` and writes are per-row scatters, so a ragged serving batch
@@ -209,17 +227,25 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
 
     ``quant_fn`` as in :func:`prefill` — lets the pallas backend fuse the
     per-step quantize+pack of the token sliding out of the window.
+
+    ``valid`` (optional ``(B,)`` bool): rows with ``valid == False`` are
+    no-ops — no buffer is touched and ``length`` does not advance.  This is
+    the primitive under chunked prefill (DESIGN.md §7), where a chunk padded
+    to its compile bucket must append only its real tokens.
     """
     qf = quant_fn or quantize_groups
     b, _, h, d = k_new.shape
     w, ns = policy.window, policy.n_sink
     t = slot_lengths(cache, b)  # (B,)
+    ok = jnp.ones((b,), bool) if valid is None else jnp.broadcast_to(
+        jnp.asarray(valid), (b,))
     cache = dict(cache)
     if policy.is_fp16:
         idx = jnp.clip(t, 0, cache["k"].shape[1] - 1)
         for buf, x in (("k", k_new), ("v", v_new)):
-            cache[buf] = _put_tok(cache[buf], idx, x.astype(cache[buf].dtype))
-        cache["length"] = t + 1
+            cache[buf] = _put_tok_where(cache[buf], idx,
+                                        x.astype(cache[buf].dtype), ok)
+        cache["length"] = t + ok.astype(t.dtype)
         return cache
     gsz = min(policy.group_size, d)
 
@@ -234,7 +260,7 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             ev = _gat_tok(cache["win_v"], slot)
             qk = qf(ek, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
             qv = qf(ev, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
-            do_write = u_e >= 0  # rows whose window is already full
+            do_write = (u_e >= 0) & ok  # rows whose window is already full
             for name, qt in (("qk", qk), ("qv", qv)):
                 for kk, vv in qt.items():
                     full = cache[f"{name}_{kk}"]
@@ -246,10 +272,12 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             sidx = jnp.clip(t, 0, ns - 1)
             for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
                 cache[buf] = _put_tok_where(cache[buf], sidx,
-                                            x.astype(cache[buf].dtype), is_sink)
+                                            x.astype(cache[buf].dtype),
+                                            is_sink & ok)
         for buf, x in (("win_k", k_new), ("win_v", v_new)):
             cache[buf] = _put_tok_where(cache[buf], slot,
-                                        x.astype(cache[buf].dtype), ~is_sink)
+                                        x.astype(cache[buf].dtype),
+                                        ~is_sink & ok)
     else:
         # no window: quantize immediately (the paper's no-window ablation)
         u = jnp.maximum(t - ns, 0)
@@ -260,15 +288,51 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         for name, qt in (("qk", qk), ("qv", qv)):
             for kk, vv in qt.items():
                 full = cache[f"{name}_{kk}"]
-                cache[f"{name}_{kk}"] = _put_tok(full, idx,
-                                                 vv.astype(full.dtype))
+                cache[f"{name}_{kk}"] = _put_tok_where(full, idx,
+                                                       vv.astype(full.dtype),
+                                                       ok)
         if ns > 0:
             is_sink = t < ns
             sidx = jnp.clip(t, 0, ns - 1)
             for buf, x in (("sink_k", k_new), ("sink_v", v_new)):
                 cache[buf] = _put_tok_where(cache[buf], sidx,
-                                            x.astype(cache[buf].dtype), is_sink)
-    cache["length"] = t + 1
+                                            x.astype(cache[buf].dtype),
+                                            is_sink & ok)
+    cache["length"] = t + ok.astype(t.dtype)
+    return cache
+
+
+def prefill_chunk_append(cache: Cache, k: jnp.ndarray, v: jnp.ndarray,
+                         policy: QuantPolicy, n_valid,
+                         alpha_k: Optional[jnp.ndarray] = None,
+                         alpha_v: Optional[jnp.ndarray] = None,
+                         quant_fn=None) -> Cache:
+    """Append a prefill chunk (k/v: (B, C, H_kv, D)) token by token
+    (DESIGN.md §7).
+
+    Scans :func:`decode_append` over the chunk axis so every chunk token
+    follows the exact decode protocol: it enters the sliding window (or the
+    sink buffer), and the token it evicts is quantized into packed-region
+    slot ``t - n_sink - window`` via the shared ``segments`` ring math.  A
+    cache grown chunk-by-chunk is therefore bit-identical to one built by
+    whole-prompt :func:`prefill` — per-token group quantization makes each
+    packed entry independent of *when* it was quantized.
+
+    ``n_valid`` (scalar or ``(B,)``): number of real tokens in the chunk;
+    slots ``>= n_valid`` are compile-bucket padding and are not appended.
+    """
+    b, c = k.shape[:2]
+    nv = jnp.broadcast_to(jnp.asarray(n_valid), (b,))
+    _, valid = seg.chunk_segment(0, nv, c)           # (B, C) padding mask
+
+    def step(cache, xs):
+        k1, v1, ok = xs
+        return decode_append(cache, k1, v1, policy, alpha_k, alpha_v,
+                             quant_fn=quant_fn, valid=ok), None
+
+    xs = (jnp.swapaxes(k[:, :, None], 0, 1), jnp.swapaxes(v[:, :, None], 0, 1),
+          jnp.swapaxes(valid, 0, 1))
+    cache, _ = jax.lax.scan(step, cache, xs)
     return cache
 
 
@@ -279,7 +343,8 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Reference path: materialize (K, V, positions, valid) over all segments.
 
-    Returns K/V (B, T, H, D), positions (B, T) int32, valid (B, T) bool where
+    Consumes the segment helpers of DESIGN.md §1 (single source of the
+    [sinks, quantized, window] ordering).  Returns K/V (B, T, H, D), positions (B, T) int32, valid (B, T) bool where
     T = n_sink + S_q + W — per-slot because each batch row sits at its own
     ``length``.  Ordering is [sinks, quantized, window].  The Pallas decode
     kernel consumes the packed segments directly instead.
@@ -320,7 +385,8 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
 
 def materialize_kv(cache: Cache, head_dim: int, policy: QuantPolicy,
                    total_len: int, dtype=jnp.float32):
-    """Test helper: reconstruct K/V in absolute position order (B, total, H, D)."""
+    """Test helper: reconstruct K/V in absolute position order
+    (B, total, H, D), inverting the DESIGN.md §1 segment layout."""
     k, v, pos, valid = gather_attention_inputs(cache, head_dim, policy, dtype)
     b, _, h, d = k.shape
     # scatter into a buffer with one extra "dump" slot for invalid entries;

@@ -97,6 +97,28 @@ def window_segment(window: int, n_sink: int, length
     return pos, stored
 
 
+def chunk_segment(t0, n_valid, size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Positions/valid-mask for a prefill chunk of ``size`` bucket slots.
+
+    A chunked prefill (DESIGN.md §7) pads each prompt chunk up to a
+    power-of-2 bucket so every prompt length reuses the same compiled
+    executables.  Slot ``i`` of the bucket holds absolute token ``t0 + i``
+    and is real iff ``i < n_valid``; the padded tail rides through the
+    model but is masked out of every cache write and attention read.
+
+    ``t0``/``n_valid`` may be scalars or per-slot ``(B,)`` (same
+    polymorphism as the other segment helpers): scalar inputs yield
+    ``(size,)`` arrays, per-slot inputs yield ``(B, size)``.
+    """
+    i = jnp.arange(size, dtype=jnp.int32)
+    t0 = jnp.asarray(t0)
+    n_valid = jnp.asarray(n_valid)
+    pos = ((_col(t0) if t0.ndim else t0) + i).astype(jnp.int32)
+    valid = i < (_col(n_valid) if n_valid.ndim else n_valid)
+    shape = jnp.broadcast_shapes(pos.shape, valid.shape)
+    return jnp.broadcast_to(pos, shape), jnp.broadcast_to(valid, shape)
+
+
 def attend_ok(pos, stored, t_now, window_eff) -> jnp.ndarray:
     """Final attendability: stored ∧ causal ∧ inside the local band.
 

@@ -1,13 +1,16 @@
 """Public wrappers around the Pallas kernels.
 
 :func:`pallas_decode_attention` is the "pallas" decode backend
-(``repro.models.backends``): a drop-in replacement for the pure-jnp reference
-path in ``repro.models.attention.decode_attention_skvq``.  The packed segment
-goes through the fused dequant+flash kernel; the (tiny) fp sink/window
-segments (plus the pre-append extra token) run in plain jnp; all partials
-merge by logsumexp.  Segment index math comes from ``repro.core.segments`` —
-the same source the reference path and the cache container use, so the two
-backends share one layout contract.
+(``repro.models.backends``; DESIGN.md §4): a drop-in replacement for the
+pure-jnp reference path in ``repro.models.attention.decode_attention_skvq``.
+The packed segment goes through the fused dequant+flash kernel; the (tiny)
+fp sink/window segments (plus the pre-append extra token) run in plain jnp;
+all partials merge by logsumexp.  Segment index math comes from
+``repro.core.segments`` — the same source the reference path and the cache
+container use, so the two backends share one layout contract.  (Prefill —
+whole-prompt and chunked alike — never reads the packed planes: its
+attention is full-precision per the paper's Sec. 3.2 workflow, DESIGN.md
+§7; the kernel is decode-side only.)
 
 :func:`make_kernel_quant_fn` routes the cache-side group quantize through the
 fused pack kernel (``kv_quant_pallas``); it is bit-exact against

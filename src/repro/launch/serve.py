@@ -1,14 +1,19 @@
 """End-to-end serving driver: continuous batching over the request Engine.
 
-Submits ``--requests`` generation jobs (ragged ``max_new`` via
-``--max-new-jitter``) onto ``--batch`` decode slots — more requests than
-slots means multiple admission waves, so freed slots immediately refill
-from the queue (the continuous-batching path the SKVQ cache is built for).
-Reports aggregate tok/s AND per-request latency percentiles.
+Submits ``--requests`` generation jobs (ragged prompt lengths via
+``--prompt-jitter``, ragged ``max_new`` via ``--max-new-jitter``) onto
+``--batch`` decode slots — more requests than slots means multiple
+admission waves, so freed slots immediately refill from the queue (the
+continuous-batching path the SKVQ cache is built for).  ``--prefill-chunk``
+streams prompts through the cache in fixed-size chunks (DESIGN.md §7):
+long prompts stop head-of-line-blocking decode and ragged traffic compiles
+a bounded set of prefill shapes.  Reports aggregate tok/s, per-request
+latency AND time-to-first-token percentiles.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_1b --smoke \
-        --batch 4 --requests 8 --prompt-len 256 --new-tokens 32 \
-        --max-new-jitter 8 --bits-k 2 --bits-v 1.5
+        --batch 4 --requests 8 --prompt-len 256 --prompt-jitter 64 \
+        --new-tokens 32 --max-new-jitter 8 --prefill-chunk 64 \
+        --bits-k 2 --bits-v 1.5
 """
 from __future__ import annotations
 
@@ -40,6 +45,10 @@ def main(argv=None):
                     help="total requests to serve (default: 2x batch — two "
                          "admission waves exercise continuous batching)")
     ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--prompt-jitter", type=int, default=0,
+                    help="per-request prompt length drawn from prompt-len ± "
+                         "jitter (ragged arrivals; pair with --prefill-chunk "
+                         "to keep the compiled prefill-shape set bounded)")
     ap.add_argument("--new-tokens", type=int, default=32,
                     help="base max_new per request")
     ap.add_argument("--max-new-jitter", type=int, default=0,
@@ -58,6 +67,11 @@ def main(argv=None):
                     help="decode backend: reference | pallas (default: host)")
     ap.add_argument("--steps-per-sync", type=int, default=8,
                     help="decode tokens per host sync (scanned decode)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: stream prompts through the cache "
+                         "in chunks of at most this many tokens, bounded "
+                         "compile shapes (0 = whole-prompt prefill, one "
+                         "executable per distinct prompt length)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -75,14 +89,20 @@ def main(argv=None):
         max_new = args.new_tokens + (int(rng.integers(-jit, jit + 1)) if jit
                                      else 0)
         max_new = max(1, max_new)
-        prompt = corpus.sample(args.prompt_len, np.random.default_rng(i))
+        plen = args.prompt_len
+        if args.prompt_jitter:
+            plen = max(1, plen + int(rng.integers(-args.prompt_jitter,
+                                                  args.prompt_jitter + 1)))
+        prompt = corpus.sample(plen, np.random.default_rng(i))
         reqs.append(Request(prompt=prompt, max_new=max_new,
                             temperature=args.temperature, eos_id=args.eos_id,
                             seed=i))
 
-    max_len = args.prompt_len + args.new_tokens + jit + args.steps_per_sync
+    max_len = (args.prompt_len + args.prompt_jitter + args.new_tokens + jit
+               + args.steps_per_sync)
     eng = Engine(params, cfg, policy, batch_slots=args.batch, max_len=max_len,
-                 backend=args.backend, steps_per_sync=args.steps_per_sync)
+                 backend=args.backend, steps_per_sync=args.steps_per_sync,
+                 prefill_chunk=args.prefill_chunk or None)
     t0 = time.time()
     handles = [eng.submit(r) for r in reqs]
     eng.run(handles)
@@ -105,7 +125,14 @@ def main(argv=None):
           f"p90={_pct(lat, 90):.0f} p99={_pct(lat, 99):.0f} "
           f"max={max(lat):.0f}")
     print(f"time-to-first-token ms: p50={_pct(ttft, 50):.0f} "
-          f"p90={_pct(ttft, 90):.0f} p99={_pct(ttft, 99):.0f}")
+          f"p90={_pct(ttft, 90):.0f} p99={_pct(ttft, 99):.0f} "
+          f"max={max(ttft):.0f}")
+    if args.prefill_chunk:
+        print(f"chunked prefill: chunk={args.prefill_chunk} "
+              f"buckets={eng.chunk_buckets} "
+              f"compiled prefill shapes={eng.prefill_shapes} "
+              f"(whole-prompt mode would compile one per distinct "
+              f"prompt length)")
     print(f"KV bytes/token-head: fp16={fp16_b}  skvq={q_b} "
           f"({fp16_b / q_b:.1f}x compression)")
     print("sample:", handles[0].result()[:16])

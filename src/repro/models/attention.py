@@ -1,8 +1,13 @@
 """Attention: GQA/MHA/MQA, local+global bands, softcaps, SKVQ-cache decode.
 
-Two compute paths:
-  * ``full_attention`` — training/prefill (full precision, per the paper's
-    prefill phase: attention runs BEFORE quantization).
+Three compute paths:
+  * ``full_attention`` — training (full precision, plain softmax; query
+    chunking above ``Q_CHUNK`` keeps the S x S score tensor off-chip).
+  * ``prefill_block_attention`` — prefill (full precision, per the paper's
+    prefill phase: attention runs BEFORE quantization) with a FIXED
+    key-block reduction structure, so whole-prompt prefill and chunked
+    prefill (``prefill_chunk_attention``, DESIGN.md §7) produce
+    bit-identical outputs.
   * ``decode_attention`` — one query token against the SKVQ cache.  This is
     the reference (pure-jnp) path; the Pallas kernel in
     ``repro.kernels.decode_attn`` consumes the packed segments directly.
@@ -88,6 +93,99 @@ def full_attention(q, k, v, cfg: ArchConfig, *, pos_q=None, pos_k=None,
     else:
         o = _attn_block(qg, k, v, pos_q, pos_k, w, cfg, bidirectional)
     return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+PREFILL_BLOCK = 128  # key-block width shared by both prefill paths
+
+
+def prefill_block_attention(q, k, v, cfg: ArchConfig, *, pos_q=None,
+                            window: Optional[jnp.ndarray] = None,
+                            block: int = PREFILL_BLOCK):
+    """Causal prefill attention with a FIXED key-block reduction structure
+    (DESIGN.md §7).
+
+    Mathematically plain softmax attention, but the key axis is processed in
+    ``block``-wide tiles under a ``lax.scan`` with online-softmax merging,
+    and the key tensor is padded to a block multiple.  That makes the
+    floating-point reduction structure a function of the *block grid*, not of
+    the key-axis length: a tile that is entirely masked merges with weight
+    ``exp(-inf - m) == 0`` — an exact no-op — so attending over ``S`` real
+    keys yields bit-identical outputs whether the buffer is ``S`` long or
+    zero-padded to any larger capacity.  This is the property chunked prefill
+    needs: whole-prompt prefill reduces over the prompt-length buffer while a
+    prefill chunk reduces over the fixed-capacity workspace, and the two must
+    agree bit-for-bit (asserted in tests/test_prefill_chunk.py).
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); ``pos_q`` defaults to
+    ``arange(Sq)`` (whole-prompt).  Keys take absolute positions
+    ``arange(Sk_padded)``; rows at/after the real key frontier are masked by
+    causality alone, since every key position beyond the last real token
+    exceeds every valid query position.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if pos_q is None:
+        pos_q = jnp.arange(sq, dtype=jnp.int32)
+    w = jnp.int32(0) if window is None else window
+    s_pad = -(-k.shape[1] // block) * block
+    pad = [(0, 0)] * 4
+    pad[1] = (0, s_pad - k.shape[1])
+    kp = jnp.pad(k, pad).astype(jnp.float32)
+    vp = jnp.pad(v, pad).astype(jnp.float32)
+    nb = s_pad // block
+    qg = (q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * _scale(cfg))
+    pos_k = jnp.arange(s_pad, dtype=jnp.int32).reshape(nb, block)
+
+    def step(carry, xs):
+        num, m, l = carry
+        kb, vb, pb = xs                       # (B, block, Hkv, D), (block,)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kb)
+        s = softcap(s, cfg.attn_softcap)
+        mask = _band_mask(pos_q, pb, w)
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        mb = s.max(axis=-1)
+        u = jnp.exp(s - mb[..., None])
+        nb_ = jnp.einsum("bkgst,btkd->bkgsd", u, vb)
+        lb = u.sum(axis=-1)
+        mn = jnp.maximum(m, mb)
+        wa = jnp.exp(m - mn)
+        wb = jnp.exp(mb - mn)
+        return (num * wa[..., None] + nb_ * wb[..., None],
+                mn, l * wa + lb * wb), None
+
+    init = (jnp.zeros((b, hkv, g, sq, d), jnp.float32),
+            jnp.full((b, hkv, g, sq), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32))
+    (num, m, l), _ = jax.lax.scan(
+        step, init, (jnp.swapaxes(kp.reshape(b, nb, block, hkv, d), 0, 1),
+                     jnp.swapaxes(vp.reshape(b, nb, block, hkv, d), 0, 1),
+                     pos_k))
+    o = num / jnp.maximum(l, 1e-30)[..., None]   # (B, Hkv, G, Sq, D)
+    return jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def prefill_chunk_attention(q, ws_k, ws_v, pos_q, cfg: ArchConfig,
+                            window: Optional[jnp.ndarray] = None):
+    """Chunk-of-queries attention against the prefill workspace (DESIGN.md §7).
+
+    q: (B, C, Hq, D) — one compile-bucket chunk of prompt queries at
+    absolute positions ``pos_q`` (``(C,)``, from ``segments.chunk_segment``;
+    traced values, so one executable per bucket size serves every chunk
+    offset).  ws_k/ws_v: (B, cap, Hkv, D) — the fixed-capacity
+    full-precision K/V workspace with token ``t`` at row ``t``; rows
+    at/after the written frontier are zeros.
+
+    Masking falls out of the band mask alone: a chunk query at position ``p``
+    may only attend to keys at positions ``<= p`` (and within the local
+    ``window`` band), and every such row is a real written token — unwritten
+    workspace rows and bucket-padding queries sit strictly in the masked
+    region.  Shares :func:`prefill_block_attention` with whole-prompt
+    prefill, whose fixed block grid makes the valid output rows
+    bit-identical between the two paths.
+    """
+    return prefill_block_attention(q, ws_k, ws_v, cfg, pos_q=pos_q,
+                                   window=window)
 
 
 def decode_attention(q, keys, values, pos_k, valid, t_now, cfg: ArchConfig,

@@ -17,9 +17,12 @@ Two implementations are registered:
   interpret mode (used by tests and the parity benchmarks).
 
 Selection: pass ``backend=`` to ``transformer.decode_step`` /
-``serving.ServeSession`` as a name, a backend instance, or None for the
-host-appropriate default.  Backends are frozen dataclasses so jitted step
-functions can close over them.
+``serving.Engine`` (or the ``ServeSession`` shim) as a name, a backend
+instance, or None for the host-appropriate default.  Backends are frozen
+dataclasses so jitted step functions can close over them.  The backend's
+``quant_fn`` is also what chunked prefill (DESIGN.md §7) uses to quantize
+chunk tails sliding out of the window, so cache writes agree with cache
+reads on every path.
 """
 from __future__ import annotations
 
@@ -35,7 +38,7 @@ from ..core.policy import QuantPolicy
 
 @runtime_checkable
 class DecodeBackend(Protocol):
-    """One decode-attention strategy over the SKVQ cache."""
+    """One decode-attention strategy over the SKVQ cache (DESIGN.md §4)."""
 
     name: str
 
@@ -55,6 +58,8 @@ _REGISTRY: Dict[str, Callable[..., "DecodeBackend"]] = {}
 
 
 def register_backend(name: str):
+    """Decorator: register a :class:`DecodeBackend` factory under ``name``
+    (the backend table of DESIGN.md §4)."""
     def deco(factory):
         _REGISTRY[name] = factory
         return factory
@@ -62,10 +67,12 @@ def register_backend(name: str):
 
 
 def available_backends():
+    """Sorted names of every registered decode backend (DESIGN.md §4)."""
     return sorted(_REGISTRY)
 
 
 def get_backend(name: str, **kwargs) -> DecodeBackend:
+    """Instantiate a registered backend by name (DESIGN.md §4 selection)."""
     if name not in _REGISTRY:
         raise ValueError(f"unknown decode backend {name!r}; "
                          f"available: {available_backends()}")
@@ -73,12 +80,15 @@ def get_backend(name: str, **kwargs) -> DecodeBackend:
 
 
 def default_backend_name() -> str:
-    """Pallas on TPU (compiled kernels); reference elsewhere — the interpret
-    -mode kernel is a correctness tool, not a fast CPU path."""
+    """Host-appropriate default (DESIGN.md §4): pallas on TPU (compiled
+    kernels); reference elsewhere — the interpret-mode kernel is a
+    correctness tool, not a fast CPU path."""
     return "pallas" if jax.default_backend() == "tpu" else "reference"
 
 
 def resolve_backend(backend: Union[None, str, DecodeBackend]) -> DecodeBackend:
+    """Name | instance | None -> a :class:`DecodeBackend` (DESIGN.md §4:
+    None selects the host default)."""
     if backend is None:
         return get_backend(default_backend_name())
     if isinstance(backend, str):
@@ -91,7 +101,8 @@ def resolve_backend(backend: Union[None, str, DecodeBackend]) -> DecodeBackend:
 @register_backend("reference")
 @dataclasses.dataclass(frozen=True)
 class ReferenceBackend:
-    """Pure-jnp dequantize -> attend (the paper-faithful oracle path)."""
+    """Pure-jnp dequantize -> attend (the paper-faithful oracle path;
+    DESIGN.md §4)."""
 
     name: str = "reference"
 
@@ -99,6 +110,8 @@ class ReferenceBackend:
                window=None, dtype=jnp.bfloat16, chunk: int = 0,
                local_slice: int = 0, packed_override=None, extra_kv=None,
                q_pos=None):
+        """One query token against the SKVQ cache via the reference jnp
+        path (``attention.decode_attention_skvq``; DESIGN.md §4)."""
         from .attention import decode_attention_skvq
         return decode_attention_skvq(
             q, cache, cfg, policy, window=window, dtype=dtype, chunk=chunk,
@@ -106,14 +119,18 @@ class ReferenceBackend:
             extra_kv=extra_kv, q_pos=q_pos)
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
-        return None  # kv_cache defaults to repro.core.quant.quantize_groups
+        """None — kv_cache defaults to the jnp ``quantize_groups``
+        (DESIGN.md §2); used by prefill, decode_append, and the chunked
+        prefill of §7 alike."""
+        return None
 
 
 # --------------------------------------------------------------------- pallas
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
-    """Fused dequant+flash decode kernel (+ optional fused quantize+pack).
+    """Fused dequant+flash decode kernel (+ optional fused quantize+pack);
+    DESIGN.md §4.
 
     ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere.
     ``kernel_quant`` additionally routes the window-eviction quantize through
@@ -135,6 +152,8 @@ class PallasBackend:
                window=None, dtype=jnp.bfloat16, chunk: int = 0,
                local_slice: int = 0, packed_override=None, extra_kv=None,
                q_pos=None):
+        """One query token against the SKVQ cache via the fused Pallas
+        kernel (``kernels.ops.pallas_decode_attention``; DESIGN.md §4)."""
         from ..kernels.ops import pallas_decode_attention
         from .attention import _scale
         scale = _scale(cfg)
@@ -145,6 +164,8 @@ class PallasBackend:
             interpret=self._interpret(), block_s=self.block_s)
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
+        """Fused quantize+pack kernel when ``kernel_quant`` is set
+        (DESIGN.md §3 plane layout; bit-exact vs the jnp quantizer)."""
         if not self.kernel_quant or policy.is_fp16:
             return None
         from ..kernels.ops import make_kernel_quant_fn

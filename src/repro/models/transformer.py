@@ -12,7 +12,10 @@ Design notes
   — the paper's weight fusion is only exact pre-RoPE.  ``fuse_v_permutation``
   demonstrates the V-path fusion of Appendix 6 and is equivalence-tested).
 * **Prefill** computes attention in full precision FIRST, then quantizes all
-  but the last ``window`` tokens (paper Sec. 3.2 workflow).
+  but the last ``window`` tokens (paper Sec. 3.2 workflow).  It comes in two
+  bit-identical flavors: whole-prompt ``prefill_model`` (one jit per prompt
+  length) and ``prefill_chunk`` (fixed-size chunks against the growing SKVQ
+  cache under a bounded compile-shape set — DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -26,12 +29,13 @@ import numpy as np
 from .config import ArchConfig
 from . import layers as L
 from . import backends as bk
-from .attention import full_attention
+from .attention import full_attention, prefill_block_attention
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from . import rwkv6 as rwkv_lib
 from ..core.policy import QuantPolicy
 from ..core import kv_cache as kvc
+from ..core import segments as seg
 from ..core.quant import n_meta_groups
 from ..distributed.sharding import logical
 
@@ -470,7 +474,9 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
         p, fl, cl = xs
         hn = L.norm(h, p["norm1"], cfg)
         q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
-        attn = full_attention(q, k, v, cfg, window=fl["window"])
+        # fixed key-block reduction: bit-identical to the chunked-prefill
+        # workspace attention regardless of buffer capacity (DESIGN.md §7)
+        attn = prefill_block_attention(q, k, v, cfg, window=fl["window"])
         attn = _attn_out(attn, p["attn"])
         cache_extra = {}
         if "ssm" in p:
@@ -522,6 +528,158 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
 def _ssm_with_state(x, p, cfg):
     """ssm_forward + final (conv, h) state for decode continuation."""
     return ssm_lib.ssm_forward(x, p, cfg, return_state=True)
+
+
+# ========================================================== chunked prefill
+
+def _check_chunkable(cfg: ArchConfig):
+    if cfg.family != "dense":
+        raise NotImplementedError(
+            f"chunked prefill supports the dense family only, got "
+            f"family={cfg.family!r}: ssm/hybrid/encdec prefill state is not "
+            f"chunk-carried yet, and moe expert capacity scales with the "
+            f"token count, so a chunked run would drop different tokens "
+            f"than a whole-prompt run — use whole-prompt prefill")
+    if cfg.mrope_sections:
+        raise NotImplementedError(
+            "chunked prefill does not support M-RoPE position streams")
+
+
+def prefill_chunk_init(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
+                       cap: int, batch: int = 1, dtype=jnp.float32) -> Dict:
+    """Empty chunked-prefill state (DESIGN.md §7).
+
+    Returns ``{"caches": ..., "ws": ...}``:
+
+    * ``caches`` — zeroed layer-stacked SKVQ cache groups, exactly the
+      structure :func:`prefill_model` returns (leaves ``(L, B, ...)``), grown
+      in place by each :func:`prefill_chunk` call;
+    * ``ws`` — the transient full-precision K/V workspace, per group
+      ``{"k", "v"}`` of shape ``(L, B, cap, H_kv, D)`` holding the
+      *unpermuted post-RoPE* prompt K/V at absolute row = absolute position.
+      ``cap >= max_len`` always suffices: valid chunk tokens land at rows
+      ``< max_len`` and bucket-padding rows are scatter-dropped, never
+      clamped.  The workspace exists only while its prompt is prefilling
+      (the paper's Sec. 3.2 full-precision prefill attention, kept
+      per-chunk) and is dropped when the finished cache is inserted into a
+      slot.
+    """
+    _check_chunkable(cfg)
+    if cap < max_len:
+        raise ValueError(f"workspace cap ({cap}) must be >= max_len "
+                         f"({max_len})")
+    nf = cfg.first_dense
+    state: Dict = {"caches": {}, "ws": {}}
+    for group, n in (("dense", nf), ("scan", cfg.n_layers - nf)):
+        if n == 0:
+            continue
+        shapes = kvc.cache_shapes(batch, max_len, cfg.n_kv_heads,
+                                  cfg.head_dim, policy, dtype)
+        state["caches"][group] = {k: jnp.zeros((n,) + s, d)
+                                  for k, (s, d) in shapes.items()}
+        state["ws"][group] = {
+            "k": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                           dtype)}
+    return state
+
+
+def _ws_write(ws, x, pos, valid):
+    """Masked scatter of a chunk into workspace rows ``pos`` (both (C,)).
+
+    Bucket-padding rows (``valid`` False) are routed to an out-of-range
+    index and dropped — never clamped into real rows — so any workspace
+    with ``cap >= max_len`` is safe regardless of the bucket overhang."""
+    idx = jnp.where(valid, pos, ws.shape[1])
+    return ws.at[:, idx].set(x.astype(ws.dtype), mode="drop")
+
+
+def prefill_chunk(params: Params, cfg: ArchConfig, tokens, state: Dict,
+                  policy: QuantPolicy, t0, n_valid,
+                  calib: Optional[Dict] = None, dtype=None, backend=None):
+    """Process one fixed-size prompt chunk against the SKVQ cache
+    (DESIGN.md §7).
+
+    tokens: (B, C) int32, the prompt slice ``[t0, t0 + n_valid)`` padded to
+    the compile bucket ``C``; ``t0``/``n_valid`` are traced scalars, so a
+    single compiled executable per bucket size serves every chunk offset and
+    every prompt length.  Returns ``(logits (B, 1, V), state)`` where the
+    logits belong to the chunk's last *valid* token (row ``n_valid - 1``) —
+    after the final chunk these are exactly the whole-prompt prefill logits.
+
+    Per layer the chunk (1) projects q/k/v with RoPE at absolute positions
+    ``t0 + i``, (2) writes the chunk K/V into the full-precision workspace,
+    (3) attends over the workspace (``prefill_chunk_attention`` — the
+    paper's Sec. 3.2 full-precision prefill attention, never the quantized
+    codes), and (4) appends the chunk to the SKVQ cache token-by-token via
+    ``kv_cache.prefill_chunk_append``, quantizing every token that slides
+    out of the window exactly as decode does — so the [sinks, quantized,
+    window] contract of DESIGN.md §1 holds mid-prompt.  Both the grown cache
+    and the greedy continuation are bit-identical to whole-prompt
+    :func:`prefill_model` (asserted in tests/test_prefill_chunk.py).
+
+    ``backend`` supplies the cache quantizer (as in :func:`prefill_model`);
+    attention itself runs in full precision here regardless.
+    """
+    _check_chunkable(cfg)
+    quant_fn = bk.resolve_backend(backend).quant_fn(policy)
+    params = _cast_params(params, dtype)
+    x = L.embed(tokens, params["embed"], cfg.embed_scale)
+    if dtype is not None:
+        x = x.astype(dtype)
+    x = logical(x, "batch", "seq", None)
+    c = x.shape[1]
+    cache_dtype = x.dtype
+    if calib is None:
+        calib = identity_calib(cfg, policy)
+    t0 = jnp.asarray(t0, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    # one source for the chunk's positions + bucket-padding mask
+    pos, valid = seg.chunk_segment(t0, n_valid, c)
+    rope = _rope_tables(cfg, pos)
+
+    from .attention import prefill_chunk_attention
+
+    def body(h, xs):
+        p, fl, cl, cache, ws = xs
+        hn = L.norm(h, p["norm1"], cfg)
+        q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
+        # workspace rows hold unpermuted post-RoPE K/V so chunk attention
+        # reduces over channels in the same order as full_attention
+        ws = {"k": _ws_write(ws["k"], k, pos, valid),
+              "v": _ws_write(ws["v"], v, pos, valid)}
+        attn = prefill_chunk_attention(q, ws["k"], ws["v"], pos, cfg,
+                                       window=fl["window"])
+        h = h + _attn_out(attn, p["attn"])
+        h2 = L.norm(h, p["norm2"], cfg)
+        f, _ = _ffn(h2, p, cfg)
+        h = h + f
+        # --- SKVQ cache append (decode protocol, valid tokens only) ---
+        kp = _apply_perm(k, cl["perm_k"])
+        vp = _apply_perm(v, cl["perm_v"])
+        cache = kvc.prefill_chunk_append(
+            cache, kp.astype(cache_dtype), vp.astype(cache_dtype), policy,
+            n_valid, cl["alpha_k"], cl["alpha_v"], quant_fn=quant_fn)
+        return h, (cache, ws)
+
+    nf = cfg.first_dense
+    out: Dict = {"caches": {}, "ws": {}}
+    if nf:
+        x, (dc, dw) = jax.lax.scan(
+            body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
+                      _tree_slice(calib, 0, nf), state["caches"]["dense"],
+                      state["ws"]["dense"]))
+        out["caches"]["dense"], out["ws"]["dense"] = dc, dw
+    x, (sc, sw) = jax.lax.scan(
+        body, x, (params["layers"], layer_flags(cfg),
+                  _tree_slice(calib, nf, cfg.n_layers),
+                  state["caches"]["scan"], state["ws"]["scan"]))
+    out["caches"]["scan"], out["ws"]["scan"] = sc, sw
+    x = L.norm(x, params["final_norm"], cfg)
+    last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.clip(n_valid - 1, 0, c - 1), 1, axis=1)
+    return L.unembed(last, params, cfg), out
 
 
 # =================================================================== decode

@@ -1,7 +1,9 @@
 from .engine import (Engine, Request, StreamHandle, ServeSession,
                      make_prefill_fn, make_decode_fn, make_multi_decode_fn,
+                     make_prefill_chunk_fn, default_chunk_buckets,
                      sample_token, sample_per_slot)
 
 __all__ = ["Engine", "Request", "StreamHandle", "ServeSession",
            "make_prefill_fn", "make_decode_fn", "make_multi_decode_fn",
+           "make_prefill_chunk_fn", "default_chunk_buckets",
            "sample_token", "sample_per_slot"]

@@ -39,6 +39,7 @@ tests/test_backends.py and tests/test_engine.py).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -55,7 +56,8 @@ from ..models import transformer as T
 # ------------------------------------------------------------------ sampling
 
 def sample_token(logits, temperature: float, key) -> jnp.ndarray:
-    """logits (B, 1, V) -> (B, 1) int32, entirely on device (shared temp)."""
+    """logits (B, 1, V) -> (B, 1) int32, entirely on device (shared temp;
+    the per-slot path of DESIGN.md §6 is :func:`sample_per_slot`)."""
     if temperature <= 0:
         return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     return jax.random.categorical(
@@ -63,7 +65,8 @@ def sample_token(logits, temperature: float, key) -> jnp.ndarray:
 
 
 def sample_per_slot(logits, temps, keys) -> jnp.ndarray:
-    """Per-slot sampling: logits (B, V), temps (B,), keys (B, 2) -> (B,) i32.
+    """Per-slot sampling (DESIGN.md §6): logits (B, V), temps (B,),
+    keys (B, 2) -> (B,) i32.
 
     Rows with ``temps <= 0`` take the greedy argmax; others draw from the
     temperature-scaled categorical with their own PRNG key, so co-scheduled
@@ -88,6 +91,11 @@ def _split_keys(keys):
 
 def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
                     calib=None, dtype=None, backend=None) -> Callable:
+    """Jitted whole-prompt prefill ``(params, batch) -> (logits, caches)``.
+
+    One executable compiles per distinct prompt length — fine for uniform
+    traffic, the thing DESIGN.md §7's chunked prefill bounds for ragged
+    traffic."""
     @jax.jit
     def prefill(params, batch):
         return T.prefill_model(params, cfg, batch, policy, calib=calib,
@@ -98,7 +106,7 @@ def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
 def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
                    dtype=None, backend=None) -> Callable:
     """Single-token decode step (kept for tooling/tests; the engine's hot
-    path is :func:`make_multi_decode_fn`)."""
+    path is :func:`make_multi_decode_fn` — DESIGN.md §6)."""
     @jax.jit
     def decode(params, token, caches):
         return T.decode_step(params, cfg, token, caches, policy, calib=calib,
@@ -106,9 +114,46 @@ def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
     return decode
 
 
+def make_prefill_chunk_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
+                          dtype=None, backend=None) -> Callable:
+    """Jitted chunked-prefill step (DESIGN.md §7).
+
+    ``(params, tokens (B, C), state, t0, n_valid) -> (logits (B, 1, V),
+    state)``.  ``t0`` and ``n_valid`` are traced scalars, so the compiled
+    executable is shared by every chunk offset and every prompt length — the
+    engine keeps one of these per chunk *bucket* size ``C`` and nothing
+    else, which is what bounds the prefill compile-shape set.  The state
+    (growing caches + fp workspace) is donated: chunks update the job's
+    buffers in place instead of copying the workspace every call.
+    """
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def chunk(params, tokens, state, t0, n_valid):
+        return T.prefill_chunk(params, cfg, tokens, state, policy, t0,
+                               n_valid, calib=calib, dtype=dtype,
+                               backend=backend)
+    return chunk
+
+
+def default_chunk_buckets(prefill_chunk: int) -> tuple:
+    """Power-of-2 bucket ladder ``(…, C/4, C/2, C)`` down to 8 (DESIGN.md §7).
+
+    Every prompt runs as full-``C`` chunks plus one tail chunk padded up to
+    the smallest bucket that fits, so the ladder trades a handful of
+    compiled shapes for at most 2x padding waste on the tail.
+    """
+    out, b = [], prefill_chunk
+    while b >= 8:
+        out.append(b)
+        b //= 2
+    if not out:
+        out = [prefill_chunk]
+    return tuple(sorted(out))
+
+
 def make_multi_decode_fn(cfg: ArchConfig, policy: QuantPolicy, n_tokens: int,
                          calib=None, dtype=None, backend=None) -> Callable:
-    """Jitted ``lax.scan`` over ``n_tokens`` decode steps, per-slot everything.
+    """Jitted ``lax.scan`` over ``n_tokens`` decode steps, per-slot
+    everything (the scanned multi-token decode of DESIGN.md §6).
 
     Signature: ``(params, token (B,1), caches, keys (B,2), done (B,),
     temps (B,), eos (B,)) -> (tokens (B, n), token, caches, keys, done)`` —
@@ -145,7 +190,7 @@ def make_multi_decode_fn(cfg: ArchConfig, policy: QuantPolicy, n_tokens: int,
 
 @dataclasses.dataclass
 class Request:
-    """One generation job.
+    """One generation job (the front-door unit of DESIGN.md §6).
 
     prompt: 1-D int32 token ids; max_new: generation budget (the stream
     always ends at ``max_new`` tokens or at the first ``eos_id``);
@@ -160,7 +205,7 @@ class Request:
 
 
 class StreamHandle:
-    """Live view of one submitted request.
+    """Live view of one submitted request (DESIGN.md §6).
 
     ``tokens`` grows after every engine sync; ``finished`` flips when the
     request hits EOS ("eos") or its max_new budget ("length").  Wall-clock
@@ -180,9 +225,11 @@ class StreamHandle:
 
     @property
     def done(self) -> bool:
+        """True once the request hit EOS or its max_new budget."""
         return self.finished
 
     def result(self) -> np.ndarray:
+        """The generated tokens so far as a 1-D int32 array."""
         return np.asarray(self.tokens, np.int32)
 
     def __repr__(self):
@@ -193,8 +240,24 @@ class StreamHandle:
 
 # -------------------------------------------------------------------- engine
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """Per-slot chunked-prefill progress (DESIGN.md §7 scheduler state).
+
+    ``handle`` is being prefilled into reserved slot ``slot``; ``pos``
+    tokens of its prompt are already in ``state`` (the chunked-prefill
+    caches + fp workspace).  One job exists at a time; the engine advances
+    it by at most one chunk per :meth:`Engine.step`.
+    """
+    handle: StreamHandle
+    slot: int
+    pos: int
+    state: Dict
+
+
 class Engine:
-    """Continuous-batching serving engine over ``batch_slots`` decode lanes.
+    """Continuous-batching serving engine over ``batch_slots`` decode lanes
+    (DESIGN.md §6).
 
     ``submit`` validates and queues a :class:`Request` and returns its
     :class:`StreamHandle`; ``step`` retires finished slots, admits queued
@@ -207,15 +270,45 @@ class Engine:
     default: pallas on TPU, reference elsewhere).  ``max_len`` is the
     per-slot cache capacity — every admitted request must satisfy
     ``len(prompt) + max_new <= max_len`` (checked at submit time).
+
+    ``prefill_chunk`` (DESIGN.md §7) switches admission from whole-prompt
+    prefill (one compiled executable per distinct prompt length) to
+    **chunked prefill under a bounded compile-shape set**: prompts stream
+    through the SKVQ cache in chunks of at most ``prefill_chunk`` tokens,
+    each padded to a ``chunk_buckets`` size (default: the halving ladder
+    ``default_chunk_buckets``), and the scheduler runs at most one chunk
+    per ``step()`` interleaved with the decode chunk — a long prompt no
+    longer head-of-line-blocks decoding, ragged traffic compiles at most
+    ``len(chunk_buckets)`` prefill executables, and greedy streams stay
+    bit-identical to the whole-prompt path.
     """
 
     def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
                  batch_slots: int, max_len: int, calib=None, seed: int = 0,
-                 backend=None, steps_per_sync: int = 8, dtype=None):
+                 backend=None, steps_per_sync: int = 8, dtype=None,
+                 prefill_chunk: Optional[int] = None, chunk_buckets=None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if max_len < 1:
             raise ValueError(f"max_len must be >= 1, got {max_len}")
+        if prefill_chunk is None and chunk_buckets is not None:
+            raise ValueError("chunk_buckets requires prefill_chunk to be set")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, "
+                                 f"got {prefill_chunk}")
+            T._check_chunkable(cfg)  # fail at build time, not mid-serve
+            if chunk_buckets is None:
+                chunk_buckets = default_chunk_buckets(prefill_chunk)
+            chunk_buckets = tuple(sorted(int(b) for b in chunk_buckets))
+            if not chunk_buckets or chunk_buckets[-1] != prefill_chunk:
+                raise ValueError(
+                    f"chunk_buckets {chunk_buckets} must be non-empty and "
+                    f"its largest entry must equal prefill_chunk "
+                    f"({prefill_chunk})")
+            if chunk_buckets[0] < 1:
+                raise ValueError(f"chunk_buckets entries must be >= 1, "
+                                 f"got {chunk_buckets}")
         self.params, self.cfg, self.policy = params, cfg, policy
         self.max_len = max_len
         self.calib = calib
@@ -224,9 +317,15 @@ class Engine:
         self.seed = seed
         self.steps_per_sync = max(1, steps_per_sync)
         self.batch_slots = batch_slots
+        self.prefill_chunk = prefill_chunk
+        self.chunk_buckets = chunk_buckets
         self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib,
                                           dtype=dtype, backend=backend)
         self._multi: Optional[Callable] = None  # lazily-built scanned step
+        self._chunk_fns: Dict[int, Callable] = {}   # bucket -> jitted chunk
+        self._prefill_job: Optional[_PrefillJob] = None
+        self._chunk_state = None   # recycled prefill buffers between jobs
+        self._zero_caches: Optional[Callable] = None
 
         # host-side per-slot state (tiny; round-trips exactly)
         b = batch_slots
@@ -246,10 +345,13 @@ class Engine:
     # ------------------------------------------------------------ public API
 
     def submit(self, request: Request) -> StreamHandle:
-        """Validate + queue a request; returns its stream handle.
+        """Validate + queue a request; returns its stream handle
+        (DESIGN.md §6).
 
         Raises ``ValueError`` at submit time for inputs that would otherwise
-        fail deep inside jit with opaque shape errors.
+        fail deep inside jit with opaque shape errors; each message names
+        the offending :class:`Request` field and the violated limit (see
+        README.md Troubleshooting).
         """
         prompt = np.asarray(request.prompt, np.int32).reshape(-1)
         if prompt.size == 0:
@@ -260,11 +362,11 @@ class Engine:
                              f"got {request.max_new}")
         if prompt.size + request.max_new > self.max_len:
             raise ValueError(
-                f"prompt_len ({prompt.size}) + max_new ({request.max_new}) "
-                f"= {prompt.size + request.max_new} exceeds the engine's "
-                f"per-slot cache capacity max_len={self.max_len}; shorten "
-                f"the prompt/budget or build the Engine with a larger "
-                f"max_len")
+                f"Request.prompt length ({prompt.size}) + Request.max_new "
+                f"({request.max_new}) = {prompt.size + request.max_new} "
+                f"exceeds the engine's per-slot cache capacity "
+                f"max_len={self.max_len}; shorten the prompt, lower "
+                f"max_new, or build the Engine with a larger max_len")
         request = dataclasses.replace(request, prompt=prompt)
         handle = StreamHandle(request, self._next_rid)
         self._next_rid += 1
@@ -272,16 +374,21 @@ class Engine:
         return handle
 
     def step(self) -> bool:
-        """One scheduler tick: retire -> admit -> one decode chunk.
+        """One scheduler tick: retire -> admit -> [one prefill chunk] ->
+        one decode chunk (DESIGN.md §6–§7).
 
-        Returns False when there is nothing left to do (no active slots and
-        an empty queue)."""
+        In chunked-prefill mode at most ONE prefill chunk runs per tick,
+        interleaved with the decode chunk for every already-active slot, so
+        a long prompt never head-of-line-blocks decoding.  Returns False
+        when there is nothing left to do (no active slots, no prefill in
+        flight, and an empty queue)."""
         self._retire()
         self._admit()
+        self._prefill_tick()
         active = [i for i in range(self.batch_slots)
                   if self._slot_handle[i] is not None]
         if not active:
-            return False
+            return self._prefill_job is not None
         # a request can finish at admission (max_new=1 or instant EOS) —
         # only spin the decode chunk when someone still needs tokens
         if any(not self._slot_handle[i].finished for i in active):
@@ -290,16 +397,25 @@ class Engine:
         return True
 
     def run(self, handles: Optional[List[StreamHandle]] = None) -> None:
-        """Step until the given handles (default: all submitted) finish."""
+        """Step until the given handles (default: all submitted) finish
+        (DESIGN.md §6)."""
         def pending():
             if handles is not None:
                 return any(not h.finished for h in handles)
-            return bool(self._queue) or any(
-                h is not None for h in self._slot_handle)
+            return (bool(self._queue) or self._prefill_job is not None
+                    or any(h is not None for h in self._slot_handle))
 
         while pending():
             if not self.step():
                 break
+
+    @property
+    def prefill_shapes(self) -> tuple:
+        """Chunk bucket sizes compiled so far (chunked-prefill mode only) —
+        the bounded compile-shape set of DESIGN.md §7.  Always a subset of
+        ``chunk_buckets``, regardless of how ragged the served traffic is
+        (asserted in tests/test_prefill_chunk.py)."""
+        return tuple(sorted(self._chunk_fns))
 
     # --------------------------------------------------------------- details
 
@@ -327,9 +443,24 @@ class Engine:
                     self._caches = self._reset(self._caches, jnp.int32(i))
 
     def _admit(self):
+        """Move queued requests toward decode slots (DESIGN.md §6 admission).
+
+        Whole-prompt mode prefills groups of equal-length prompts in one
+        batch; chunked mode instead *reserves* a free slot and opens a
+        :class:`_PrefillJob` that :meth:`_prefill_tick` advances one chunk
+        per step."""
         free = [i for i in range(self.batch_slots)
-                if self._slot_handle[i] is None]
+                if self._slot_handle[i] is None
+                and not (self._prefill_job is not None
+                         and self._prefill_job.slot == i)]
         if not free or not self._queue:
+            return
+        if self.prefill_chunk is not None:
+            if self._prefill_job is None:
+                handle = self._queue.pop(0)
+                self._prefill_job = _PrefillJob(
+                    handle=handle, slot=free[0], pos=0,
+                    state=self._take_chunk_state())
             return
         take, rest = self._queue[:len(free)], self._queue[len(free):]
         self._queue = rest
@@ -381,6 +512,89 @@ class Engine:
             h.first_token_time = now
             self._deliver(slot, [int(first[row])])
 
+    def _prefill_tick(self):
+        """Advance the in-flight chunked prefill by one chunk (DESIGN.md §7).
+
+        Picks the smallest ``chunk_buckets`` entry covering the remaining
+        tokens (capped at ``prefill_chunk``), pads the chunk up to it, and
+        runs the jitted chunk step at offset ``job.pos`` — one executable
+        per bucket ever compiles, whatever the traffic looks like.  When the
+        last chunk lands, the finished cache is inserted into the reserved
+        slot and the first token is sampled from the final-chunk logits,
+        exactly as whole-prompt admission would have done."""
+        job = self._prefill_job
+        if job is None:
+            return
+        prompt = job.handle.request.prompt
+        n = min(self.prefill_chunk, len(prompt) - job.pos)
+        bucket = next(b for b in self.chunk_buckets if b >= n)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :n] = prompt[job.pos:job.pos + n]
+        logits, job.state = self._chunk_fn(bucket)(
+            self.params, jnp.asarray(toks), job.state,
+            jnp.int32(job.pos), jnp.int32(n))
+        job.pos += n
+        if job.pos >= len(prompt):
+            self._prefill_job = None
+            self._finish_prefill(job, logits)
+
+    def _take_chunk_state(self) -> Dict:
+        """Prefill state for a new job, recycling the previous job's buffers.
+
+        Only one job runs at a time, so the engine keeps a single state
+        (caches + the big fp workspace) alive.  The caches are zeroed for
+        the new prompt; the workspace is reused dirty — every read of it is
+        masked to positions the new prompt has already written (causality
+        against ``pos_q``), so stale rows from the previous prompt are
+        unreachable (DESIGN.md §7)."""
+        st, self._chunk_state = self._chunk_state, None
+        if st is None:
+            return T.prefill_chunk_init(
+                self.cfg, self.policy, self.max_len, self.max_len, batch=1,
+                dtype=self.dtype or self.params["embed"].dtype)
+        if self._zero_caches is None:
+            self._zero_caches = jax.jit(
+                lambda c: jax.tree.map(jnp.zeros_like, c), donate_argnums=0)
+        st["caches"] = self._zero_caches(st["caches"])
+        return st
+
+    def _chunk_fn(self, bucket: int) -> Callable:
+        if bucket not in self._chunk_fns:
+            self._chunk_fns[bucket] = make_prefill_chunk_fn(
+                self.cfg, self.policy, calib=self.calib, dtype=self.dtype,
+                backend=self.backend)
+        return self._chunk_fns[bucket]
+
+    def _finish_prefill(self, job: _PrefillJob, logits):
+        """Activate the reserved slot from a completed chunked prefill."""
+        h, slot = job.handle, job.slot
+        caches = job.state["caches"]      # (L, 1, ...) groups; ws is dropped
+        keys = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                  h.request.seed)[None]
+        keys, subs = _split_keys(keys)
+        temps = jnp.asarray([h.request.temperature], jnp.float32)
+        first = int(np.asarray(sample_per_slot(logits[:, -1], temps, subs))[0])
+
+        if self._caches is None:
+            self._caches = self._alloc_like(caches)
+        if self._insert is None:
+            self._insert = jax.jit(
+                lambda dst, src, j, row: kvc.insert_slot(
+                    dst, j, src, src_slot=row, batch_axis=1),
+                donate_argnums=0)
+        self._caches = self._insert(self._caches, caches, jnp.int32(slot),
+                                    jnp.int32(0))
+        self._chunk_state = job.state    # recycle buffers for the next job
+        req = h.request
+        self._slot_handle[slot] = h
+        self._tok[slot, 0] = first
+        self._keys[slot] = np.asarray(keys)[0]
+        self._temps[slot] = max(req.temperature, 0.0)
+        self._eos[slot] = -1 if req.eos_id is None else req.eos_id
+        self._done[slot] = req.eos_id is not None and first == req.eos_id
+        h.first_token_time = time.time()
+        self._deliver(slot, [first])
+
     def _alloc_like(self, caches):
         """Zeroed engine cache: the prefilled group's structure with the
         batch axis (axis 1 of every layer-stacked leaf) widened to
@@ -429,7 +643,8 @@ class Engine:
 # ------------------------------------------------------- compatibility shim
 
 class ServeSession:
-    """Lock-step array API over :class:`Engine` (compatibility shim).
+    """Lock-step array API over :class:`Engine` (compatibility shim;
+    DESIGN.md §6 "Compatibility").
 
     ``generate(prompts (B, S), max_new)`` submits one equal request per
     batch slot and runs the engine to completion; the B requests share a
@@ -442,10 +657,13 @@ class ServeSession:
     def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
                  batch_slots: int, max_len: int, calib=None, temperature=0.0,
                  seed: int = 0, backend=None, steps_per_sync: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None, chunk_buckets=None):
         self.engine = Engine(params, cfg, policy, batch_slots=batch_slots,
                              max_len=max_len, calib=calib, seed=seed,
-                             backend=backend, steps_per_sync=steps_per_sync)
+                             backend=backend, steps_per_sync=steps_per_sync,
+                             prefill_chunk=prefill_chunk,
+                             chunk_buckets=chunk_buckets)
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.temperature = temperature
@@ -454,7 +672,7 @@ class ServeSession:
 
     def generate(self, prompts: np.ndarray, max_new: int = 16) -> np.ndarray:
         """prompts: (B, S) int32 (B == batch_slots). Returns (B, max_new);
-        post-EOS positions are padded with ``eos_id``."""
+        post-EOS positions are padded with ``eos_id`` (DESIGN.md §6)."""
         prompts = np.asarray(prompts)
         if prompts.ndim != 2:
             raise ValueError(f"prompts must be (B, S), got {prompts.shape}")

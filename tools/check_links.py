@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Markdown link checker for the repo docs (CI gate; stdlib only).
+
+    python tools/check_links.py README.md DESIGN.md ROADMAP.md
+
+Verifies every inline link ``[text](target)``:
+
+* relative file targets exist (resolved against the markdown file's dir);
+* ``#anchor`` fragments match a heading's GitHub-style slug in the target
+  file (same file when the target is a bare fragment);
+* ``http(s)://`` targets are syntax-checked only (CI has no network).
+
+Exits non-zero listing every broken link, so README/DESIGN/ROADMAP cannot
+merge with dangling references (the doc-CI satellite of DESIGN.md §7's PR).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> '-'."""
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s, flags=re.UNICODE)
+    s = re.sub(r"[^a-z0-9\- ]", "", s)   # drop non-ascii word chars (e.g. §)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {github_slug(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if path_part:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md}: broken file link -> {target}")
+                continue
+        else:
+            dest = md
+        if frag:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue  # fragment into non-markdown: not checkable
+            if frag not in anchors_of(dest):
+                errors.append(f"{md}: broken anchor -> {target} "
+                              f"(no heading slug {frag!r} in {dest.name})")
+    return errors
+
+
+def main(argv=None) -> int:
+    files = [Path(a) for a in (argv or sys.argv[1:])]
+    if not files:
+        files = [Path(p) for p in ("README.md", "DESIGN.md", "ROADMAP.md",
+                                   "CHANGES.md", "PAPERS.md")
+                 if Path(p).exists()]
+    errors = []
+    n_links = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file not found")
+            continue
+        text = CODE_FENCE_RE.sub("", md.read_text(encoding="utf-8"))
+        n_links += len(LINK_RE.findall(text))
+        errors.extend(check_file(md))
+    for e in errors:
+        print(f"BROKEN  {e}")
+    print(f"checked {len(files)} files, {n_links} links, "
+          f"{len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
