@@ -10,6 +10,14 @@ Beyond the bare kernel, this suite drives the *full* ``decode_step`` through
 each registered decode backend (reference jnp vs pallas interpret/compiled)
 and times the scanned multi-token engine at different sync granularities, so
 a backend regression in the served path — not just the kernel — shows up.
+
+The ragged-occupancy sweep (DESIGN.md §4 block pruning) serves slots at
+1%/25%/100% of the packed capacity through local and global layers and
+reports blocks-visited + estimated packed bytes/step next to each latency
+row; the 25%-occupancy case is a hard gate (pruned must visit ≥4× fewer
+blocks than the capacity walk), so a pruning regression fails the smoke run
+in CI, and every row carries an ``occupancy=`` field so BENCH deltas across
+PRs are interpretable.
 """
 from __future__ import annotations
 
@@ -24,6 +32,69 @@ from repro.core.quant import quantize_groups, dequantize_groups
 from . import common as C
 
 B, S, H, D, GQ = 4, 4096, 8, 128, 4
+
+
+def _bench_ragged_occupancy(emit, smoke: bool):
+    """Block pruning: blocks-visited + est bytes/step vs occupancy."""
+    from repro.core import kv_cache as kvc
+    from repro.kernels.ops import (pallas_decode_attention,
+                                   decode_block_report)
+    from repro.models.backends import PallasBackend
+
+    rng = np.random.default_rng(3)
+    hkv, hq, d = 2, 4, 64
+    bs = 64
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=min(64, d),
+                      window=16, n_sink=4)
+    cap_q = 512 if smoke else 2048           # packed-region capacity (tokens)
+    max_len = cap_q + pol.n_sink + pol.window
+    b = 2
+    # the sweep's ACTUAL backend facts (block_s below, resolved interpret
+    # mode), so the BENCH_<n>.json rows are attributable to what ran
+    info = dict(PallasBackend(block_s=bs).info(), slots=b, packed_cap=cap_q)
+    emit(C.csv_row("kernel_backend_info", 0.0,
+                   ";".join(f"{k}={v}" for k, v in sorted(info.items()))))
+
+    gate = {}
+    for occ in (0.01, 0.25, 1.0):
+        live_q = max(1, int(round(cap_q * occ)))
+        length = live_q + pol.n_sink + pol.window
+        k = jnp.asarray(rng.normal(size=(b, length, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, length, hkv, d)), jnp.float32)
+        cache = kvc.prefill(k, v, max_len, pol)
+        q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+        for lname, w in (("global", None), ("local", jnp.int32(bs + 8))):
+            rep = decode_block_report(cache, pol, d, window=w, block_s=bs)
+            vis = int(np.asarray(rep["visited"]).sum())
+            total = b * rep["total"]
+            bpb = rep["bytes_per_block"]
+            times = {}
+            for tag, prune in (("pruned", True), ("unpruned", False)):
+                fn = jax.jit(lambda q, c, _p=prune, _w=w: pallas_decode_attention(
+                    q, c, pol, scale=d ** -0.5, window=_w, block_s=bs,
+                    dtype=jnp.float32, prune_blocks=_p))
+                out = fn(q, cache); out.block_until_ready()
+                t0 = time.time()
+                out = fn(q, cache); out.block_until_ready()
+                times[tag] = (time.time() - t0) * 1e6
+            emit(C.csv_row(
+                f"kernel_ragged_occ{int(occ * 100)}pct_{lname}",
+                times["pruned"],
+                f"occupancy={occ:.2f},blocks_visited={vis},"
+                f"blocks_unpruned={total},block_reduction={total / vis:.2f}x,"
+                f"bytes_step_pruned={vis * bpb},"
+                f"bytes_step_unpruned={total * bpb},"
+                f"us_unpruned={times['unpruned']:.1f}"))
+            gate[(occ, lname)] = total / vis
+
+    # hard gate (acceptance): >= 4x fewer blocks at 25% occupancy
+    red = gate[(0.25, "global")]
+    emit(C.csv_row("kernel_ragged_prune_gate", 0.0,
+                   f"occupancy=0.25,block_reduction={red:.2f}x (gate: >=4x)"))
+    if red < 4.0:
+        raise AssertionError(
+            f"block pruning regressed: {red:.2f}x < 4x fewer blocks at 25% "
+            f"occupancy")
 
 
 def _fp16_attn(q, k, v):
@@ -63,6 +134,7 @@ def _bench_decode_step_backends(emit, smoke: bool):
                                 max_len=s + 32)
     nxt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 1)), jnp.int32)
 
+    occ = s / (s + 32)   # live / per-slot cache capacity
     outs = {}
     for name in BK.available_backends():
 
@@ -81,7 +153,8 @@ def _bench_decode_step_backends(emit, smoke: bool):
         note = ("interpret-mode (CPU correctness path, not perf)"
                 if name == "pallas" and jax.default_backend() != "tpu"
                 else "compiled")
-        emit(C.csv_row(f"decode_step_backend_{name}", us, note))
+        emit(C.csv_row(f"decode_step_backend_{name}", us,
+                       f"occupancy={occ:.2f},{note}"))
     drift = float(np.abs(outs["pallas"] - outs["reference"]).max())
     emit(C.csv_row("decode_step_backend_drift", 0.0,
                    f"max_abs_logit_diff={drift:.2e} (gate: 2e-2)"))
@@ -99,6 +172,7 @@ def _bench_decode_step_backends(emit, smoke: bool):
         out = sess.generate(prompts, max_new=max_new)
         us = (time.time() - t0) * 1e6
         emit(C.csv_row(f"engine_generate_sync{n_sync}", us,
+                       f"occupancy={(s + max_new) / (s + 32):.2f},"
                        f"max_new={max_new},host_syncs~{-(-max_new // n_sync)}"))
 
 
@@ -136,12 +210,13 @@ def run(emit, smoke: bool = False):
     cacheq = sum(int(np.prod(x.shape)) * x.dtype.itemsize
                  for x in list(k_qt.values()) + list(v_qt.values()))
     emit(C.csv_row("kernel_fp16_attn", t_fp,
-                   f"arg_bytes={a16},cache_bytes={cache16}"))
+                   f"occupancy=1.00,arg_bytes={a16},cache_bytes={cache16}"))
     emit(C.csv_row("kernel_packed_attn", t_q,
-                   f"arg_bytes={aq},cache_bytes={cacheq},"
+                   f"occupancy=1.00,arg_bytes={aq},cache_bytes={cacheq},"
                    f"cache_compression={cache16/cacheq:.2f}x"))
     emit(C.csv_row("kernel_hbm_win", 0.0,
                    f"operand_reduction={(a16)/(aq):.2f}x "
                    f"(TPU kernel reads packed bytes only)"))
 
+    _bench_ragged_occupancy(emit, smoke)
     _bench_decode_step_backends(emit, smoke)

@@ -80,6 +80,28 @@ def run(emit, smoke: bool = False):
             f"tok_ms_N32={per_tok[32]*1e3:.2f},"
             f"speedup_N32={per_tok[1]/per_tok[32]:.2f}x"))
 
+    # ragged-occupancy roofline (DESIGN.md §4 block pruning): without length
+    # -aware pruning a decode step streams the *capacity* worth of packed
+    # planes per slot; with it, only the live tokens (plus the local window's
+    # reach on windowed layers).  These rows are the analytic twin of the
+    # measured blocks-visited sweep in kernel_bench.
+    cap = 131072
+    local_w = 4096          # gemma-style local layer reach (window cap)
+    kv_tok = _kv_bytes_per_token(cfg, kv2) * cfg.n_layers
+    for occ in (0.01, 0.25, 1.0):
+        live = int(cap * occ)
+        dead = kv_tok * cap          # unpruned: capacity walk per step
+        glob = kv_tok * live         # pruned, global layer: live tokens
+        loc = kv_tok * min(live, local_w)   # pruned, local layer
+        t_dead = max(2 * n_params / PEAK, (n_params * 2 + dead) / BW)
+        t_glob = max(2 * n_params / PEAK, (n_params * 2 + glob) / BW)
+        emit(C.csv_row(
+            f"table6_ragged_occ{int(occ * 100)}pct", t_glob * 1e6,
+            f"occupancy={occ:.2f},cap={cap},live={live},"
+            f"kv_bytes_unpruned={dead},kv_bytes_pruned_global={glob},"
+            f"kv_bytes_pruned_local={loc},"
+            f"step_speedup_vs_unpruned={t_dead / t_glob:.2f}x"))
+
     # max context at batch 1 on one 80GB device (paper's 1M-token claim)
     for name, pol in (("fp16", None), ("kv4", kv4), ("kv2", kv2)):
         per_tok = _kv_bytes_per_token(cfg, pol) * cfg.n_layers

@@ -48,9 +48,15 @@ def _serve(params, cfg, pol, reqs, max_len, prefill_chunk):
         shapes = len(eng.prefill_shapes)
     else:
         shapes = len({len(r.prompt) for r in reqs})  # one jit per length
+    # per-request final occupancy (live tokens / per-slot capacity): the
+    # regime block pruning targets — BENCH deltas are only interpretable
+    # next to the occupancy that produced them
+    occ = [(len(h.request.prompt) + len(h.tokens)) / max_len for h in handles]
     return {"wall_s": wall, "tok_s": toks / max(wall, 1e-9),
             "ttft_p50_ms": _pct(ttft, 50), "ttft_max_ms": max(ttft),
-            "prefill_shapes": shapes}
+            "prefill_shapes": shapes,
+            "occ_mean": float(np.mean(occ)), "occ_max": float(np.max(occ)),
+            "backend_info": eng.backend_info}
 
 
 def run(emit, smoke: bool = False):
@@ -77,6 +83,8 @@ def run(emit, smoke: bool = False):
     for name, r in (("serve_ragged_whole_prompt", whole),
                     (f"serve_ragged_chunked_c{chunk}", chunked)):
         emit(f"{name},{r['wall_s'] * 1e6 / max(len(reqs), 1):.1f},"
+             f"occupancy_mean={r['occ_mean']:.2f};"
+             f"occupancy_max={r['occ_max']:.2f};"
              f"ttft_p50_ms={r['ttft_p50_ms']:.0f};"
              f"ttft_max_ms={r['ttft_max_ms']:.0f};"
              f"tok_s={r['tok_s']:.2f};"
@@ -84,3 +92,6 @@ def run(emit, smoke: bool = False):
     emit(f"serve_prefill_shape_ratio,0.0,"
          f"whole={whole['prefill_shapes']};chunked={chunked['prefill_shapes']}"
          f";bound=len(chunk_buckets)")
+    info = whole["backend_info"]
+    emit("serve_backend_info,0.0," +
+         ";".join(f"{k}={v}" for k, v in sorted(info.items())))

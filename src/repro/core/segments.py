@@ -119,6 +119,59 @@ def chunk_segment(t0, n_valid, size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.broadcast_to(pos, shape), jnp.broadcast_to(valid, shape)
 
 
+def block_live(ok, block_s: int) -> jnp.ndarray:
+    """Per-(slot, block) liveness of a packed-segment mask.
+
+    ``ok``: (B, S) (or (S,)) attendability over packed-region slots, S a
+    multiple of ``block_s``.  Returns (B, n_blocks) bool — True iff the
+    block holds at least one attendable token.  This is the single source
+    for decode block pruning (DESIGN.md §4): a False block is *exactly*
+    no-op under the flash merge (every contribution is multiplied by the
+    zero mask), so both backends may skip it bit-identically.
+    """
+    ok = jnp.asarray(ok)
+    if ok.ndim == 1:
+        ok = ok[None]
+    b, s = ok.shape
+    assert s % block_s == 0, (s, block_s)
+    return ok.reshape(b, s // block_s, block_s).any(axis=-1)
+
+
+def packed_block_bounds(ok, block_s: int) -> jnp.ndarray:
+    """Per-slot live block range ``[lo, hi)`` of a packed-segment mask.
+
+    Returns (B, 2) int32 ``[lo, hi)`` such that every attendable token of
+    slot ``b`` lies in blocks ``[lo_b, hi_b)``; a slot with no attendable
+    packed token gets ``lo == hi == 0``.  The lower bound comes from the
+    effective local window (windowed layers never attend below
+    ``t_now - w_eff``), the upper bound from each slot's packed frontier —
+    both already encoded in ``ok`` (``attend_ok`` = stored ∧ causal ∧
+    window), so the bounds are tight for every regime: ragged per-slot
+    lengths, traced windows, and hoisted ``local_slice`` gathers alike.
+    """
+    blk = block_live(ok, block_s)
+    nb = blk.shape[-1]
+    has = blk.any(axis=-1)
+    lo = jnp.argmax(blk, axis=-1).astype(jnp.int32)
+    hi = (nb - jnp.argmax(blk[:, ::-1], axis=-1)).astype(jnp.int32)
+    zero = jnp.zeros_like(lo)
+    return jnp.stack([jnp.where(has, lo, zero), jnp.where(has, hi, zero)],
+                     axis=-1)
+
+
+def blocks_visited(bounds) -> jnp.ndarray:
+    """Per-slot count of sequence blocks the pruned decode kernel DMAs.
+
+    ``bounds``: (B, 2) from :func:`packed_block_bounds`.  The kernel's
+    block-index remap clamps out-of-range grid steps to the nearest live
+    block, so a slot streams exactly ``hi - lo`` blocks — except an empty
+    slot, whose clamped index still fetches one block (the ``+ 1`` in the
+    regression guard of tests/test_block_pruning.py).
+    """
+    lo, hi = bounds[..., 0], bounds[..., 1]
+    return jnp.maximum(hi - lo, 1)
+
+
 def attend_ok(pos, stored, t_now, window_eff) -> jnp.ndarray:
     """Final attendability: stored ∧ causal ∧ inside the local band.
 

@@ -20,6 +20,7 @@ import jax.experimental.pallas as pl
 
 from ..core.quant import plane_layout
 from ..core.policy import QuantPolicy
+from ._compat import resolve_interpret
 
 BLOCK_T = 128
 _EPS = 1e-8
@@ -76,15 +77,19 @@ def _kernel(x_ref, alpha_ref, *out_refs, layout, fp8_meta):
 
 def kv_quant_pallas(x: jnp.ndarray, bits: float, group_size: int,
                     alpha: Optional[jnp.ndarray] = None, fp8_meta: bool = True,
-                    interpret: bool = True, block_t: int = BLOCK_T):
+                    interpret: Optional[bool] = None, block_t: int = BLOCK_T):
     """x: (N, D) tokens -> QTensor dict matching repro.core.quant layout.
 
     N must divide by block_t (wrapper pads). ``alpha`` may be a scalar,
     (G_total,) shared clip factors, or (N, G_total) per-row factors (used by
     the serving path, where rows are (batch·head) tokens with per-head
-    calibration).  Validated in interpret mode on CPU; compiled path targets
-    TPU v5e VMEM tiles of (block_t, D).
+    calibration).  ``interpret=None`` resolves via
+    ``kernels._compat.resolve_interpret`` (compiled on TPU, interpreter
+    elsewhere, ``REPRO_PALLAS_INTERPRET`` overriding); the interpreter run
+    is the CPU correctness path, the compiled path targets TPU v5e VMEM
+    tiles of (block_t, D).
     """
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     assert n % block_t == 0, (n, block_t)
     layout = plane_layout(d, bits, group_size)

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.policy import QuantPolicy
-from ..core.quant import n_meta_groups
+from ..core.quant import n_meta_groups, packed_nbytes
 from ..core import segments as seg
 from ..core.kv_cache import slot_lengths as kvc_slot_lengths
 from .decode_attn import decode_attn_pallas, BLOCK_S
@@ -60,7 +60,26 @@ def _pad_planes(qt: dict, s_pad: int, fp8_meta: bool) -> dict:
             for k, v in qt.items()}
 
 
-def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=True):
+def _block_pad(s_eff: int, block_s: int):
+    """Kernel tile width + padded token count for an ``s_eff``-token packed
+    view (shared by the wrapper and :func:`decode_block_report` so the
+    pruning accounting uses the exact grid the kernel runs)."""
+    bs = min(block_s, max(s_eff, 8))
+    return bs, -(-s_eff // bs) * bs
+
+
+def _packed_ok(j, lens, t_now, weff, policy: QuantPolicy, b: int):
+    """Per-slot attendability over (padded) packed slots ``j`` — THE mask
+    the kernel applies and the one the ``[lo, hi)`` bounds are reduced
+    from.  Single source for :func:`pallas_decode_attention` and
+    :func:`decode_block_report`: the CI pruning gate measures the same
+    math the kernel prunes with."""
+    pos_q, stored_q = seg.packed_segment(j, lens, policy.n_sink,
+                                         policy.window)
+    return seg.bcast_rows(seg.attend_ok(pos_q, stored_q, t_now, weff), b)
+
+
+def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=None):
     """(N, D) tokens -> packed QTensor via the fused Pallas kernel."""
     n, d = x.shape
     blk = min(128, n) if n % 128 else 128
@@ -71,7 +90,7 @@ def quantize_tokens(x, policy: QuantPolicy, alpha=None, interpret=True):
                            interpret=interpret, block_t=max(blk, 1))
 
 
-def make_kernel_quant_fn(interpret: bool = True):
+def make_kernel_quant_fn(interpret: Optional[bool] = None):
     """Build a ``quant_fn`` for ``kv_cache.prefill`` / ``decode_append``.
 
     Flattens the leading (batch, seq, head) axes to kernel rows, tiles the
@@ -104,8 +123,10 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
                             softcap: float = 0.0, window=None,
                             dtype=jnp.bfloat16, chunk: int = 0,
                             local_slice: int = 0, packed_override=None,
-                            extra_kv=None, q_pos=None, interpret: bool = True,
-                            block_s: int = BLOCK_S):
+                            extra_kv=None, q_pos=None,
+                            interpret: Optional[bool] = None,
+                            block_s: int = BLOCK_S,
+                            prune_blocks: bool = True):
     """Fused-kernel decode over the SKVQ cache.
 
     Interface mirrors the reference ``decode_attention_skvq`` (same cache
@@ -116,6 +137,19 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
     accepted for signature parity but ignored — the kernel always streams
     ``block_s``-token tiles with an online-softmax accumulator, so the
     dequantized cache never materializes.
+
+    ``prune_blocks`` (DESIGN.md §4 "block pruning & bounds contract"): this
+    wrapper — the host side of the kernel call — reduces the per-slot
+    attendability mask to live block bounds ``[lo, hi)``
+    (``segments.packed_block_bounds``: lower bound from the effective local
+    window, upper bound from each slot's packed frontier) and scalar-
+    prefetches them into the kernel, which neither fetches nor computes dead
+    blocks.  Bit-identical to the unpruned walk — a dead block's flash
+    contribution is exactly zero — so it defaults on; False keeps the
+    capacity-proportional baseline (benchmarks compare the two).
+
+    ``interpret=None`` resolves compiled-on-TPU / interpreter-elsewhere
+    (``REPRO_PALLAS_INTERPRET`` overriding; ``kernels._compat``).
 
     q: (B, 1, Hq, D) -> (B, 1, Hq, D).
     """
@@ -165,17 +199,17 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
             else:
                 j = jnp.arange(k_qt["codes_hi"].shape[1])
         s_eff = k_qt["codes_hi"].shape[1]
-        bs = min(block_s, max(s_eff, 8))
-        s_pad = -(-s_eff // bs) * bs
+        bs, s_pad = _block_pad(s_eff, block_s)
         k_qt = _pad_planes(k_qt, s_pad, policy.fp8_meta)
         v_qt = _pad_planes(v_qt, s_pad, policy.fp8_meta)
         j = jnp.asarray(j, jnp.int32)
         j = _pad_to(j, s_pad, axis=j.ndim - 1, fill=_FAR)
-        pos_q, stored_q = seg.packed_segment(j, lens, ns, w)
-        ok = seg.attend_ok(pos_q, stored_q, t_now, weff)  # (B, S_pad)
+        ok = _packed_ok(j, lens, t_now, weff, policy, b)   # (B, S_pad)
+        bounds = (seg.packed_block_bounds(ok, bs) if prune_blocks else None)
         num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
                                        policy, d, scale, interpret=interpret,
-                                       block_s=bs, softcap=softcap)
+                                       block_s=bs, softcap=softcap,
+                                       block_bounds=bounds)
         parts.append((num, m[..., 0], l[..., 0]))
 
     # fp segments: sinks + sliding-window ring (+ pre-append current token)
@@ -205,10 +239,52 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
     return seg.finalize(parts).reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def decode_block_report(cache, policy: QuantPolicy, head_dim: int, *,
+                        window=None, q_pos=None, block_s: int = BLOCK_S):
+    """Host-side pruning report for the default (non-sliced) packed walk.
+
+    Computes the same per-slot attendability mask the wrapper feeds the
+    kernel and reduces it to the pruning accounting the benchmarks track
+    (DESIGN.md §4):
+
+    ``bounds``      (B, 2) live block range [lo, hi) per slot
+    ``visited``     (B,)   blocks the pruned kernel DMAs (>= 1 per slot)
+    ``total``       int    capacity blocks the unpruned kernel walks
+    ``bytes_per_block`` int packed-plane bytes one block moves (all kv heads)
+
+    Estimated packed bytes/step = ``visited.sum() * bytes_per_block`` pruned
+    vs ``B * total * bytes_per_block`` unpruned — the blocks-visited and
+    bytes/step columns of the ragged-occupancy bench.
+    """
+    s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
+    lens = kvc_slot_lengths(cache)
+    b = lens.shape[0]
+    if s_q == 0 or policy.is_fp16:
+        zeros = jnp.zeros((b,), jnp.int32)
+        return {"bounds": jnp.zeros((b, 2), jnp.int32), "visited": zeros,
+                "total": 0, "bytes_per_block": 0}
+    t_now = lens - 1 if q_pos is None else jnp.broadcast_to(
+        jnp.asarray(q_pos), (b,))
+    weff = seg.effective_window(window)
+    bs, s_pad = _block_pad(s_q, block_s)
+    j = _pad_to(jnp.arange(s_q, dtype=jnp.int32), s_pad, axis=0, fill=_FAR)
+    ok = _packed_ok(j, lens, t_now, weff, policy, b)
+    bounds = seg.packed_block_bounds(ok, bs)
+    hkv = cache["qk_codes_hi"].shape[2]
+    gsz = min(policy.group_size, head_dim)
+    per_tok = (packed_nbytes(head_dim, policy.bits_k, gsz,
+                             policy.meta_dtype_bits) +
+               packed_nbytes(head_dim, policy.bits_v, gsz,
+                             policy.meta_dtype_bits))
+    return {"bounds": bounds, "visited": seg.blocks_visited(bounds),
+            "total": s_pad // bs, "bytes_per_block": bs * hkv * per_tok}
+
+
 @functools.partial(jax.jit, static_argnames=("policy", "head_dim", "scale",
                                              "window", "interpret", "block_s"))
 def skvq_decode_attention(q, cache, policy: QuantPolicy, head_dim: int,
-                          scale: float, window: int = 0, interpret: bool = True,
+                          scale: float, window: int = 0,
+                          interpret: Optional[bool] = None,
                           block_s: int = BLOCK_S):
     """Legacy jit'd entry point (pre-backend API).
 

@@ -119,6 +119,8 @@ def main(argv=None):
     print(f"arch={cfg.name} policy=K{args.bits_k}V{args.bits_v} "
           f"g{policy.group_size} w{policy.window} slots={args.batch} "
           f"requests={n_req}")
+    print("backend:", " ".join(f"{k}={v}" for k, v in
+                               sorted(eng.backend_info.items())))
     print(f"served {n_req} requests / {total_toks} tokens in {dt:.2f}s "
           f"({total_toks / dt:.1f} tok/s aggregate)")
     print(f"latency ms/request: p50={_pct(lat, 50):.0f} "

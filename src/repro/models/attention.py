@@ -226,7 +226,8 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
                           window: Optional[jnp.ndarray] = None,
                           dtype=jnp.bfloat16, chunk: int = 0,
                           local_slice: int = 0, packed_override=None,
-                          extra_kv=None, q_pos=None):
+                          extra_kv=None, q_pos=None,
+                          prune_blocks: bool = True):
     """Reference decode over the SKVQ cache (dequantize -> attend).
 
     Per-slot aware: ``cache["length"]`` (and ``q_pos``) may be ``(B,)`` —
@@ -242,6 +243,14 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
         gather the last ``local_slice`` packed tokens of each slot before
         dequantizing (gemma-style 5:1 local stacks touch 1/512th of a 500k
         cache).  Requires static knowledge of is_local (unrolled decode).
+      * ``prune_blocks``: mirror of the fused kernel's block pruning
+        (DESIGN.md §4) for the ``chunk``-tiled scan — tiles with no
+        attendable token (``segments.block_live`` of the same mask the
+        Pallas wrapper reduces to ``[lo, hi)`` bounds) skip the dequantize
+        + partial-attend entirely via ``lax.cond``, so the reference
+        backend's work also scales with live tokens and the two backends
+        stay comparable at equal occupancy.  A dead tile's merge weight is
+        exactly zero, so outputs are unchanged.
     """
     w, ns = policy.window, policy.n_sink
     b, _, hq, d = q.shape
@@ -305,18 +314,32 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
         sq_eff = k_qt["codes_hi"].shape[1]
         if chunk and sq_eff > chunk and sq_eff % chunk == 0:
             nc = sq_eff // chunk
+            # per-tile liveness: any slot with any attendable token in the
+            # tile (same mask reduction the Pallas wrapper turns into its
+            # [lo, hi) bounds — seg.packed_block_bounds)
+            if prune_blocks:
+                live = seg.block_live(seg.bcast_rows(ok_q, b),
+                                      chunk).any(axis=0)      # (nc,)
+            else:
+                live = jnp.ones((nc,), bool)
 
             def body(carry, xs):
-                kq_c, vq_c, ok_c = xs
-                part = _segment_partial(
-                    qg, dq(kq_c, policy.bits_k), dq(vq_c, policy.bits_v),
-                    ok_c, scale, cfg)
-                return _merge_partials(carry, part), None
+                kq_c, vq_c, ok_c, lv = xs
+
+                def attend_tile(c):
+                    part = _segment_partial(
+                        qg, dq(kq_c, policy.bits_k), dq(vq_c, policy.bits_v),
+                        ok_c, scale, cfg)
+                    return _merge_partials(c, part)
+
+                # dead tile (all slots outside their live range): exact
+                # no-op merge — skip the dequantize + flash math
+                return jax.lax.cond(lv, attend_tile, lambda c: c, carry), None
 
             resh = lambda t: jnp.swapaxes(
                 t.reshape(t.shape[0], nc, chunk, *t.shape[2:]), 0, 1)
             xs = (jax.tree.map(resh, k_qt), jax.tree.map(resh, v_qt),
-                  resh(ok_q))
+                  resh(seg.bcast_rows(ok_q, b)), live)
             init = (jnp.zeros((b, hkv, hq // hkv, d), jnp.float32),
                     jnp.full((b, hkv, hq // hkv), _NEG, jnp.float32),
                     jnp.zeros((b, hkv, hq // hkv), jnp.float32))

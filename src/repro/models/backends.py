@@ -45,12 +45,21 @@ class DecodeBackend(Protocol):
     def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
                window=None, dtype=jnp.bfloat16, chunk: int = 0,
                local_slice: int = 0, packed_override=None, extra_kv=None,
-               q_pos=None):
-        """q: (B, 1, Hq, D) against the cache dict -> (B, 1, Hq, D)."""
+               q_pos=None, prune_blocks: Optional[bool] = None):
+        """q: (B, 1, Hq, D) against the cache dict -> (B, 1, Hq, D).
+
+        ``prune_blocks`` (None = the backend's default) toggles dead-block
+        skipping over the packed segment (DESIGN.md §4)."""
         ...
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
         """Quantizer for ``kv_cache.prefill``/``decode_append`` (None = jnp)."""
+        ...
+
+    def info(self) -> dict:
+        """Resolved runtime facts (backend name, interpret mode, pruning) —
+        surfaced via ``Engine.backend_info`` and the benchmark JSON so a
+        recorded number says which mode produced it."""
         ...
 
 
@@ -105,24 +114,33 @@ class ReferenceBackend:
     DESIGN.md §4)."""
 
     name: str = "reference"
+    prune_blocks: bool = True
 
     def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
                window=None, dtype=jnp.bfloat16, chunk: int = 0,
                local_slice: int = 0, packed_override=None, extra_kv=None,
-               q_pos=None):
+               q_pos=None, prune_blocks: Optional[bool] = None):
         """One query token against the SKVQ cache via the reference jnp
         path (``attention.decode_attention_skvq``; DESIGN.md §4)."""
         from .attention import decode_attention_skvq
+        if prune_blocks is None:
+            prune_blocks = self.prune_blocks
         return decode_attention_skvq(
             q, cache, cfg, policy, window=window, dtype=dtype, chunk=chunk,
             local_slice=local_slice, packed_override=packed_override,
-            extra_kv=extra_kv, q_pos=q_pos)
+            extra_kv=extra_kv, q_pos=q_pos, prune_blocks=prune_blocks)
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
         """None — kv_cache defaults to the jnp ``quantize_groups``
         (DESIGN.md §2); used by prefill, decode_append, and the chunked
         prefill of §7 alike."""
         return None
+
+    def info(self) -> dict:
+        """Resolved runtime facts (DESIGN.md §4): pure jnp — no kernel, so
+        no interpret mode; pruning applies to the ``chunk``-tiled scan."""
+        return {"name": self.name, "interpret": None,
+                "prune_blocks": self.prune_blocks}
 
 
 # --------------------------------------------------------------------- pallas
@@ -142,26 +160,29 @@ class PallasBackend:
     interpret: Optional[bool] = None
     block_s: int = 256
     kernel_quant: bool = False
+    prune_blocks: bool = True
 
     def _interpret(self) -> bool:
-        if self.interpret is not None:
-            return self.interpret
-        return jax.default_backend() != "tpu"
+        from ..kernels._compat import resolve_interpret
+        return resolve_interpret(self.interpret)
 
     def attend(self, q, cache, cfg: ArchConfig, policy: QuantPolicy, *,
                window=None, dtype=jnp.bfloat16, chunk: int = 0,
                local_slice: int = 0, packed_override=None, extra_kv=None,
-               q_pos=None):
+               q_pos=None, prune_blocks: Optional[bool] = None):
         """One query token against the SKVQ cache via the fused Pallas
         kernel (``kernels.ops.pallas_decode_attention``; DESIGN.md §4)."""
         from ..kernels.ops import pallas_decode_attention
         from .attention import _scale
         scale = _scale(cfg)
+        if prune_blocks is None:
+            prune_blocks = self.prune_blocks
         return pallas_decode_attention(
             q, cache, policy, scale=scale, softcap=cfg.attn_softcap,
             window=window, dtype=dtype, chunk=chunk, local_slice=local_slice,
             packed_override=packed_override, extra_kv=extra_kv, q_pos=q_pos,
-            interpret=self._interpret(), block_s=self.block_s)
+            interpret=self._interpret(), block_s=self.block_s,
+            prune_blocks=prune_blocks)
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
         """Fused quantize+pack kernel when ``kernel_quant`` is set
@@ -170,6 +191,17 @@ class PallasBackend:
             return None
         from ..kernels.ops import make_kernel_quant_fn
         return make_kernel_quant_fn(interpret=self._interpret())
+
+    def info(self) -> dict:
+        """Resolved runtime facts (DESIGN.md §4): which mode actually runs
+        (``interpret`` resolved via ``kernels._compat`` — explicit arg >
+        ``REPRO_PALLAS_INTERPRET`` > host auto-detect) plus the pruning and
+        tiling knobs, so benchmark JSON rows are attributable."""
+        from ..kernels._compat import interpret_mode_info
+        out = {"name": self.name, "prune_blocks": self.prune_blocks,
+               "block_s": self.block_s, "kernel_quant": self.kernel_quant}
+        out.update(interpret_mode_info(self.interpret))
+        return out
 
 
 register_backend("pallas")(PallasBackend)

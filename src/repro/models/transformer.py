@@ -687,7 +687,8 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens, state: Dict,
 def decode_step(params: Params, cfg: ArchConfig, token, caches,
                 policy: QuantPolicy, calib: Optional[Dict] = None,
                 positions=None, dtype=None, chunk: int = 0,
-                unroll: bool = False, backend=None):
+                unroll: bool = False, backend=None,
+                prune_blocks: Optional[bool] = None):
     """One decode step. token: (B, 1) int32 (or (B,1,D) embeds).
     Returns (logits (B,1,V), new caches).
 
@@ -697,7 +698,11 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
     their window before dequantizing (§Perf long-context lever).
     ``backend``: decode-attention backend (name | DecodeBackend | None =
     host default) — "reference" jnp path or the fused "pallas" kernels
-    (DESIGN.md §4)."""
+    (DESIGN.md §4).
+    ``prune_blocks`` (None = backend default): dead-block skipping over the
+    packed segment (DESIGN.md §4).  Per-slot cache lengths stay traced
+    scalars through this function, so the pruning bounds change with the
+    serving traffic without ever recompiling the scanned decode."""
     backend = bk.resolve_backend(backend)
     quant_fn = backend.quant_fn(policy)
     params = _cast_params(params, dtype)
@@ -754,7 +759,8 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             attn = backend.attend(
                 qp, kvcache, cfg, policy, window=fl["window"], dtype=h.dtype,
                 chunk=chunk, packed_override=packed_override,
-                extra_kv=(kp.astype(h.dtype), vp.astype(h.dtype), t), q_pos=t)
+                extra_kv=(kp.astype(h.dtype), vp.astype(h.dtype), t), q_pos=t,
+                prune_blocks=prune_blocks)
             kvcache = kvc.decode_append(kvcache, kp, vp, policy,
                                         cl["alpha_k"], cl["alpha_v"],
                                         quant_fn=quant_fn)
@@ -765,7 +771,8 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             attn = backend.attend(qp, kvcache, cfg, policy,
                                   window=fl["window"], dtype=h.dtype,
                                   chunk=chunk, local_slice=local_slice,
-                                  packed_override=None)
+                                  packed_override=None,
+                                  prune_blocks=prune_blocks)
         attn = _apply_perm(attn, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
         attn = _attn_out(attn, p["attn"])
         if "ssm" in p:

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from ..core import kv_cache as kvc
 from ..core.policy import QuantPolicy
 from ..models.config import ArchConfig
+from ..models import backends as bk
 from ..models import transformer as T
 
 
@@ -408,6 +409,15 @@ class Engine:
         while pending():
             if not self.step():
                 break
+
+    @property
+    def backend_info(self) -> dict:
+        """Resolved decode-backend facts (DESIGN.md §4): backend name, the
+        interpret mode that will actually run (explicit arg >
+        ``REPRO_PALLAS_INTERPRET`` > host auto-detect) and the block-pruning
+        state.  Benchmarks record this next to their latency rows so a
+        number in the JSON artifact says which mode produced it."""
+        return bk.resolve_backend(self.backend).info()
 
     @property
     def prefill_shapes(self) -> tuple:
