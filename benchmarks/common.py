@@ -14,7 +14,6 @@ establish, and the tests assert the same ordering).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import os
 from typing import Callable, Dict, List, Optional
@@ -42,6 +41,27 @@ TRAIN_STEPS = 300
 EVAL_BATCH, EVAL_SEQ = 8, 256
 
 
+def train_or_restore(cache_dir: str, cfg, corpus, train_steps: int, *,
+                     init_key: int = 0, dl_seed: int = 5):
+    """Train a small model ``train_steps`` steps (or restore the cached
+    checkpoint — keyed by directory, so distinct step counts must use
+    distinct dirs) and return its params.  Shared by every quality bench
+    that needs K/V activations with realistic channel structure."""
+    state = init_train_state(cfg, jax.random.PRNGKey(init_key))
+    mgr = CheckpointManager(cache_dir, save_every=train_steps)
+    restored = mgr.restore_or_none(state)
+    if restored and restored["step"] >= train_steps - 1:
+        return restored["state"]["params"]
+    dl = DataLoader(corpus, batch=16, seq=128, seed=dl_seed)
+    lr = functools.partial(warmup_cosine, peak_lr=5e-3, warmup=20,
+                           total=train_steps)
+    step = jax.jit(make_train_step(cfg, lr_fn=lr))
+    for i in range(train_steps):
+        state, _ = step(state, dl.batch_at(i))
+    mgr.maybe_save(train_steps, state)
+    return state["params"]
+
+
 @functools.lru_cache(maxsize=1)
 def bench_model():
     """Train (or restore) the benchmark model; returns (cfg, params, corpus)."""
@@ -49,24 +69,8 @@ def bench_model():
                                                n_heads=4, n_kv_heads=2,
                                                head_dim=32, d_ff=256)
     corpus = SyntheticCorpus(cfg.vocab_size, seed=11)
-    state = init_train_state(cfg, jax.random.PRNGKey(0))
-    mgr = CheckpointManager(BENCH_DIR, save_every=TRAIN_STEPS)
-    restored = mgr.restore_or_none(state)
-    if restored and restored["step"] >= TRAIN_STEPS - 1:
-        return cfg, restored["state"]["params"], corpus
-    dl = DataLoader(corpus, batch=16, seq=128, seed=5)
-    lr = functools.partial(warmup_cosine, peak_lr=5e-3, warmup=20,
-                           total=TRAIN_STEPS)
-    step = jax.jit(make_train_step(cfg, lr_fn=lr))
-    for i in range(TRAIN_STEPS):
-        state, m = step(state, dl.batch_at(i))
-    mgr.maybe_save(TRAIN_STEPS, state) or mgr.maybe_save(0, state)
-    try:
-        from repro.checkpoint import save_checkpoint
-        save_checkpoint(BENCH_DIR, TRAIN_STEPS, state)
-    except Exception:
-        pass
-    return cfg, state["params"], corpus
+    params = train_or_restore(BENCH_DIR, cfg, corpus, TRAIN_STEPS)
+    return cfg, params, corpus
 
 
 def eval_tokens(corpus, n=EVAL_BATCH, s=EVAL_SEQ, seed=999):
@@ -76,12 +80,11 @@ def eval_tokens(corpus, n=EVAL_BATCH, s=EVAL_SEQ, seed=999):
 
 
 def calibrate(cfg, params, corpus, policy: QuantPolicy, seed=0):
-    toks = eval_tokens(corpus, n=8, s=128, seed=12345)
-    ks, vs = T.collect_kv(params, cfg, {"tokens": toks})
-    layers = [calibrate_layer(np.asarray(ks[l]), np.asarray(vs[l]), policy,
-                              seed=seed + l)
-              for l in range(ks.shape[0])]
-    return layers
+    """Per-layer calibration for one uniform policy (the schedule path with
+    every layer alike — see :func:`calibrate_schedule`)."""
+    from repro.core.policy import as_schedule
+    return calibrate_schedule(cfg, params, corpus,
+                              as_schedule(policy, cfg.n_layers), seed=seed)
 
 
 # ---------------------------------------------------- position-correct eval
@@ -112,30 +115,30 @@ def _windowed_attention(q, k, v, kq, vq, window: int, sinks: int, cfg):
     return o.reshape(b, s, hq, d).astype(q.dtype)
 
 
-def forward_with_method(params, cfg, tokens, method: Callable,
-                        calibs: Optional[List] = None,
-                        policy: Optional[QuantPolicy] = None):
-    """Dense-family forward where each layer's K/V pass through ``method``
-    (a repro.core.baselines function) with position-correct window mixing."""
+def _layer_mixed_forward(params, cfg, tokens, method_for: Callable,
+                         calibs: Optional[List] = None):
+    """Shared proxy-ppl forward: ``method_for(i) -> (method_fn, policy)``
+    picks layer ``i``'s K/V transform (a repro.core.baselines function) and
+    the policy supplying its window/sink mixing — one loop serves both the
+    uniform method rows and the per-layer schedule rows (DESIGN.md §8)."""
     from repro.core.baselines import MethodCtx
 
     x = L.embed(tokens, params["embed"], cfg.embed_scale)
     b, s, _ = x.shape
     rope = T._rope_tables(cfg, jnp.arange(s, dtype=jnp.int32))
-    n = cfg.n_layers
     layers = params["layers"]
-    window = policy.window if policy else 0
-    sinks = policy.n_sink if policy else 0
-    for i in range(n):
+    for i in range(cfg.n_layers):
+        method, pol = method_for(i)
         p = jax.tree.map(lambda a: a[i], layers)
         fl = {"window": jnp.int32(0), "is_local": jnp.int32(0)}
         h = L.norm(x, p["norm1"], cfg)
         q, k, v = T._qkv(h, p["attn"], cfg, rope, fl)
-        ctx = MethodCtx(policy, calibs[i] if calibs else None)
-        mpol = dataclasses.replace(policy, window=0, n_sink=0)
-        ctx = MethodCtx(mpol, calibs[i] if calibs else None)
+        ctx = MethodCtx(pol.without_window() if pol else None,
+                        calibs[i] if calibs else None)
         kq, vq = method(k, v, ctx)
-        attn = _windowed_attention(q, k, v, kq, vq, window, sinks, cfg)
+        attn = _windowed_attention(q, k, v, kq, vq,
+                                   pol.window if pol else 0,
+                                   pol.n_sink if pol else 0, cfg)
         x = x + T._attn_out(attn, p["attn"])
         h2 = L.norm(x, p["norm2"], cfg)
         f, _ = T._ffn(h2, p, cfg)
@@ -144,13 +147,71 @@ def forward_with_method(params, cfg, tokens, method: Callable,
     return L.unembed(x, params, cfg)
 
 
+def forward_with_method(params, cfg, tokens, method: Callable,
+                        calibs: Optional[List] = None,
+                        policy: Optional[QuantPolicy] = None):
+    """Dense-family forward where EVERY layer's K/V pass through ``method``
+    with position-correct window mixing (the uniform special case of
+    :func:`_layer_mixed_forward`)."""
+    return _layer_mixed_forward(params, cfg, tokens,
+                                lambda i: (method, policy), calibs)
+
+
 def ppl_with_method(params, cfg, tokens, method, calibs=None, policy=None
                     ) -> float:
     logits = forward_with_method(params, cfg, tokens, method, calibs, policy)
+    return _ppl(logits, tokens)
+
+
+def _ppl(logits, tokens) -> float:
     lg = logits.astype(jnp.float32)[:, :-1]
     lse = jax.nn.logsumexp(lg, axis=-1)
     gold = jnp.take_along_axis(lg, tokens[:, 1:, None], axis=-1)[..., 0]
     return float(jnp.exp((lse - gold).mean()))
+
+
+# ------------------------------------------------- per-layer schedule eval
+
+def calibrate_schedule(cfg, params, corpus, schedule, seed=0):
+    """Per-layer calibration table for a :class:`PolicySchedule`: layer
+    ``l`` is calibrated against its OWN policy (alpha group counts are
+    policy-dependent), so mixed-precision ladders and fp16 guard layers
+    each get the right artifacts (DESIGN.md §8)."""
+    from repro.core.policy import as_schedule
+    schedule = as_schedule(schedule, cfg.n_layers)
+    toks = eval_tokens(corpus, n=8, s=128, seed=12345)
+    ks, vs = T.collect_kv(params, cfg, {"tokens": toks})
+    return [calibrate_layer(np.asarray(ks[l]), np.asarray(vs[l]), schedule[l],
+                            seed=seed + l)
+            for l in range(ks.shape[0])]
+
+
+def forward_with_schedule(params, cfg, tokens, schedule, calibs=None):
+    """Dense-family forward under a per-layer :class:`PolicySchedule`: each
+    layer's K/V pass through its own policy's SKVQ method (fp16 guard layers
+    skip quantization entirely) with that layer's position-correct window
+    mixing — the proxy-ppl evaluator for mixed schedules (DESIGN.md §8)."""
+    from repro.core.baselines import METHODS
+    from repro.core.policy import as_schedule
+
+    schedule = as_schedule(schedule, cfg.n_layers)
+
+    def pick(i):
+        pol = schedule[i]
+        return (METHODS["fp16"] if pol.is_fp16 else METHODS["skvq"]), pol
+
+    return _layer_mixed_forward(params, cfg, tokens, pick, calibs)
+
+
+def ppl_with_schedule(params, cfg, tokens, schedule, calibs=None) -> float:
+    return _ppl(forward_with_schedule(params, cfg, tokens, schedule, calibs),
+                tokens)
+
+
+def bits_breakdown(schedule, head_dim: int) -> str:
+    """Compact per-layer bits string for CSV/JSON rows, e.g.
+    ``16/2.75/2.75/16`` (the per-layer avg-bits breakdown)."""
+    return "/".join(f"{b:g}" for b in schedule.layer_avg_bits(head_dim))
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

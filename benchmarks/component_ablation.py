@@ -1,10 +1,12 @@
 """Paper Table 3: component ladder — RTN -> +window -> +clip -> +reorder ->
-+sink -> +FP8 (K2V2 g32, mirroring the paper's ablation setting)."""
++sink -> +FP8 (K2V2 g32, mirroring the paper's ablation setting), extended
+one rung past the paper with a per-layer schedule component (+fp16_guard:
+first layer uncompressed, DESIGN.md §8)."""
 from __future__ import annotations
 
 import time
 
-from repro.core.policy import QuantPolicy
+from repro.core.policy import QuantPolicy, PolicySchedule, fp16_guard
 from repro.core.baselines import METHODS, MethodCtx, _window_mix, _apply_perm
 from repro.core.quant import fake_quant
 from repro.core.reorder import invert_permutation
@@ -60,9 +62,23 @@ def run(emit):
         rows[name] = ppl
         emit(C.csv_row(f"table3_{name}", (time.time() - t0) * 1e6,
                        f"ppl={ppl:.4f}"))
+    # one rung past the paper: per-layer scheduling as a component — the
+    # full SKVQ policy everywhere except an fp16 guard first layer
+    full = QuantPolicy(bits_k=2.0, bits_v=2.0, group_size=16, window=32,
+                       n_sink=5, fp8_meta=True)
+    sched = PolicySchedule((fp16_guard(full),) + (full,) * (cfg.n_layers - 1))
+    t0 = time.time()
+    ppl = C.ppl_with_schedule(params, cfg, toks, sched, calibs=calibs)
+    rows["+fp16_guard"] = ppl
+    emit(C.csv_row(
+        "table3_+fp16_guard", (time.time() - t0) * 1e6,
+        f"ppl={ppl:.4f},avg_bits={sched.avg_bits(cfg.head_dim):.3f},"
+        f"layer_bits={C.bits_breakdown(sched, cfg.head_dim)}"))
     # directionality: window + reorder are the big wins (paper Table 3)
     emit(C.csv_row("table3_window_helps", 0.0,
                    f"holds={rows['+window'] < rows['rtn']}"))
     emit(C.csv_row("table3_reorder_helps", 0.0,
                    f"holds={rows['+reorder'] <= rows['+clip'] * 1.02}"))
+    emit(C.csv_row("table3_guard_helps", 0.0,
+                   f"holds={rows['+fp16_guard'] <= rows['+fp8'] * 1.02}"))
     return rows

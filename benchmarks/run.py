@@ -17,7 +17,8 @@ import time
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table3,table4,fig5,table6,kernel")
+                    help="comma list: table1,table3,table4,fig5,table6,"
+                         "kernel,serve,schedule")
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset (analytic table6 + shrunk kernel/"
                          "backend benches); suites honoring it get smoke=True")
@@ -27,20 +28,22 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (quality_ladder, component_ablation, group_window,
-                   needle_proxy, memory_latency, kernel_bench, serving_bench)
+                   needle_proxy, memory_latency, kernel_bench, serving_bench,
+                   schedule_quality)
     suites = {
-        "table1": quality_ladder.run,        # + Table 5
+        "table1": quality_ladder.run,        # + Table 5 + schedule sweep
         "table3": component_ablation.run,
         "table4": group_window.run,          # + Fig 4, Fig 6, Table 2
         "fig5": needle_proxy.run,            # + Fig 7
         "table6": memory_latency.run,        # + App. 9
         "kernel": kernel_bench.run,
         "serve": serving_bench.run,          # TTFT + prefill compile shapes
+        "schedule": schedule_quality.run,    # mixed-schedule quality per byte
     }
     if args.only:
         pick = set(args.only.split(","))
     elif args.smoke:
-        pick = {"table6", "kernel", "serve"}
+        pick = {"table6", "kernel", "serve", "schedule"}
     else:
         pick = set(suites)
     print("name,us_per_call,derived")

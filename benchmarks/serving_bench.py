@@ -92,6 +92,10 @@ def run(emit, smoke: bool = False):
     emit(f"serve_prefill_shape_ratio,0.0,"
          f"whole={whole['prefill_shapes']};chunked={chunked['prefill_shapes']}"
          f";bound=len(chunk_buckets)")
-    info = whole["backend_info"]
+    # per-layer tuples (layer_avg_bits/layer_cache_bytes) would leak commas
+    # into the CSV contract and balloon on deep models — the scalar schedule
+    # facts (avg_bits, cache_bytes_per_slot, n_policies) carry the row
+    info = {k: v for k, v in whole["backend_info"].items()
+            if not isinstance(v, tuple)}
     emit("serve_backend_info,0.0," +
          ";".join(f"{k}={v}" for k, v in sorted(info.items())))

@@ -1,22 +1,28 @@
 """SKVQ core: sliding-window KV-cache quantization (COLM 2024)."""
-from .policy import QuantPolicy, PAPER_POLICY, FP16_POLICY, bit_planes
+from .policy import (QuantPolicy, PolicySchedule, SchedulePreset,
+                     as_schedule, as_layer_policy, fp16_guard,
+                     PAPER_POLICY, FP16_POLICY, bit_planes)
 from .quant import (quantize_groups, dequantize_groups, fake_quant,
                     plane_layout, n_meta_groups, packed_nbytes)
 from .packing import pack, unpack, packed_width
 from .kv_cache import (init_cache, prefill, decode_append,
                        gather_attention_inputs, materialize_kv, cache_shapes,
-                       reset_slot, insert_slot, slot_lengths)
+                       reset_slot, insert_slot, slot_lengths,
+                       policy_cache_nbytes, schedule_cache_nbytes)
 from .calibrate import (Calibration, LayerCalibration, calibrate_layer,
                         calibrate_model, refine_attention_mse, ALPHA_GRID)
 from . import reorder, filters, baselines
 
 __all__ = [
-    "QuantPolicy", "PAPER_POLICY", "FP16_POLICY", "bit_planes",
+    "QuantPolicy", "PolicySchedule", "SchedulePreset", "as_schedule",
+    "as_layer_policy", "fp16_guard", "PAPER_POLICY", "FP16_POLICY",
+    "bit_planes",
     "quantize_groups", "dequantize_groups", "fake_quant", "plane_layout",
     "n_meta_groups", "packed_nbytes", "pack", "unpack", "packed_width",
     "init_cache", "prefill", "decode_append", "gather_attention_inputs",
     "materialize_kv", "cache_shapes", "reset_slot", "insert_slot",
-    "slot_lengths", "Calibration", "LayerCalibration",
+    "slot_lengths", "policy_cache_nbytes", "schedule_cache_nbytes",
+    "Calibration", "LayerCalibration",
     "calibrate_layer", "calibrate_model", "refine_attention_mse", "ALPHA_GRID",
     "reorder", "filters", "baselines",
 ]

@@ -24,13 +24,14 @@ The container is a plain dict pytree so it flows through jit/scan/pjit.
 """
 from __future__ import annotations
 
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import segments as seg
-from .policy import QuantPolicy
+from .policy import QuantPolicy, PolicySchedule, as_layer_policy, as_schedule
 from .quant import quantize_groups, dequantize_groups, plane_layout
 
 Cache = Dict[str, jnp.ndarray]
@@ -57,7 +58,10 @@ def cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
 
     The keys follow the [sinks, quantized, window] segment layout of
     DESIGN.md §1; packed-plane names come from the plane layout of §3.
+    ``policy`` is ONE layer's policy (a uniform schedule coerces; a
+    non-uniform schedule must be indexed per layer — DESIGN.md §8).
     """
+    policy = as_layer_policy(policy)
     if policy.is_fp16:  # uncompressed baseline (the paper's FP16 column)
         return {"length": ((batch,), jnp.int32),
                 "k": ((batch, max_len, n_kv, head_dim), dtype),
@@ -176,6 +180,7 @@ def prefill(k: jnp.ndarray, v: jnp.ndarray, max_len: int, policy: QuantPolicy,
     quantization and attention share one layout contract); default is the
     pure-jnp :func:`repro.core.quant.quantize_groups`.
     """
+    policy = as_layer_policy(policy)
     qf = quant_fn or quantize_groups
     b, s, h, d = k.shape
     dtype = k.dtype
@@ -233,6 +238,7 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     the primitive under chunked prefill (DESIGN.md §7), where a chunk padded
     to its compile bucket must append only its real tokens.
     """
+    policy = as_layer_policy(policy)
     qf = quant_fn or quantize_groups
     b, _, h, d = k_new.shape
     w, ns = policy.window, policy.n_sink
@@ -349,6 +355,7 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
     ``length``.  Ordering is [sinks, quantized, window].  The Pallas decode
     kernel consumes the packed segments directly instead.
     """
+    policy = as_layer_policy(policy)
     w, ns = policy.window, policy.n_sink
     t_total = slot_lengths(cache)  # (B,) tokens currently stored per slot
     b = t_total.shape[0]
@@ -381,6 +388,31 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
 
     return (jnp.concatenate(ks, axis=1), jnp.concatenate(vs, axis=1),
             jnp.concatenate(pos, axis=1), jnp.concatenate(val, axis=1))
+
+
+# -------------------------------------------------------- byte accounting
+
+def policy_cache_nbytes(max_len: int, n_kv: int, head_dim: int,
+                        policy: QuantPolicy, dtype=jnp.bfloat16) -> int:
+    """Exact bytes of one layer's cache at capacity ``max_len`` (batch 1) —
+    packed planes + scale/zero metadata + fp sink/window buffers, straight
+    from :func:`cache_shapes` so the accounting can never drift from the
+    allocation (DESIGN.md §8)."""
+    shapes = cache_shapes(1, max_len, n_kv, head_dim, policy, dtype)
+    return sum(math.prod(s) * jnp.dtype(d).itemsize
+               for name, (s, d) in shapes.items() if name != "length")
+
+
+def schedule_cache_nbytes(schedule: "PolicySchedule | QuantPolicy",
+                          n_layers: int, max_len: int, n_kv: int,
+                          head_dim: int, dtype=jnp.bfloat16):
+    """Per-layer cache bytes for a whole schedule: tuple of
+    :func:`policy_cache_nbytes`, one entry per layer (DESIGN.md §8
+    accounting; surfaced by ``Engine.backend_info`` and the serve CLI)."""
+    sched = as_schedule(schedule, n_layers)
+    per_policy = {p: policy_cache_nbytes(max_len, n_kv, head_dim, p, dtype)
+                  for p in sched.distinct()}
+    return tuple(per_policy[p] for p in sched.layers)
 
 
 def materialize_kv(cache: Cache, head_dim: int, policy: QuantPolicy,

@@ -1,9 +1,18 @@
-"""Quantization policy — the single config object threaded through the system.
+"""Quantization policy — the config currency threaded through the system.
 
-A :class:`QuantPolicy` describes *how* the KV cache is quantized; it is
-hashable/static so it can be closed over by jit'd step functions.  The paper's
-headline setting is ``QuantPolicy(bits_k=2, bits_v=1.5, group_size=128,
-window=128, n_sink=5, fp8_meta=True)``.
+Two levels (DESIGN.md §8):
+
+* :class:`QuantPolicy` describes *how one layer's* KV cache is quantized; it
+  is hashable/static so it can be closed over by jit'd step functions.  The
+  paper's headline setting is ``QuantPolicy(bits_k=2, bits_v=1.5,
+  group_size=128, window=128, n_sink=5, fp8_meta=True)``.
+* :class:`PolicySchedule` is the layer-indexed container (``schedule[i] ->
+  QuantPolicy``) that the whole stack actually runs on — layer sensitivity is
+  non-uniform, so fp16 guard layers, mixed-precision ladders and per-layer
+  windows are all expressed as schedules.  A bare :class:`QuantPolicy`
+  coerces to a uniform schedule anywhere a schedule is expected
+  (:func:`as_schedule`), and a uniform schedule is bit-identical to the bare
+  policy it wraps.
 
 Baseline methods from the paper's comparison tables are expressed as policies
 too (see :mod:`repro.core.baselines`).
@@ -11,7 +20,7 @@ too (see :mod:`repro.core.baselines`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Iterator, Optional, Sequence, Tuple, Union
 
 _ALLOWED_BITS = (1.0, 1.5, 2.0, 3.0, 4.0, 8.0, 16.0)
 
@@ -34,7 +43,7 @@ def bit_planes(bits: float) -> Tuple[Tuple[int, float], ...]:
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
-    """How to quantize the KV cache."""
+    """How to quantize ONE layer's KV cache (DESIGN.md §1–§3)."""
 
     bits_k: float = 2.0
     bits_v: float = 2.0
@@ -55,6 +64,21 @@ class QuantPolicy:
             raise ValueError(f"bits must be in {_ALLOWED_BITS}")
         if self.group_size <= 0:
             raise ValueError("group_size must be positive")
+        if self.reorder and (self.smooth or self.per_channel_key):
+            bad = "smooth" if self.smooth else "per_channel_key"
+            raise ValueError(
+                f"reorder=True is mutually exclusive with the baseline "
+                f"switch {bad}=True: the calibrated channel permutation and "
+                f"the {bad} baseline transform the same channel axis — pick "
+                f"one (baselines set reorder=False)")
+        if self.bits_k >= 16 and self.bits_v >= 16 and \
+                (self.window > 0 or self.n_sink > 0):
+            raise ValueError(
+                f"window ({self.window}) / n_sink ({self.n_sink}) are "
+                f"meaningless on an fp16 policy: every token is already "
+                f"stored in full precision, so the sliding window and sink "
+                f"buffer would silently duplicate storage — use window=0, "
+                f"n_sink=0 (e.g. FP16_POLICY)")
         object.__setattr__(self, "meta_dtype_bits", 8 if self.fp8_meta else 16)
 
     # -- derived --------------------------------------------------------
@@ -67,7 +91,12 @@ class QuantPolicy:
         return head_dim // self.group_size
 
     def avg_bits(self, head_dim: int) -> float:
-        """Average bits/element incl. metadata — the paper's `avg-bits` metric."""
+        """Average bits/element incl. metadata — the paper's `avg-bits` metric.
+
+        fp16 policies store no scale/zero metadata, so they count exactly 16.
+        """
+        if self.is_fp16:
+            return 16.0
         g = min(self.group_size, head_dim)
         payload = (self.bits_k + self.bits_v) / 2
         meta = 2 * self.meta_dtype_bits / g  # scale + zero per group
@@ -77,9 +106,301 @@ class QuantPolicy:
     def is_fp16(self) -> bool:
         return self.bits_k >= 16 and self.bits_v >= 16
 
+    def without_window(self) -> "QuantPolicy":
+        """This policy with the fp window + sink buffer removed.
+
+        Used where window semantics don't apply — e.g. cross-attention caches
+        (quantize everything at prefill; no decode-time eviction) and the
+        benchmark method contexts — so callers never hand-build
+        ``dataclasses.replace`` variants (DESIGN.md §8).
+        """
+        if self.window == 0 and self.n_sink == 0:
+            return self
+        return dataclasses.replace(self, window=0, n_sink=0)
+
 
 FP16_POLICY = QuantPolicy(bits_k=16.0, bits_v=16.0, clip=False, reorder=False,
                           window=0, n_sink=0)
 # The paper's headline configuration (Sec. 4.2, Fig. 4): K2 V1.5, g128, w128.
 PAPER_POLICY = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=128, window=128,
                            n_sink=5, fp8_meta=True)
+
+
+def fp16_guard(policy: QuantPolicy) -> QuantPolicy:
+    """The fp16 policy used for guard layers: same metadata knobs as the
+    base policy where they matter, but nothing quantized and no window."""
+    return dataclasses.replace(policy, bits_k=16.0, bits_v=16.0, window=0,
+                               n_sink=0, clip=False, reorder=False,
+                               smooth=False, per_channel_key=False)
+
+
+# ============================================================ PolicySchedule
+
+@dataclasses.dataclass(frozen=True)
+class PolicySchedule:
+    """Layer-indexed policy container — the canonical currency of the stack
+    (DESIGN.md §8).
+
+    ``schedule[i]`` is layer ``i``'s :class:`QuantPolicy`.  The container is
+    a frozen dataclass over a tuple, so it is hashable and can be closed
+    over by (or passed static to) jit'd step functions exactly like a bare
+    policy.  Consumers partition layers into contiguous equal-policy
+    **bands** (:meth:`bands`) — within a band every layer shares one cache
+    layout and one compiled scan body, so a uniform schedule lowers to
+    exactly the single-policy program.
+
+    Build one with the presets (:meth:`uniform`, :meth:`first_last_fp16`,
+    :meth:`bits_ladder`, :meth:`for_arch`) or from an explicit per-layer
+    tuple.  Anywhere the stack expects a policy, a bare :class:`QuantPolicy`
+    coerces via :func:`as_schedule`.
+    """
+
+    layers: Tuple[QuantPolicy, ...]
+
+    def __post_init__(self):
+        layers = tuple(self.layers)
+        if not layers:
+            raise ValueError("PolicySchedule needs at least one layer")
+        for p in layers:
+            if not isinstance(p, QuantPolicy):
+                raise TypeError(f"PolicySchedule entries must be QuantPolicy, "
+                                f"got {type(p).__name__}")
+        object.__setattr__(self, "layers", layers)
+
+    # ------------------------------------------------------------ container
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __getitem__(self, i: int) -> QuantPolicy:
+        return self.layers[i]
+
+    def __iter__(self) -> Iterator[QuantPolicy]:
+        return iter(self.layers)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(p == self.layers[0] for p in self.layers)
+
+    def distinct(self) -> Tuple[QuantPolicy, ...]:
+        """Distinct policies in first-appearance order."""
+        out = []
+        for p in self.layers:
+            if p not in out:
+                out.append(p)
+        return tuple(out)
+
+    def bands(self, start: int = 0, stop: Optional[int] = None
+              ) -> Tuple[Tuple[int, int, QuantPolicy], ...]:
+        """Contiguous equal-policy runs over ``[start, stop)``.
+
+        Returns ``((band_start, band_stop, policy), ...)`` — the unit the
+        transformer scans over (one ``lax.scan`` + one cache stack per
+        band; DESIGN.md §8).  A uniform schedule yields exactly one band.
+        """
+        stop = len(self.layers) if stop is None else stop
+        if not (0 <= start < stop <= len(self.layers)):
+            raise ValueError(f"band range [{start}, {stop}) out of bounds "
+                             f"for {len(self.layers)} layers")
+        out = []
+        b0 = start
+        for i in range(start + 1, stop + 1):
+            if i == stop or self.layers[i] != self.layers[b0]:
+                out.append((b0, i, self.layers[b0]))
+                b0 = i
+        return tuple(out)
+
+    # ----------------------------------------------------------- accounting
+    def avg_bits(self, head_dim: int) -> float:
+        """Layer-weighted average bits/element (the paper's avg-bits metric,
+        extended across the schedule — fp16 guard layers count 16)."""
+        return sum(p.avg_bits(head_dim) for p in self.layers) / len(self.layers)
+
+    def layer_avg_bits(self, head_dim: int) -> Tuple[float, ...]:
+        """Per-layer avg-bits breakdown (surfaced via Engine.backend_info)."""
+        return tuple(p.avg_bits(head_dim) for p in self.layers)
+
+    def layer_kv_bytes(self, head_dim: int, n_kv: int = 1) -> Tuple[int, ...]:
+        """Per-layer packed KV bytes per token (both K and V, all heads) in
+        the quantized steady state; fp16 layers store raw 2-byte K/V."""
+        from .quant import packed_nbytes  # local: quant imports policy
+        out = []
+        for p in self.layers:
+            if p.is_fp16:
+                out.append(2 * 2 * head_dim * n_kv)
+                continue
+            g = min(p.group_size, head_dim)
+            out.append(n_kv * (packed_nbytes(head_dim, p.bits_k, g,
+                                             p.meta_dtype_bits)
+                               + packed_nbytes(head_dim, p.bits_v, g,
+                                               p.meta_dtype_bits)))
+        return tuple(out)
+
+    def kv_bytes_per_token(self, head_dim: int, n_kv: int = 1) -> int:
+        """Total packed KV bytes per token summed over all layers."""
+        return sum(self.layer_kv_bytes(head_dim, n_kv))
+
+    def layer_table(self, head_dim: int, n_kv: int = 1) -> Tuple[dict, ...]:
+        """Per-layer breakdown rows (bits, window, avg-bits, packed
+        bytes/token) for tooling; the serving CLI prints the full
+        cache-allocation view instead (``kv_cache.schedule_cache_nbytes``,
+        which also counts the fp window/sink buffers)."""
+        nbytes = self.layer_kv_bytes(head_dim, n_kv)
+        return tuple(
+            {"layer": i, "bits_k": p.bits_k, "bits_v": p.bits_v,
+             "group": min(p.group_size, head_dim), "window": p.window,
+             "n_sink": p.n_sink, "avg_bits": p.avg_bits(head_dim),
+             "kv_bytes_per_token": nbytes[i]}
+            for i, p in enumerate(self.layers))
+
+    # -------------------------------------------------------------- presets
+    @classmethod
+    def uniform(cls, policy: QuantPolicy, n_layers: Optional[int] = None):
+        """Every layer runs ``policy`` — the coercion target of a bare
+        :class:`QuantPolicy` (bit-identical to it end-to-end)."""
+        if n_layers is None:
+            return SchedulePreset("uniform", policy)
+        return cls((policy,) * n_layers)
+
+    @classmethod
+    def first_last_fp16(cls, policy: QuantPolicy, n_guard: int = 1,
+                        n_layers: Optional[int] = None):
+        """fp16 guard layers: the first and last ``n_guard`` layers stay
+        uncompressed (the most quantization-sensitive ends of the stack),
+        everything between runs ``policy`` — the KVQuant-style
+        sensitivity-aware preset.
+
+        With ``n_layers`` omitted, returns a :class:`SchedulePreset` that the
+        consumer (Engine / transformer) materializes against its own layer
+        count (DESIGN.md §8 coercion rule).
+        """
+        if n_guard < 0:
+            raise ValueError(f"n_guard must be >= 0, got {n_guard}")
+        if n_layers is None:
+            return SchedulePreset("first_last_fp16", policy, (n_guard,))
+        if n_guard > 0 and 2 * n_guard >= n_layers:
+            raise ValueError(
+                f"first_last_fp16 with n_guard={n_guard} on {n_layers} "
+                f"layers leaves NO quantized layers — the schedule would "
+                f"silently serve the fp16 baseline; lower n_guard (need "
+                f"2 * n_guard < n_layers)")
+        guard = fp16_guard(policy)
+        return cls(tuple(
+            guard if (i < n_guard or i >= n_layers - n_guard) else policy
+            for i in range(n_layers)))
+
+    @classmethod
+    def bits_ladder(cls, policy: QuantPolicy,
+                    ladder: Sequence[Tuple[float, float]] = ((4.0, 4.0),
+                                                            (2.0, 2.0),
+                                                            (2.0, 1.5)),
+                    n_layers: Optional[int] = None):
+        """Mixed-precision ladder: layers split into ``len(ladder)`` even
+        contiguous groups; group ``j`` runs ``policy`` at
+        ``(bits_k, bits_v) = ladder[j]`` — early layers (whose errors
+        compound through the stack) get the higher widths by default."""
+        ladder = tuple((float(bk_), float(bv)) for bk_, bv in ladder)
+        if not ladder:
+            raise ValueError("bits_ladder needs at least one (bits_k, bits_v)")
+        if n_layers is None:
+            return SchedulePreset("bits_ladder", policy, (ladder,))
+        m = len(ladder)
+        out = []
+        for i in range(n_layers):
+            j = min(i * m // n_layers, m - 1)
+            bk_, bv = ladder[j]
+            if bk_ >= 16 and bv >= 16:
+                out.append(fp16_guard(policy))
+            else:
+                out.append(dataclasses.replace(policy, bits_k=bk_, bits_v=bv))
+        return cls(tuple(out))
+
+    @classmethod
+    def for_arch(cls, policy: QuantPolicy, cfg) -> "PolicySchedule":
+        """Arch-aware windows: layers the :class:`ArchConfig` marks local
+        (``cfg.layer_is_local``) cap their fp window at the attention window
+        ``cfg.local_window`` — an fp token the layer can never attend is
+        pure waste."""
+        out = []
+        for i in range(cfg.n_layers):
+            p = policy
+            if (not policy.is_fp16 and cfg.local_window > 0
+                    and cfg.layer_is_local(i)
+                    and policy.window > cfg.local_window):
+                p = dataclasses.replace(policy, window=cfg.local_window)
+            out.append(p)
+        return cls(tuple(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePreset:
+    """A named schedule awaiting its layer count (DESIGN.md §8).
+
+    Presets like ``PolicySchedule.first_last_fp16(PAPER_POLICY, 2)`` don't
+    know the model depth; :func:`as_schedule` materializes them against the
+    consumer's ``cfg.n_layers``.  Hashable, so it rides anywhere a policy
+    does."""
+
+    kind: str
+    policy: QuantPolicy
+    args: Tuple = ()
+
+    def materialize(self, n_layers: int) -> PolicySchedule:
+        if self.kind == "uniform":
+            return PolicySchedule.uniform(self.policy, n_layers)
+        if self.kind == "first_last_fp16":
+            return PolicySchedule.first_last_fp16(self.policy, self.args[0],
+                                                  n_layers)
+        if self.kind == "bits_ladder":
+            return PolicySchedule.bits_ladder(self.policy, self.args[0],
+                                              n_layers)
+        raise ValueError(f"unknown schedule preset {self.kind!r}")
+
+
+PolicyLike = Union[QuantPolicy, PolicySchedule, SchedulePreset]
+
+
+def as_schedule(policy, n_layers: int) -> PolicySchedule:
+    """Coerce policy | schedule | preset | per-layer sequence to a
+    :class:`PolicySchedule` of exactly ``n_layers`` (DESIGN.md §8).
+
+    The coercion rule of the API: a bare :class:`QuantPolicy` anywhere means
+    ``PolicySchedule.uniform(policy, n_layers)``; a :class:`SchedulePreset`
+    materializes; an existing schedule must already match ``n_layers``.
+    """
+    if isinstance(policy, PolicySchedule):
+        if len(policy) != n_layers:
+            raise ValueError(f"PolicySchedule covers {len(policy)} layers "
+                             f"but the model has {n_layers}")
+        return policy
+    if isinstance(policy, SchedulePreset):
+        return policy.materialize(n_layers)
+    if isinstance(policy, QuantPolicy):
+        return PolicySchedule.uniform(policy, n_layers)
+    if isinstance(policy, (tuple, list)):
+        return as_schedule(PolicySchedule(tuple(policy)), n_layers)
+    raise TypeError(f"expected QuantPolicy | PolicySchedule | SchedulePreset, "
+                    f"got {type(policy).__name__}")
+
+
+def as_layer_policy(policy) -> QuantPolicy:
+    """Coerce to a single-layer :class:`QuantPolicy`.
+
+    Per-layer consumers (cache container, kernels, backends) take exactly
+    one policy; a uniform schedule collapses to its policy, a non-uniform
+    one must be indexed by the caller (``schedule[i]``) first.
+    """
+    if isinstance(policy, QuantPolicy):
+        return policy
+    if isinstance(policy, PolicySchedule):
+        if policy.is_uniform:
+            return policy.layers[0]
+        raise TypeError(
+            "this consumer is per-layer: index the non-uniform schedule "
+            "(schedule[i]) or pass one QuantPolicy; got a schedule with "
+            f"{len(policy.distinct())} distinct policies")
+    raise TypeError(f"expected QuantPolicy | uniform PolicySchedule, "
+                    f"got {type(policy).__name__}")

@@ -24,7 +24,8 @@ import numpy as np
 import jax
 
 from .. import configs
-from ..core.policy import QuantPolicy
+from ..core.policy import QuantPolicy, PolicySchedule, as_schedule
+from ..core.kv_cache import schedule_cache_nbytes
 from ..core.quant import packed_nbytes
 from ..data import SyntheticCorpus
 from ..models import transformer as T
@@ -33,6 +34,24 @@ from ..serving import Engine, Request
 
 def _pct(xs, q):
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+def _print_schedule_table(schedule, cfg, max_len, dtype):
+    """Per-layer avg-bits + KV-bytes table (DESIGN.md §8 accounting).
+
+    Contiguous equal-policy layer bands print as one row; cache KB is the
+    exact per-LAYER allocation at ``max_len`` capacity in the served cache
+    dtype (the total line sums every layer)."""
+    nbytes = schedule_cache_nbytes(schedule, cfg.n_layers, max_len,
+                                   cfg.n_kv_heads, cfg.head_dim, dtype=dtype)
+    print("  layers      bits_k  bits_v  window  sinks  avg_bits  cache_KB/layer")
+    for bs, be, p in schedule.bands():
+        span = f"{bs}" if be == bs + 1 else f"{bs}-{be - 1}"
+        print(f"  {span:<10}  {p.bits_k:<6g}  {p.bits_v:<6g}  {p.window:<6d}"
+              f"  {p.n_sink:<5d}  {p.avg_bits(cfg.head_dim):<8.3f}"
+              f"  {nbytes[bs] / 1024:.1f}")
+    print(f"  schedule avg_bits={schedule.avg_bits(cfg.head_dim):.3f} "
+          f"total cache KB/slot={sum(nbytes) / 1024:.1f}")
 
 
 def main(argv=None):
@@ -63,6 +82,15 @@ def main(argv=None):
     ap.add_argument("--group-size", type=int, default=64)
     ap.add_argument("--window", type=int, default=32)
     ap.add_argument("--sinks", type=int, default=5)
+    ap.add_argument("--policy-schedule", default="uniform",
+                    choices=("uniform", "first_last_fp16", "ladder"),
+                    help="per-layer policy schedule preset (DESIGN.md §8): "
+                         "uniform = every layer runs the --bits-* policy; "
+                         "first_last_fp16 = --guard-layers fp16 guard layers "
+                         "at each end; ladder = 4/4 -> base -> base bits "
+                         "over even layer thirds")
+    ap.add_argument("--guard-layers", type=int, default=2,
+                    help="fp16 guard layers per end (first_last_fp16 preset)")
     ap.add_argument("--backend", default=None,
                     help="decode backend: reference | pallas (default: host)")
     ap.add_argument("--steps-per-sync", type=int, default=8,
@@ -75,9 +103,28 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    # the fp16 baseline stores every token raw: window/sink buffers would
+    # duplicate storage, so QuantPolicy rejects them — drop the CLI defaults
+    is_fp16 = args.bits_k >= 16 and args.bits_v >= 16
     policy = QuantPolicy(bits_k=args.bits_k, bits_v=args.bits_v,
                          group_size=min(args.group_size, cfg.head_dim),
-                         window=args.window, n_sink=args.sinks)
+                         window=0 if is_fp16 else args.window,
+                         n_sink=0 if is_fp16 else args.sinks)
+    if args.policy_schedule == "first_last_fp16":
+        # at least one interior layer must stay quantized (the preset
+        # refuses all-fp16 degeneration) — clamp for shallow smoke archs
+        guard = min(args.guard_layers, max((cfg.n_layers - 1) // 2, 0))
+        if guard != args.guard_layers:
+            print(f"note: --guard-layers {args.guard_layers} clamped to "
+                  f"{guard} ({cfg.n_layers}-layer arch needs 2*guard < "
+                  f"layers)")
+        schedule = PolicySchedule.first_last_fp16(policy, guard, cfg.n_layers)
+    elif args.policy_schedule == "ladder":
+        schedule = PolicySchedule.bits_ladder(
+            policy, ((4.0, 4.0), (args.bits_k, args.bits_v),
+                     (args.bits_k, args.bits_v)), cfg.n_layers)
+    else:
+        schedule = as_schedule(policy, cfg.n_layers)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
     n_req = args.requests or 2 * args.batch
@@ -100,8 +147,9 @@ def main(argv=None):
 
     max_len = (args.prompt_len + args.prompt_jitter + args.new_tokens + jit
                + args.steps_per_sync)
-    eng = Engine(params, cfg, policy, batch_slots=args.batch, max_len=max_len,
-                 backend=args.backend, steps_per_sync=args.steps_per_sync,
+    eng = Engine(params, cfg, schedule, batch_slots=args.batch,
+                 max_len=max_len, backend=args.backend,
+                 steps_per_sync=args.steps_per_sync,
                  prefill_chunk=args.prefill_chunk or None)
     t0 = time.time()
     handles = [eng.submit(r) for r in reqs]
@@ -118,9 +166,11 @@ def main(argv=None):
                       policy.meta_dtype_bits)
     print(f"arch={cfg.name} policy=K{args.bits_k}V{args.bits_v} "
           f"g{policy.group_size} w{policy.window} slots={args.batch} "
-          f"requests={n_req}")
-    print("backend:", " ".join(f"{k}={v}" for k, v in
-                               sorted(eng.backend_info.items())))
+          f"requests={n_req} schedule={args.policy_schedule}")
+    _print_schedule_table(schedule, cfg, max_len, params["embed"].dtype)
+    info = {k: v for k, v in eng.backend_info.items()
+            if k not in ("layer_avg_bits", "layer_cache_bytes")}
+    print("backend:", " ".join(f"{k}={v}" for k, v in sorted(info.items())))
     print(f"served {n_req} requests / {total_toks} tokens in {dt:.2f}s "
           f"({total_toks / dt:.1f} tok/s aggregate)")
     print(f"latency ms/request: p50={_pct(lat, 50):.0f} "

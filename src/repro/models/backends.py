@@ -33,12 +33,18 @@ import jax
 import jax.numpy as jnp
 
 from .config import ArchConfig
-from ..core.policy import QuantPolicy
+from ..core.policy import QuantPolicy, as_layer_policy
 
 
 @runtime_checkable
 class DecodeBackend(Protocol):
-    """One decode-attention strategy over the SKVQ cache (DESIGN.md §4)."""
+    """One decode-attention strategy over the SKVQ cache (DESIGN.md §4).
+
+    Backends are per-layer consumers: ``policy`` is always the *layer's*
+    :class:`QuantPolicy` — under a :class:`~repro.core.policy.PolicySchedule`
+    the transformer resolves ``schedule[i]`` before calling in, so both
+    backends stay bit-identical per layer whatever the schedule mixes
+    (DESIGN.md §8)."""
 
     name: str
 
@@ -53,7 +59,8 @@ class DecodeBackend(Protocol):
         ...
 
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
-        """Quantizer for ``kv_cache.prefill``/``decode_append`` (None = jnp)."""
+        """Quantizer for ``kv_cache.prefill``/``decode_append`` (None = jnp)
+        matching this layer's packed layout."""
         ...
 
     def info(self) -> dict:
@@ -121,8 +128,10 @@ class ReferenceBackend:
                local_slice: int = 0, packed_override=None, extra_kv=None,
                q_pos=None, prune_blocks: Optional[bool] = None):
         """One query token against the SKVQ cache via the reference jnp
-        path (``attention.decode_attention_skvq``; DESIGN.md §4)."""
+        path (``attention.decode_attention_skvq``; DESIGN.md §4).
+        ``policy`` is this layer's policy (uniform schedules coerce)."""
         from .attention import decode_attention_skvq
+        policy = as_layer_policy(policy)
         if prune_blocks is None:
             prune_blocks = self.prune_blocks
         return decode_attention_skvq(
@@ -134,6 +143,7 @@ class ReferenceBackend:
         """None — kv_cache defaults to the jnp ``quantize_groups``
         (DESIGN.md §2); used by prefill, decode_append, and the chunked
         prefill of §7 alike."""
+        as_layer_policy(policy)
         return None
 
     def info(self) -> dict:
@@ -171,9 +181,11 @@ class PallasBackend:
                local_slice: int = 0, packed_override=None, extra_kv=None,
                q_pos=None, prune_blocks: Optional[bool] = None):
         """One query token against the SKVQ cache via the fused Pallas
-        kernel (``kernels.ops.pallas_decode_attention``; DESIGN.md §4)."""
+        kernel (``kernels.ops.pallas_decode_attention``; DESIGN.md §4).
+        ``policy`` is this layer's policy (uniform schedules coerce)."""
         from ..kernels.ops import pallas_decode_attention
         from .attention import _scale
+        policy = as_layer_policy(policy)
         scale = _scale(cfg)
         if prune_blocks is None:
             prune_blocks = self.prune_blocks
@@ -187,6 +199,7 @@ class PallasBackend:
     def quant_fn(self, policy: QuantPolicy) -> Optional[Callable]:
         """Fused quantize+pack kernel when ``kernel_quant`` is set
         (DESIGN.md §3 plane layout; bit-exact vs the jnp quantizer)."""
+        policy = as_layer_policy(policy)
         if not self.kernel_quant or policy.is_fp16:
             return None
         from ..kernels.ops import make_kernel_quant_fn

@@ -33,7 +33,8 @@ from .attention import full_attention, prefill_block_attention
 from . import moe as moe_lib
 from . import ssm as ssm_lib
 from . import rwkv6 as rwkv_lib
-from ..core.policy import QuantPolicy
+from ..core.policy import (QuantPolicy, PolicySchedule, as_schedule,
+                           as_layer_policy)
 from ..core import kv_cache as kvc
 from ..core import segments as seg
 from ..core.quant import n_meta_groups
@@ -186,6 +187,66 @@ def layer_flags(cfg: ArchConfig, start: Optional[int] = None,
 
 def _tree_slice(tree, start, stop):
     return jax.tree.map(lambda x: x[start:stop], tree)
+
+
+# ========================================================= schedule banding
+# A PolicySchedule partitions each layer group into contiguous equal-policy
+# BANDS (DESIGN.md §8).  One band = one cache layout = one scanned body, so a
+# uniform schedule lowers to exactly the single-policy program (bit-identical
+# caches/logits), while mixed schedules run one scan per band and key the
+# group's caches by band.
+
+def _band_key(start: int) -> str:
+    """Cache-group key for the band starting at absolute layer ``start``
+    (zero-padded so lexicographic order == layer order)."""
+    return f"L{start:03d}"
+
+
+def _first_stack(group):
+    """A cache group is either one stacked cache dict (single band) or a
+    band-keyed dict of stacked caches; return the first stack."""
+    return group if "length" in group else group[min(group)]
+
+
+def _band_cache(group, bands, start):
+    """The cache stack for the band at ``start`` within its group."""
+    return group if len(bands) == 1 else group[_band_key(start)]
+
+
+def _band_out(outs, bands, g0):
+    """Reassemble a group's per-band outputs: single band keeps the legacy
+    flat structure, multi-band groups are band-keyed dicts."""
+    return outs[_band_key(g0)] if len(bands) == 1 else outs
+
+
+def _band_calib(calib, cfg, pol, start, stop):
+    """Per-band calibration table: the caller's stacked ``(L, ...)`` arrays
+    sliced to ``[start, stop)``, or a fresh identity table built with the
+    band's policy (meta-group counts differ across policies, so identity
+    tables cannot be built once and sliced — DESIGN.md §8)."""
+    if calib is None:
+        return identity_calib(cfg, pol, n_layers=stop - start)
+    return _tree_slice(calib, start, stop)
+
+
+def _check_calib_schedule(calib, sched: PolicySchedule, cfg: ArchConfig):
+    """A single stacked calibration table can only serve a schedule whose
+    QUANTIZED layers share one quantization layout — alpha arrays are
+    plane-laid-out and grid-searched per (bits, group, meta) and carry no
+    layout metadata, so slicing one table across mixed-bits bands would
+    silently misalign clip factors (DESIGN.md §8).  fp16 guard layers are
+    exempt (their alphas are never read)."""
+    if calib is None:
+        return
+    layouts = {(p.bits_k, p.bits_v, min(p.group_size, cfg.head_dim),
+                p.fp8_meta) for p in sched if not p.is_fp16}
+    if len(layouts) > 1:
+        raise ValueError(
+            f"a stacked calibration table cannot serve a schedule mixing "
+            f"{len(layouts)} quantization layouts (distinct bits/group/meta "
+            f"among quantized layers) — per-layer alpha plane layouts "
+            f"differ; calibrate each layer against its own policy "
+            f"(cf. benchmarks/common.calibrate_schedule) or pass calib=None")
 
 
 def _apply_perm(x, perm):
@@ -413,7 +474,12 @@ def collect_kv(params: Params, cfg: ArchConfig, batch: Batch,
 
 def identity_calib(cfg: ArchConfig, policy: QuantPolicy,
                    n_layers: Optional[int] = None) -> Dict[str, jnp.ndarray]:
-    """Stacked no-op calibration (dry-run / uncalibrated serving)."""
+    """Stacked no-op calibration (dry-run / uncalibrated serving).
+
+    ``policy`` is one layer's policy (uniform schedules coerce) — alpha
+    group counts are policy-dependent, so non-uniform schedules build one
+    table per band (``_band_calib``)."""
+    policy = as_layer_policy(policy)
     n = cfg.n_layers if n_layers is None else n_layers
     hd, h = cfg.head_dim, cfg.n_kv_heads
     gs = min(policy.group_size, hd)
@@ -439,11 +505,18 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
     the last ``window`` tokens. Returns (last-token logits, caches dict with
     a "scan" group and, for first_dense archs, a "dense" group).
 
+    ``policy`` may be a :class:`QuantPolicy` (uniform) or a
+    :class:`PolicySchedule` / preset — layers are scanned in contiguous
+    equal-policy bands, each with its own cache layout, calibration slice
+    and quantizer; a multi-band group's caches are band-keyed (DESIGN.md §8).
+
     ``backend`` (name | DecodeBackend | None): supplies the cache quantizer so
     the built cache and the decode attention share one layout contract; the
     attention itself runs in full precision here regardless (paper workflow).
     """
-    quant_fn = bk.resolve_backend(backend).quant_fn(policy)
+    sched = as_schedule(policy, cfg.n_layers)
+    _check_calib_schedule(calib, sched, cfg)
+    backend_obj = bk.resolve_backend(backend)
     params = _cast_params(params, dtype)
     x = _embed_in(params, cfg, batch)
     if dtype is not None:
@@ -465,60 +538,70 @@ def prefill_model(params: Params, cfg: ArchConfig, batch: Batch,
         x = L.norm(x, params["final_norm"], cfg)
         return L.unembed(x[:, -1:], params, cfg), {"scan": caches}
 
-    if calib is None:
-        calib = identity_calib(cfg, policy)
     rope = _rope_tables(cfg, _positions(cfg, batch, s))
     enc_out = _encode(params, cfg, batch, dtype) if cfg.family == "encdec" else None
 
-    def body(h, xs):
-        p, fl, cl = xs
-        hn = L.norm(h, p["norm1"], cfg)
-        q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
-        # fixed key-block reduction: bit-identical to the chunked-prefill
-        # workspace attention regardless of buffer capacity (DESIGN.md §7)
-        attn = prefill_block_attention(q, k, v, cfg, window=fl["window"])
-        attn = _attn_out(attn, p["attn"])
-        cache_extra = {}
-        if "ssm" in p:
-            sout, ss = _ssm_with_state(hn, p["ssm"], cfg)
-            attn = 0.5 * (L.rms_norm(attn, p["norm_attn_out"]["w"], cfg.norm_eps)
-                          + L.rms_norm(sout, p["norm_ssm_out"]["w"], cfg.norm_eps))
-            cache_extra = {f"ssm_{k2}": v2 for k2, v2 in ss.items()}
-        h = h + attn
-        if enc_out is not None and "xattn" in p:
-            hx = L.norm(h, p["norm_x"], cfg)
-            qx, kx, vx = _cross_qkv(hx, enc_out, p["xattn"], cfg)
-            xo = full_attention(qx, kx, vx, cfg, bidirectional=True)
-            h = h + _attn_out(xo, p["xattn"])
-            xpol = dataclasses.replace(policy, window=0, n_sink=0)
-            kxp = _apply_perm(kx, cl["perm_k"])
-            vxp = _apply_perm(vx, cl["perm_v"])
-            xc = kvc.prefill(kxp.astype(cache_dtype), vxp.astype(cache_dtype),
-                             kx.shape[1], xpol, cl["alpha_k"], cl["alpha_v"],
-                             quant_fn=quant_fn)
-            cache_extra.update({f"x_{k2}": v2 for k2, v2 in xc.items()})
-        h2 = L.norm(h, p["norm2"], cfg)
-        f, _ = _ffn(h2, p, cfg)
-        h = h + f
-        # --- SKVQ cache build (quantize everything but window + sinks) ---
-        kp = _apply_perm(k, cl["perm_k"])
-        vp = _apply_perm(v, cl["perm_v"])
-        cache = kvc.prefill(kp.astype(cache_dtype), vp.astype(cache_dtype),
-                            ml, policy, cl["alpha_k"], cl["alpha_v"],
-                            quant_fn=quant_fn)
-        cache.update(cache_extra)
-        return h, cache
+    def make_body(pol: QuantPolicy, quant_fn):
+        xpol = pol.without_window()  # cross-attn caches: no decode eviction
+
+        def body(h, xs):
+            p, fl, cl = xs
+            hn = L.norm(h, p["norm1"], cfg)
+            q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
+            # fixed key-block reduction: bit-identical to the chunked-prefill
+            # workspace attention regardless of buffer capacity (DESIGN.md §7)
+            attn = prefill_block_attention(q, k, v, cfg, window=fl["window"])
+            attn = _attn_out(attn, p["attn"])
+            cache_extra = {}
+            if "ssm" in p:
+                sout, ss = _ssm_with_state(hn, p["ssm"], cfg)
+                attn = 0.5 * (L.rms_norm(attn, p["norm_attn_out"]["w"], cfg.norm_eps)
+                              + L.rms_norm(sout, p["norm_ssm_out"]["w"], cfg.norm_eps))
+                cache_extra = {f"ssm_{k2}": v2 for k2, v2 in ss.items()}
+            h = h + attn
+            if enc_out is not None and "xattn" in p:
+                hx = L.norm(h, p["norm_x"], cfg)
+                qx, kx, vx = _cross_qkv(hx, enc_out, p["xattn"], cfg)
+                xo = full_attention(qx, kx, vx, cfg, bidirectional=True)
+                h = h + _attn_out(xo, p["xattn"])
+                kxp = _apply_perm(kx, cl["perm_k"])
+                vxp = _apply_perm(vx, cl["perm_v"])
+                xc = kvc.prefill(kxp.astype(cache_dtype), vxp.astype(cache_dtype),
+                                 kx.shape[1], xpol, cl["alpha_k"], cl["alpha_v"],
+                                 quant_fn=quant_fn)
+                cache_extra.update({f"x_{k2}": v2 for k2, v2 in xc.items()})
+            h2 = L.norm(h, p["norm2"], cfg)
+            f, _ = _ffn(h2, p, cfg)
+            h = h + f
+            # --- SKVQ cache build (quantize everything but window + sinks) ---
+            kp = _apply_perm(k, cl["perm_k"])
+            vp = _apply_perm(v, cl["perm_v"])
+            cache = kvc.prefill(kp.astype(cache_dtype), vp.astype(cache_dtype),
+                                ml, pol, cl["alpha_k"], cl["alpha_v"],
+                                quant_fn=quant_fn)
+            cache.update(cache_extra)
+            return h, cache
+
+        return body
+
+    def run_group(x, pstack, g0, g1):
+        bands = sched.bands(g0, g1)
+        outs = {}
+        for bs, be, pol in bands:
+            x, c = jax.lax.scan(
+                make_body(pol, backend_obj.quant_fn(pol)), x,
+                (_tree_slice(pstack, bs - g0, be - g0),
+                 layer_flags(cfg, bs, be),
+                 _band_calib(calib, cfg, pol, bs, be)))
+            outs[_band_key(bs)] = c
+        return x, _band_out(outs, bands, g0)
 
     nf = cfg.first_dense
     caches = {}
     if nf:
-        x, dense_caches = jax.lax.scan(
-            body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
-                      _tree_slice(calib, 0, nf)))
+        x, dense_caches = run_group(x, params["dense_layers"], 0, nf)
         caches["dense"] = dense_caches
-    x, scan_caches = jax.lax.scan(
-        body, x, (params["layers"], layer_flags(cfg),
-                  _tree_slice(calib, nf, cfg.n_layers)))
+    x, scan_caches = run_group(x, params["layers"], nf, cfg.n_layers)
     caches["scan"] = scan_caches
     x = L.norm(x, params["final_norm"], cfg)
     logits = L.unembed(x[:, -1:], params, cfg)
@@ -563,25 +646,36 @@ def prefill_chunk_init(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
       (the paper's Sec. 3.2 full-precision prefill attention, kept
       per-chunk) and is dropped when the finished cache is inserted into a
       slot.
+
+    ``policy`` may be a schedule; each equal-policy band gets its own cache
+    layout (and workspace slice), keyed exactly as :func:`prefill_model`
+    keys its groups (DESIGN.md §8).
     """
     _check_chunkable(cfg)
     if cap < max_len:
         raise ValueError(f"workspace cap ({cap}) must be >= max_len "
                          f"({max_len})")
+    sched = as_schedule(policy, cfg.n_layers)
     nf = cfg.first_dense
     state: Dict = {"caches": {}, "ws": {}}
-    for group, n in (("dense", nf), ("scan", cfg.n_layers - nf)):
-        if n == 0:
+    for group, g0, g1 in (("dense", 0, nf), ("scan", nf, cfg.n_layers)):
+        if g1 == g0:
             continue
-        shapes = kvc.cache_shapes(batch, max_len, cfg.n_kv_heads,
-                                  cfg.head_dim, policy, dtype)
-        state["caches"][group] = {k: jnp.zeros((n,) + s, d)
-                                  for k, (s, d) in shapes.items()}
-        state["ws"][group] = {
-            "k": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
-                           dtype),
-            "v": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
-                           dtype)}
+        bands = sched.bands(g0, g1)
+        couts, wouts = {}, {}
+        for bs, be, pol in bands:
+            n = be - bs
+            shapes = kvc.cache_shapes(batch, max_len, cfg.n_kv_heads,
+                                      cfg.head_dim, pol, dtype)
+            couts[_band_key(bs)] = {k: jnp.zeros((n,) + s, d)
+                                    for k, (s, d) in shapes.items()}
+            wouts[_band_key(bs)] = {
+                "k": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                               dtype),
+                "v": jnp.zeros((n, batch, cap, cfg.n_kv_heads, cfg.head_dim),
+                               dtype)}
+        state["caches"][group] = _band_out(couts, bands, g0)
+        state["ws"][group] = _band_out(wouts, bands, g0)
     return state
 
 
@@ -620,10 +714,14 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens, state: Dict,
     :func:`prefill_model` (asserted in tests/test_prefill_chunk.py).
 
     ``backend`` supplies the cache quantizer (as in :func:`prefill_model`);
-    attention itself runs in full precision here regardless.
+    attention itself runs in full precision here regardless.  ``policy`` may
+    be a schedule: layers run in equal-policy bands against the band-keyed
+    state of :func:`prefill_chunk_init` (DESIGN.md §8).
     """
     _check_chunkable(cfg)
-    quant_fn = bk.resolve_backend(backend).quant_fn(policy)
+    sched = as_schedule(policy, cfg.n_layers)
+    _check_calib_schedule(calib, sched, cfg)
+    backend_obj = bk.resolve_backend(backend)
     params = _cast_params(params, dtype)
     x = L.embed(tokens, params["embed"], cfg.embed_scale)
     if dtype is not None:
@@ -631,8 +729,6 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens, state: Dict,
     x = logical(x, "batch", "seq", None)
     c = x.shape[1]
     cache_dtype = x.dtype
-    if calib is None:
-        calib = identity_calib(cfg, policy)
     t0 = jnp.asarray(t0, jnp.int32)
     n_valid = jnp.asarray(n_valid, jnp.int32)
     # one source for the chunk's positions + bucket-padding mask
@@ -641,40 +737,54 @@ def prefill_chunk(params: Params, cfg: ArchConfig, tokens, state: Dict,
 
     from .attention import prefill_chunk_attention
 
-    def body(h, xs):
-        p, fl, cl, cache, ws = xs
-        hn = L.norm(h, p["norm1"], cfg)
-        q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
-        # workspace rows hold unpermuted post-RoPE K/V so chunk attention
-        # reduces over channels in the same order as full_attention
-        ws = {"k": _ws_write(ws["k"], k, pos, valid),
-              "v": _ws_write(ws["v"], v, pos, valid)}
-        attn = prefill_chunk_attention(q, ws["k"], ws["v"], pos, cfg,
-                                       window=fl["window"])
-        h = h + _attn_out(attn, p["attn"])
-        h2 = L.norm(h, p["norm2"], cfg)
-        f, _ = _ffn(h2, p, cfg)
-        h = h + f
-        # --- SKVQ cache append (decode protocol, valid tokens only) ---
-        kp = _apply_perm(k, cl["perm_k"])
-        vp = _apply_perm(v, cl["perm_v"])
-        cache = kvc.prefill_chunk_append(
-            cache, kp.astype(cache_dtype), vp.astype(cache_dtype), policy,
-            n_valid, cl["alpha_k"], cl["alpha_v"], quant_fn=quant_fn)
-        return h, (cache, ws)
+    def make_body(pol: QuantPolicy, quant_fn):
+        def body(h, xs):
+            p, fl, cl, cache, ws = xs
+            hn = L.norm(h, p["norm1"], cfg)
+            q, k, v = _qkv(hn, p["attn"], cfg, rope, fl)
+            # workspace rows hold unpermuted post-RoPE K/V so chunk attention
+            # reduces over channels in the same order as full_attention
+            ws = {"k": _ws_write(ws["k"], k, pos, valid),
+                  "v": _ws_write(ws["v"], v, pos, valid)}
+            attn = prefill_chunk_attention(q, ws["k"], ws["v"], pos, cfg,
+                                           window=fl["window"])
+            h = h + _attn_out(attn, p["attn"])
+            h2 = L.norm(h, p["norm2"], cfg)
+            f, _ = _ffn(h2, p, cfg)
+            h = h + f
+            # --- SKVQ cache append (decode protocol, valid tokens only) ---
+            kp = _apply_perm(k, cl["perm_k"])
+            vp = _apply_perm(v, cl["perm_v"])
+            cache = kvc.prefill_chunk_append(
+                cache, kp.astype(cache_dtype), vp.astype(cache_dtype), pol,
+                n_valid, cl["alpha_k"], cl["alpha_v"], quant_fn=quant_fn)
+            return h, (cache, ws)
+
+        return body
+
+    def run_group(x, pstack, g0, g1, cgroup, wgroup):
+        bands = sched.bands(g0, g1)
+        couts, wouts = {}, {}
+        for bs, be, pol in bands:
+            key = _band_key(bs)
+            x, (c, w) = jax.lax.scan(
+                make_body(pol, backend_obj.quant_fn(pol)), x,
+                (_tree_slice(pstack, bs - g0, be - g0),
+                 layer_flags(cfg, bs, be),
+                 _band_calib(calib, cfg, pol, bs, be),
+                 _band_cache(cgroup, bands, bs),
+                 _band_cache(wgroup, bands, bs)))
+            couts[key], wouts[key] = c, w
+        return x, _band_out(couts, bands, g0), _band_out(wouts, bands, g0)
 
     nf = cfg.first_dense
     out: Dict = {"caches": {}, "ws": {}}
     if nf:
-        x, (dc, dw) = jax.lax.scan(
-            body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
-                      _tree_slice(calib, 0, nf), state["caches"]["dense"],
-                      state["ws"]["dense"]))
+        x, dc, dw = run_group(x, params["dense_layers"], 0, nf,
+                              state["caches"]["dense"], state["ws"]["dense"])
         out["caches"]["dense"], out["ws"]["dense"] = dc, dw
-    x, (sc, sw) = jax.lax.scan(
-        body, x, (params["layers"], layer_flags(cfg),
-                  _tree_slice(calib, nf, cfg.n_layers),
-                  state["caches"]["scan"], state["ws"]["scan"]))
+    x, sc, sw = run_group(x, params["layers"], nf, cfg.n_layers,
+                          state["caches"]["scan"], state["ws"]["scan"])
     out["caches"]["scan"], out["ws"]["scan"] = sc, sw
     x = L.norm(x, params["final_norm"], cfg)
     last = jax.lax.dynamic_slice_in_dim(
@@ -702,9 +812,16 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
     ``prune_blocks`` (None = backend default): dead-block skipping over the
     packed segment (DESIGN.md §4).  Per-slot cache lengths stay traced
     scalars through this function, so the pruning bounds change with the
-    serving traffic without ever recompiling the scanned decode."""
+    serving traffic without ever recompiling the scanned decode.
+
+    ``policy`` may be a :class:`PolicySchedule` (or preset): layers run in
+    contiguous equal-policy bands, each resolving its own quantizer and
+    attending with its own layer policy, against the band-keyed caches
+    :func:`prefill_model` built (DESIGN.md §8).  A uniform schedule is
+    bit-identical to the bare policy."""
+    sched = as_schedule(policy, cfg.n_layers)
+    _check_calib_schedule(calib, sched, cfg)
     backend = bk.resolve_backend(backend)
-    quant_fn = backend.quant_fn(policy)
     params = _cast_params(params, dtype)
     if token.ndim == 3:
         x = token
@@ -729,11 +846,10 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
         x = L.norm(x, params["final_norm"], cfg)
         return L.unembed(x, params, cfg), {"scan": scan_caches}
 
-    if calib is None:
-        calib = identity_calib(cfg, policy)
     # per-slot position of each row's new token = that row's cache length
     # (uniform across layers); scalar legacy caches broadcast to (B,)
-    t = jnp.broadcast_to(jnp.asarray(caches["scan"]["length"][0]), (b,))
+    t = jnp.broadcast_to(
+        jnp.asarray(_first_stack(caches["scan"])["length"][0]), (b,))
     if cfg.mrope_sections:
         pos3 = (jnp.broadcast_to(t[None, :, None], (3, b, 1))
                 if positions is None else positions)
@@ -743,7 +859,8 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             jnp.asarray(positions).reshape(-1), (b,))
         rope = _rope_tables(cfg, pos[:, None])
 
-    def layer_fn(h, p, fl, cl, cache, local_slice=0, packed_override=None):
+    def layer_fn(h, p, fl, cl, cache, pol, quant_fn, local_slice=0,
+                 packed_override=None):
         extra = {k2: v2 for k2, v2 in cache.items()
                  if k2.startswith("ssm_") or k2.startswith("x_")}
         kvcache = {k2: v2 for k2, v2 in cache.items() if k2 not in extra}
@@ -757,18 +874,18 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             # pre-step cache, so attend first (current token rides as an
             # explicit fp segment), then append.
             attn = backend.attend(
-                qp, kvcache, cfg, policy, window=fl["window"], dtype=h.dtype,
+                qp, kvcache, cfg, pol, window=fl["window"], dtype=h.dtype,
                 chunk=chunk, packed_override=packed_override,
                 extra_kv=(kp.astype(h.dtype), vp.astype(h.dtype), t), q_pos=t,
                 prune_blocks=prune_blocks)
-            kvcache = kvc.decode_append(kvcache, kp, vp, policy,
+            kvcache = kvc.decode_append(kvcache, kp, vp, pol,
                                         cl["alpha_k"], cl["alpha_v"],
                                         quant_fn=quant_fn)
         else:
-            kvcache = kvc.decode_append(kvcache, kp, vp, policy,
+            kvcache = kvc.decode_append(kvcache, kp, vp, pol,
                                         cl["alpha_k"], cl["alpha_v"],
                                         quant_fn=quant_fn)
-            attn = backend.attend(qp, kvcache, cfg, policy,
+            attn = backend.attend(qp, kvcache, cfg, pol,
                                   window=fl["window"], dtype=h.dtype,
                                   chunk=chunk, local_slice=local_slice,
                                   packed_override=None,
@@ -787,22 +904,24 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             xcache = {k2[2:]: v2 for k2, v2 in extra.items() if k2.startswith("x_")}
             qx = (hx @ p["xattn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
             qxp = _apply_perm(qx, _expand_perm(cl["perm_k"], cfg.n_heads))
-            xpol = dataclasses.replace(policy, window=0, n_sink=0)
-            xo = backend.attend(qxp, xcache, cfg, xpol, dtype=h.dtype)
+            xo = backend.attend(qxp, xcache, cfg, pol.without_window(),
+                                dtype=h.dtype)
             xo = _apply_perm(xo, _inverse_perm_expanded(cl["perm_v"], cfg.n_heads))
             h = h + _attn_out(xo, p["xattn"])
         h2 = L.norm(h, p["norm2"], cfg)
         f, _ = _ffn(h2, p, cfg)
         return h + f, {**kvcache, **extra}
 
-    def body(h, xs):
-        p, fl, cl, cache = xs
-        return layer_fn(h, p, fl, cl, cache)
+    def make_body(pol, quant_fn):
+        def body(h, xs):
+            p, fl, cl, cache = xs
+            return layer_fn(h, p, fl, cl, cache, pol, quant_fn)
+        return body
 
     nf = cfg.first_dense
     new_caches = {}
     if unroll:
-        def run_group(h, pstack, flags_all, cal, cstack, start):
+        def run_band(h, pstack, flags_all, cal, cstack, start, pol, quant_fn):
             n = jax.tree.leaves(pstack)[0].shape[0]
             # hoist ONE stacked slice of the packed region for local layers:
             # per-layer dynamic slices across a context-parallel-sharded seq
@@ -817,7 +936,7 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             if lw > 0 and any_local and s_q > lw:
                 # per-slot window frontier: each row slices its own last lw
                 # packed tokens (one gather on the whole (L, B, S, ...) stack)
-                qc = jnp.maximum(t - policy.n_sink - policy.window + 1, 0)
+                qc = jnp.maximum(t - pol.n_sink - pol.window + 1, 0)
                 st0 = jnp.clip(qc - lw, 0, s_q - lw)          # (B,)
                 gidx = st0[:, None] + jnp.arange(lw)          # (B, lw)
                 sl = lambda a: jnp.take_along_axis(
@@ -840,29 +959,34 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
                     po = (jax.tree.map(lambda a: a[i], presliced[0]),
                           jax.tree.map(lambda a: a[i], presliced[1]),
                           presliced[2])
-                h, cnew = layer_fn(h, p, fl, cl, cache,
+                h, cnew = layer_fn(h, p, fl, cl, cache, pol, quant_fn,
                                    local_slice=lw if is_local else 0,
                                    packed_override=po)
                 outs.append(cnew)
             return h, jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
-        if nf:
-            x, dc = run_group(x, params["dense_layers"], layer_flags(cfg, 0, nf),
-                              _tree_slice(calib, 0, nf), caches["dense"], 0)
-            new_caches["dense"] = dc
-        x, sc = run_group(x, params["layers"], layer_flags(cfg),
-                          _tree_slice(calib, nf, cfg.n_layers),
-                          caches["scan"], nf)
-        new_caches["scan"] = sc
-    else:
-        if nf:
-            x, dc = jax.lax.scan(
-                body, x, (params["dense_layers"], layer_flags(cfg, 0, nf),
-                          _tree_slice(calib, 0, nf), caches["dense"]))
-            new_caches["dense"] = dc
-        x, sc = jax.lax.scan(
-            body, x, (params["layers"], layer_flags(cfg),
-                      _tree_slice(calib, nf, cfg.n_layers), caches["scan"]))
-        new_caches["scan"] = sc
+
+    def run_group(x, pstack, g0, g1, cgroup):
+        bands = sched.bands(g0, g1)
+        outs = {}
+        for bs, be, pol in bands:
+            args = (_tree_slice(pstack, bs - g0, be - g0),
+                    layer_flags(cfg, bs, be),
+                    _band_calib(calib, cfg, pol, bs, be),
+                    _band_cache(cgroup, bands, bs))
+            if unroll:
+                x, c = run_band(x, args[0], args[1], args[2], args[3], bs,
+                                pol, backend.quant_fn(pol))
+            else:
+                x, c = jax.lax.scan(make_body(pol, backend.quant_fn(pol)),
+                                    x, args)
+            outs[_band_key(bs)] = c
+        return x, _band_out(outs, bands, g0)
+
+    if nf:
+        x, dc = run_group(x, params["dense_layers"], 0, nf, caches["dense"])
+        new_caches["dense"] = dc
+    x, sc = run_group(x, params["layers"], nf, cfg.n_layers, caches["scan"])
+    new_caches["scan"] = sc
     x = L.norm(x, params["final_norm"], cfg)
     return L.unembed(x, params, cfg), new_caches
 

@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import kv_cache as kvc
-from ..core.policy import QuantPolicy
+from ..core.policy import QuantPolicy, PolicySchedule, as_schedule
 from ..models.config import ArchConfig
 from ..models import backends as bk
 from ..models import transformer as T
@@ -90,7 +90,7 @@ def _split_keys(keys):
 
 # ------------------------------------------------------------- jitted pieces
 
-def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
+def make_prefill_fn(cfg: ArchConfig, policy, max_len: int,
                     calib=None, dtype=None, backend=None) -> Callable:
     """Jitted whole-prompt prefill ``(params, batch) -> (logits, caches)``.
 
@@ -104,7 +104,7 @@ def make_prefill_fn(cfg: ArchConfig, policy: QuantPolicy, max_len: int,
     return prefill
 
 
-def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
+def make_decode_fn(cfg: ArchConfig, policy, calib=None,
                    dtype=None, backend=None) -> Callable:
     """Single-token decode step (kept for tooling/tests; the engine's hot
     path is :func:`make_multi_decode_fn` — DESIGN.md §6)."""
@@ -115,7 +115,7 @@ def make_decode_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
     return decode
 
 
-def make_prefill_chunk_fn(cfg: ArchConfig, policy: QuantPolicy, calib=None,
+def make_prefill_chunk_fn(cfg: ArchConfig, policy, calib=None,
                           dtype=None, backend=None) -> Callable:
     """Jitted chunked-prefill step (DESIGN.md §7).
 
@@ -151,7 +151,7 @@ def default_chunk_buckets(prefill_chunk: int) -> tuple:
     return tuple(sorted(out))
 
 
-def make_multi_decode_fn(cfg: ArchConfig, policy: QuantPolicy, n_tokens: int,
+def make_multi_decode_fn(cfg: ArchConfig, policy, n_tokens: int,
                          calib=None, dtype=None, backend=None) -> Callable:
     """Jitted ``lax.scan`` over ``n_tokens`` decode steps, per-slot
     everything (the scanned multi-token decode of DESIGN.md §6).
@@ -267,6 +267,14 @@ class Engine:
     scanned decode chunk of ``steps_per_sync`` tokens; ``run`` steps until
     the given handles (default: everything submitted) finish.
 
+    ``policy`` is anything :func:`repro.core.policy.as_schedule` accepts —
+    a bare :class:`QuantPolicy` (uniform, bit-identical to the pre-schedule
+    engine), a :class:`PolicySchedule`, or an unbound preset like
+    ``PolicySchedule.first_last_fp16(PAPER_POLICY, 2)`` (materialized
+    against ``cfg.n_layers`` here).  The resolved schedule is
+    ``engine.schedule``; its per-layer avg-bits/bytes ride along in
+    :attr:`backend_info` (DESIGN.md §8).
+
     ``backend`` selects the decode-attention implementation (None = host
     default: pallas on TPU, reference elsewhere).  ``max_len`` is the
     per-slot cache capacity — every admitted request must satisfy
@@ -284,8 +292,8 @@ class Engine:
     bit-identical to the whole-prompt path.
     """
 
-    def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
-                 batch_slots: int, max_len: int, calib=None, seed: int = 0,
+    def __init__(self, params, cfg: ArchConfig, policy, batch_slots: int,
+                 max_len: int, calib=None, seed: int = 0,
                  backend=None, steps_per_sync: int = 8, dtype=None,
                  prefill_chunk: Optional[int] = None, chunk_buckets=None):
         if batch_slots < 1:
@@ -310,7 +318,12 @@ class Engine:
             if chunk_buckets[0] < 1:
                 raise ValueError(f"chunk_buckets entries must be >= 1, "
                                  f"got {chunk_buckets}")
-        self.params, self.cfg, self.policy = params, cfg, policy
+        self.schedule = as_schedule(policy, cfg.n_layers)
+        # bare-policy callers see their policy back; schedule callers see
+        # the materialized schedule (the canonical currency — DESIGN.md §8)
+        self.policy = policy if isinstance(policy, QuantPolicy) \
+            else self.schedule
+        self.params, self.cfg = params, cfg
         self.max_len = max_len
         self.calib = calib
         self.backend = backend
@@ -320,7 +333,7 @@ class Engine:
         self.batch_slots = batch_slots
         self.prefill_chunk = prefill_chunk
         self.chunk_buckets = chunk_buckets
-        self.prefill_fn = make_prefill_fn(cfg, policy, max_len, calib,
+        self.prefill_fn = make_prefill_fn(cfg, self.schedule, max_len, calib,
                                           dtype=dtype, backend=backend)
         self._multi: Optional[Callable] = None  # lazily-built scanned step
         self._chunk_fns: Dict[int, Callable] = {}   # bucket -> jitted chunk
@@ -412,12 +425,29 @@ class Engine:
 
     @property
     def backend_info(self) -> dict:
-        """Resolved decode-backend facts (DESIGN.md §4): backend name, the
-        interpret mode that will actually run (explicit arg >
-        ``REPRO_PALLAS_INTERPRET`` > host auto-detect) and the block-pruning
-        state.  Benchmarks record this next to their latency rows so a
-        number in the JSON artifact says which mode produced it."""
-        return bk.resolve_backend(self.backend).info()
+        """Resolved decode-backend facts (DESIGN.md §4) + the policy
+        schedule's accounting (DESIGN.md §8): backend name, the interpret
+        mode that will actually run (explicit arg >
+        ``REPRO_PALLAS_INTERPRET`` > host auto-detect), the block-pruning
+        state, the schedule-weighted ``avg_bits``, the per-layer
+        ``layer_avg_bits`` breakdown, and per-layer/total cache bytes at
+        this engine's ``max_len`` capacity.  Benchmarks record this next to
+        their latency rows so a number in the JSON artifact says which mode
+        and which schedule produced it."""
+        info = dict(bk.resolve_backend(self.backend).info())
+        cfg, sched = self.cfg, self.schedule
+        layer_bytes = kvc.schedule_cache_nbytes(
+            sched, cfg.n_layers, self.max_len, cfg.n_kv_heads, cfg.head_dim,
+            dtype=self.dtype or self.params["embed"].dtype)
+        info.update({
+            "schedule_uniform": sched.is_uniform,
+            "n_policies": len(sched.distinct()),
+            "avg_bits": round(sched.avg_bits(cfg.head_dim), 4),
+            "layer_avg_bits": sched.layer_avg_bits(cfg.head_dim),
+            "layer_cache_bytes": layer_bytes,
+            "cache_bytes_per_slot": sum(layer_bytes),
+        })
+        return info
 
     @property
     def prefill_shapes(self) -> tuple:
@@ -435,8 +465,8 @@ class Engine:
         # varied serving process never recompiles the decode step.
         if self._multi is None:
             self._multi = make_multi_decode_fn(
-                self.cfg, self.policy, self.steps_per_sync, calib=self.calib,
-                dtype=self.dtype, backend=self.backend)
+                self.cfg, self.schedule, self.steps_per_sync,
+                calib=self.calib, dtype=self.dtype, backend=self.backend)
         return self._multi
 
     def _retire(self):
@@ -560,7 +590,7 @@ class Engine:
         st, self._chunk_state = self._chunk_state, None
         if st is None:
             return T.prefill_chunk_init(
-                self.cfg, self.policy, self.max_len, self.max_len, batch=1,
+                self.cfg, self.schedule, self.max_len, self.max_len, batch=1,
                 dtype=self.dtype or self.params["embed"].dtype)
         if self._zero_caches is None:
             self._zero_caches = jax.jit(
@@ -571,7 +601,7 @@ class Engine:
     def _chunk_fn(self, bucket: int) -> Callable:
         if bucket not in self._chunk_fns:
             self._chunk_fns[bucket] = make_prefill_chunk_fn(
-                self.cfg, self.policy, calib=self.calib, dtype=self.dtype,
+                self.cfg, self.schedule, calib=self.calib, dtype=self.dtype,
                 backend=self.backend)
         return self._chunk_fns[bucket]
 
@@ -664,7 +694,7 @@ class ServeSession:
     it also admits ragged prompts and per-request budgets.
     """
 
-    def __init__(self, params, cfg: ArchConfig, policy: QuantPolicy,
+    def __init__(self, params, cfg: ArchConfig, policy,
                  batch_slots: int, max_len: int, calib=None, temperature=0.0,
                  seed: int = 0, backend=None, steps_per_sync: int = 8,
                  eos_id: Optional[int] = None,
