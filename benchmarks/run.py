@@ -74,9 +74,19 @@ def main(argv=None) -> None:
             failures.append((name, repr(e)))
             emit(f"{name}_FAILED,0.0,{type(e).__name__}")
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    # paged-pool facts (DESIGN.md §9): surface the serving suite's pool row
+    # as a one-line summary and a structured artifact key, so the sharing /
+    # residency trajectory is trackable across PRs next to the latency rows
+    pool_config = None
+    for r in rows:
+        if r["name"] == "serve_pool_summary":
+            pool_config = dict(kv.split("=", 1)
+                               for kv in r["derived"].split(";") if "=" in kv)
+            print(f"# pool: {r['derived']}", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"smoke": args.smoke, "total_s": time.time() - t0,
+                       "pool": pool_config,
                        "rows": rows,
                        "failures": [{"suite": n, "error": e}
                                     for n, e in failures]}, f, indent=2)

@@ -59,6 +59,99 @@ def _serve(params, cfg, pol, reqs, max_len, prefill_chunk):
             "backend_info": eng.backend_info}
 
 
+def _serve_pool(params, cfg, pol, reqs, max_len, pool_blocks, bt, slots):
+    """Serve a wave through the paged block pool (DESIGN.md §9), stepping
+    manually so peak occupancy and admitted concurrency are sampled live."""
+    eng = Engine(params, cfg, pol, batch_slots=slots, max_len=max_len,
+                 steps_per_sync=4, pool_blocks=pool_blocks,
+                 pool_block_tokens=bt)
+    t0 = time.time()
+    handles = [eng.submit(Request(prompt=r.prompt, max_new=r.max_new,
+                                  seed=r.seed)) for r in reqs]
+    concurrency = 0
+    while any(not h.finished for h in handles):
+        if not eng.step():
+            break
+        concurrency = max(concurrency, sum(
+            h is not None for h in eng._slot_handle))
+    wall = time.time() - t0
+    st = eng.stats()
+    toks = sum(len(h.tokens) for h in handles)
+    return {"wall_s": wall, "tok_s": toks / max(wall, 1e-9),
+            "streams": [h.result().tolist() for h in handles],
+            "concurrency": concurrency, "stats": st}
+
+
+def _shared_prefix_suite(emit, params, cfg, smoke):
+    """Content-addressed prefix sharing under the block pool: N requests
+    with an identical long prefix must quantize it ONCE, share the blocks
+    copy-on-write, and keep fewer packed bytes resident than per-slot
+    stripes would.  CI-gated — a regression that silently re-quantizes the
+    prefix or stops sharing fails the smoke benchmark run."""
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
+                      group_size=min(16, cfg.head_dim), window=16, n_sink=4)
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(7)
+    bt, max_len, slots = 8, 84, 3          # packed = 64 tokens = 8 blocks
+    n_req = 3 if smoke else 6
+    prefix = corpus.sample(72, np.random.default_rng(100))
+    reqs = []
+    for i in range(n_req):
+        tail = rng.integers(0, cfg.vocab_size, size=6).astype(prefix.dtype)
+        reqs.append(Request(prompt=np.concatenate([prefix, tail]),
+                            max_new=6, seed=i))
+
+    pooled = _serve_pool(params, cfg, pol, reqs, max_len,
+                         pool_blocks=4 * 8, bt=bt, slots=slots)
+    # striped baseline: same wave through per-slot stripes; its packed
+    # worst case is what the pool's resident bytes are gated against
+    eng = Engine(params, cfg, pol, batch_slots=slots, max_len=max_len,
+                 steps_per_sync=4)
+    handles = [eng.submit(Request(prompt=r.prompt, max_new=r.max_new,
+                                  seed=r.seed)) for r in reqs]
+    t0 = time.time()
+    eng.run(handles)
+    wall = time.time() - t0
+    striped_streams = [h.result().tolist() for h in handles]
+    if pooled["streams"] != striped_streams:
+        raise RuntimeError("pooled streams diverged from striped baseline")
+
+    st = pooled["stats"]
+    ratio = st["peak_resident_bytes"] / max(st["striped_worst_case_bytes"], 1)
+    emit(f"serve_shared_prefix_pooled,"
+         f"{pooled['wall_s'] * 1e6 / len(reqs):.1f},"
+         f"resident_peak_bytes={st['peak_resident_bytes']};"
+         f"striped_worst_case_bytes={st['striped_worst_case_bytes']};"
+         f"resident_ratio={ratio:.3f};"
+         f"prefix_hit_rate={st['prefix_hit_rate']:.3f};"
+         f"prefix_hits={st['prefix_hits']};"
+         f"prefix_misses={st['prefix_misses']};"
+         f"cow_copies={st['cow_copies']};"
+         f"peak_used_blocks={st['peak_used']};"
+         f"admitted_concurrency={pooled['concurrency']};"
+         f"tok_s={pooled['tok_s']:.2f}")
+    emit(f"serve_shared_prefix_striped,{wall * 1e6 / len(reqs):.1f},"
+         f"packed_bytes={st['striped_worst_case_bytes']};"
+         f"admitted_concurrency={slots};tok_s="
+         f"{sum(len(s) for s in striped_streams) / max(wall, 1e-9):.2f}")
+    # CI gates: sharing must actually happen, and pooled residency must
+    # beat per-slot stripes by >= 2x on this workload
+    gates = {"prefix_hit_rate>0": st["prefix_hit_rate"] > 0,
+             "cow_copies>0": st["cow_copies"] > 0,
+             "resident_ratio<0.5": ratio < 0.5}
+    emit(f"serve_pool_summary,0.0,"
+         f"pool_blocks={st['pool_blocks']};"
+         f"pool_block_tokens={st['pool_block_tokens']};"
+         f"resident_ratio={ratio:.3f};"
+         f"prefix_hit_rate={st['prefix_hit_rate']:.3f};"
+         f"cow_copies={st['cow_copies']};"
+         f"gate={'pass' if all(gates.values()) else 'FAIL'}")
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        raise RuntimeError(
+            f"shared-prefix pool gates failed: {failed} (stats: {st})")
+
+
 def run(emit, smoke: bool = False):
     cfg = configs.get_smoke("llama3p2_1b")
     pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
@@ -99,3 +192,5 @@ def run(emit, smoke: bool = False):
             if not isinstance(v, tuple)}
     emit("serve_backend_info,0.0," +
          ";".join(f"{k}={v}" for k, v in sorted(info.items())))
+
+    _shared_prefix_suite(emit, params, cfg, smoke)

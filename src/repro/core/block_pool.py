@@ -1,0 +1,254 @@
+"""Host-side paged KV block pool (DESIGN.md §9).
+
+The device never sees this class — it only sees the per-slot ``block_tbl``
+leaf that :class:`BlockPool` maintains and the engine flushes (a plain
+``jnp.asarray`` of the host table, so tables growing/shrinking never change
+a traced shape and never trigger recompiles).  Everything allocation-shaped
+lives here, in numpy, on the host:
+
+* a free list over ``pool_blocks`` physical blocks (physical id 0 is the
+  reserved **null block**: never allocated, never freed, absorbs writes
+  from invalid/retired rows, and is what unallocated table entries point
+  at);
+* per-block reference counts — prefix sharing means one physical block can
+  back the same logical block of many slots;
+* a content hash registry (``key -> phys``) for content-addressed prefix
+  sharing: a prompt whose leading blocks hash to already-resident keys
+  reuses those blocks instead of quantizing them again;
+* per-slot decode **reservations**: admission guarantees a request the
+  blocks its decode will eventually touch, so a slot can never deadlock
+  mid-generation waiting for a block that admission already promised.
+
+Copy-on-write contract: full blocks are immutable once registered (the
+packed layout is append-only past the admission frontier), but the
+*partial tail* block keeps receiving tokens as decode evicts them from the
+sliding window.  Before any write to a shared or registered block the
+engine calls :meth:`ensure_writable`, which either allocates a fresh block
+("alloc"), schedules a device copy into a private block ("copy"), or
+deregisters a privately-held hash entry (None with side effect) so the
+write can't corrupt another slot's — or a future request's — view.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["BlockPool", "prefix_block_keys"]
+
+
+def prefix_block_keys(prompt: Sequence[int], n_sink: int, window: int,
+                      block_tokens: int, seed: str = ""):
+    """Content-address a prompt's packed blocks (DESIGN.md §9).
+
+    Returns ``(full_keys, tail_key)``: one key per *full* packed block the
+    prompt quantizes at admission, plus a key for the partial tail block
+    (``None`` if the packed region ends exactly on a block boundary or the
+    prompt packs nothing).
+
+    Keys are chained sha256 digests over the token prefix each block's
+    content depends on — packed entry ``u`` holds exactly token
+    ``n_sink + u``, quantized per-token, so two prompts agreeing on
+    ``prompt[:n_sink + (lb+1)*block_tokens]`` produce bit-identical block
+    ``lb`` regardless of what follows.  ``seed`` folds in everything else
+    content depends on (band id, policy repr, calibration tag) so equal
+    keys really do imply equal bytes.
+
+    The tail key additionally encodes its fill count: a tail shared at
+    fill f and later grown is a *different* content, which is why tail
+    blocks are CoW'd before any decode write.
+    """
+    plen = len(prompt)
+    qc = max(0, plen - n_sink - window)        # packed tokens at admission
+    h = hashlib.sha256(seed.encode())
+    h.update(bytes(f":{n_sink}:{block_tokens}:", "ascii"))
+    for tok in prompt[:n_sink]:
+        h.update(int(tok).to_bytes(8, "little", signed=True))
+    full_keys: List[str] = []
+    n_full, fill = divmod(qc, block_tokens)
+    for lb in range(n_full):
+        for tok in prompt[n_sink + lb * block_tokens:
+                          n_sink + (lb + 1) * block_tokens]:
+            h.update(int(tok).to_bytes(8, "little", signed=True))
+        full_keys.append(h.hexdigest())
+    tail_key: Optional[str] = None
+    if fill > 0:
+        for tok in prompt[n_sink + n_full * block_tokens:n_sink + qc]:
+            h.update(int(tok).to_bytes(8, "little", signed=True))
+        tail_key = f"P{fill}:{h.hexdigest()}"
+    return full_keys, tail_key
+
+
+class BlockPool:
+    """Free list + refcounts + hash registry + per-slot tables for ONE
+    quantized band's physical block pool (DESIGN.md §9).
+
+    One physical block bundles that band's planes across *all* its layers
+    (the engine stacks plane leaves ``(L_band, NP, BT, ...)``), so the pool
+    allocates per-band, not per-layer.  ``n_blocks`` counts allocatable
+    blocks — the device-side pool axis is ``n_blocks + 1`` wide because
+    physical id 0 is the null block.
+    """
+
+    def __init__(self, n_blocks: int, n_slots: int, n_table: int,
+                 block_nbytes: int = 0):
+        if n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        self.n_slots = int(n_slots)
+        self.n_table = int(n_table)
+        self.block_nbytes = int(block_nbytes)
+        # logical -> physical per slot; 0 = unallocated (null block)
+        self.tables = np.zeros((n_slots, n_table), np.int32)
+        self.refs = np.zeros(n_blocks + 1, np.int32)
+        self.refs[0] = 1                       # null block: pinned forever
+        self._free: List[int] = list(range(n_blocks, 0, -1))  # pop() -> 1 first
+        self.hash_to_phys: Dict[str, int] = {}
+        self.phys_to_hash: Dict[int, str] = {}
+        self._reserved = np.zeros(n_slots, np.int64)
+        self.hits = 0
+        self.misses = 0
+        self.cow_copies = 0
+        self.peak_used = 0
+        self.dirty = True                      # device table needs a flush
+
+    # ------------------------------------------------------------- accounting
+
+    def used(self) -> int:
+        """Physical blocks currently allocated (excluding the null block)."""
+        return self.n_blocks - len(self._free)
+
+    def available(self) -> int:
+        """Blocks an admission decision may still promise: free minus what
+        existing slots' decode reservations have already claimed."""
+        return len(self._free) - int(self._reserved.sum())
+
+    def reserved(self) -> int:
+        """Total outstanding decode reservations across slots."""
+        return int(self._reserved.sum())
+
+    def set_reservation(self, slot: int, n: int) -> None:
+        """Promise ``slot`` up to ``n`` future blocks (admission contract)."""
+        self._reserved[slot] = max(0, int(n))
+
+    def stats(self) -> dict:
+        """Occupancy + sharing counters for ``Engine.stats()``/CLI."""
+        used = self.used()
+        return {"blocks": self.n_blocks, "used": used,
+                "free": len(self._free), "reserved": self.reserved(),
+                "peak_used": self.peak_used,
+                "prefix_hits": self.hits, "prefix_misses": self.misses,
+                "prefix_hit_rate": (self.hits / (self.hits + self.misses)
+                                    if self.hits + self.misses else 0.0),
+                "cow_copies": self.cow_copies,
+                "resident_bytes": used * self.block_nbytes}
+
+    # ------------------------------------------------------------- allocation
+
+    def alloc(self, slot: int, consume_reservation: bool = False) -> int:
+        """Pop a free physical block (refcount 1).  The caller assigns it to
+        a table entry.  ``consume_reservation`` burns one of ``slot``'s
+        reserved blocks — decode-time allocations were pre-promised at
+        admission, so they draw down the reservation rather than the
+        uncommitted free margin."""
+        if not self._free:
+            raise RuntimeError(
+                f"block pool exhausted ({self.n_blocks} blocks, "
+                f"{self.reserved()} reserved) — admission accounting bug")
+        phys = self._free.pop()
+        self.refs[phys] = 1
+        if consume_reservation and self._reserved[slot] > 0:
+            self._reserved[slot] -= 1
+        self.peak_used = max(self.peak_used, self.used())
+        return phys
+
+    def ref(self, phys: int) -> None:
+        """Take another reference on an allocated block (prefix sharing)."""
+        if phys <= 0 or self.refs[phys] <= 0:
+            raise ValueError(f"ref on unallocated block {phys}")
+        self.refs[phys] += 1
+
+    def deref(self, phys: int) -> None:
+        """Drop a reference; the last one frees the block and retires any
+        hash registration pointing at it."""
+        if phys <= 0:
+            return
+        if self.refs[phys] <= 0:
+            raise ValueError(f"deref on unallocated block {phys}")
+        self.refs[phys] -= 1
+        if self.refs[phys] == 0:
+            key = self.phys_to_hash.pop(phys, None)
+            if key is not None:
+                self.hash_to_phys.pop(key, None)
+            self._free.append(phys)
+
+    # ----------------------------------------------------------- hash registry
+
+    def lookup(self, key: str) -> Optional[int]:
+        """Resident physical block for a content key, or None."""
+        return self.hash_to_phys.get(key)
+
+    def register(self, key: str, phys: int) -> None:
+        """Publish ``phys`` as the canonical block for ``key`` (after its
+        contents are actually on device)."""
+        if self.refs[phys] <= 0:
+            raise ValueError(f"register of unallocated block {phys}")
+        self.hash_to_phys[key] = phys
+        self.phys_to_hash[phys] = key
+
+    def deregister(self, phys: int) -> None:
+        """Forget a block's content key (it is about to be mutated)."""
+        key = self.phys_to_hash.pop(phys, None)
+        if key is not None:
+            self.hash_to_phys.pop(key, None)
+
+    # ------------------------------------------------------------- slot tables
+
+    def table(self, slot: int) -> np.ndarray:
+        return self.tables[slot]
+
+    def assign(self, slot: int, lb: int, phys: int) -> None:
+        """Point logical block ``lb`` of ``slot`` at ``phys``."""
+        self.tables[slot, lb] = phys
+        self.dirty = True
+
+    def ensure_writable(self, slot: int, lb: int
+                        ) -> Optional[Tuple[str, int, int]]:
+        """Make logical block ``lb`` of ``slot`` privately writable
+        (DESIGN.md §9 CoW contract).  Returns the device work needed:
+
+        * ``None`` — already exclusively owned and unregistered; write away.
+        * ``("alloc", phys, 0)`` — entry was unallocated; a fresh block
+          ``phys`` is now assigned (no device copy needed — stale contents
+          past the frontier are masked by the segment math).
+        * ``("copy", src, dst)`` — entry was shared; ``dst`` is now this
+          slot's private block and the engine must device-copy src -> dst
+          before the write lands.
+        """
+        phys = int(self.tables[slot, lb])
+        if phys == 0:
+            fresh = self.alloc(slot, consume_reservation=True)
+            self.assign(slot, lb, fresh)
+            return ("alloc", fresh, 0)
+        if self.refs[phys] > 1:
+            dst = self.alloc(slot, consume_reservation=True)
+            self.refs[phys] -= 1               # this slot's share moves away
+            self.assign(slot, lb, dst)
+            self.cow_copies += 1
+            return ("copy", phys, dst)
+        # refcount 1: exclusively ours — but if it is hash-registered, a
+        # future request could still match and share it mid-mutation.
+        self.deregister(phys)
+        return None
+
+    def release_slot(self, slot: int) -> None:
+        """Retire a slot: deref every allocated table entry, zero the table
+        row, drop any outstanding reservation."""
+        for lb in range(self.n_table):
+            phys = int(self.tables[slot, lb])
+            if phys > 0:
+                self.deref(phys)
+        self.tables[slot] = 0
+        self._reserved[slot] = 0
+        self.dirty = True

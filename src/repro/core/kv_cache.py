@@ -89,6 +89,162 @@ def init_cache(batch, max_len, n_kv, head_dim, policy, dtype=jnp.bfloat16) -> Ca
             cache_shapes(batch, max_len, n_kv, head_dim, policy, dtype).items()}
 
 
+# ------------------------------------------------------- paged block pool
+
+_PLANE_PREFIXES = ("qk_", "qv_")
+
+
+def is_plane_key(key: str) -> bool:
+    """True for packed-plane leaves (codes + scale/zero metadata) — the only
+    leaves that move into the shared pool (DESIGN.md §9)."""
+    return key.startswith(_PLANE_PREFIXES)
+
+
+def is_pooled(cache: Cache) -> bool:
+    """True when this cache stores its packed planes in a shared block pool
+    (detected structurally by the ``block_tbl`` leaf; DESIGN.md §9)."""
+    return "block_tbl" in cache
+
+
+def pooled_cache_shapes(batch: int, max_len: int, n_kv: int, head_dim: int,
+                        policy: QuantPolicy, pool_blocks: int,
+                        block_tokens: int, dtype=jnp.bfloat16):
+    """Dict of (shape, dtype) for the pooled layout (DESIGN.md §9).
+
+    Identical to :func:`cache_shapes` except the packed planes live in a
+    shared pool of ``pool_blocks`` physical blocks of ``block_tokens``
+    tokens each (plus physical block 0, the never-read null block), and
+    each slot carries a ``block_tbl`` (batch, NB) int32 logical->physical
+    map (0 = unallocated).  The fp sink/window ring and per-slot length
+    stay striped — they are small, per-slot by nature, and the ring's
+    in-place overwrites don't fit an immutable-block pool.
+    """
+    policy = as_layer_policy(policy)
+    if policy.is_fp16:
+        raise ValueError("fp16 policies have no packed planes to pool; "
+                         "keep fp16 bands on the striped layout")
+    w, ns = policy.window, policy.n_sink
+    sq = max(0, max_len - ns - w)
+    if sq == 0:
+        raise ValueError(
+            f"policy window={w} n_sink={ns} leaves no packed region at "
+            f"max_len={max_len}; nothing to pool")
+    nb = seg.n_table_blocks(sq, block_tokens)  # raises if sq is ragged
+    if pool_blocks < 1:
+        raise ValueError(f"pool_blocks must be >= 1, got {pool_blocks}")
+    out = {"length": ((batch,), jnp.int32),
+           "block_tbl": ((batch, nb), jnp.int32)}
+    if ns > 0:
+        out["sink_k"] = ((batch, ns, n_kv, head_dim), dtype)
+        out["sink_v"] = ((batch, ns, n_kv, head_dim), dtype)
+    if w > 0:
+        out["win_k"] = ((batch, w, n_kv, head_dim), dtype)
+        out["win_v"] = ((batch, w, n_kv, head_dim), dtype)
+    gsz = min(policy.group_size, head_dim)
+    for pref, bits in (("qk", policy.bits_k), ("qv", policy.bits_v)):
+        for k, v in _qtensor_shapes(pool_blocks + 1, block_tokens, n_kv,
+                                    head_dim, bits, gsz,
+                                    policy.meta_dtype_bits).items():
+            out[f"{pref}_{k}"] = v
+    return out
+
+
+def init_pooled_cache(batch, max_len, n_kv, head_dim, policy, pool_blocks,
+                      block_tokens, dtype=jnp.bfloat16) -> Cache:
+    """Zero-filled pooled cache dict for one layer (DESIGN.md §9)."""
+    return {k: jnp.zeros(s, d) for k, (s, d) in
+            pooled_cache_shapes(batch, max_len, n_kv, head_dim, policy,
+                                pool_blocks, block_tokens, dtype).items()}
+
+
+def unpool_cache(cache: Cache) -> Cache:
+    """Gather a pooled cache into the equivalent striped view (DESIGN.md §9).
+
+    Planes (NP, BT, H, W) gathered through ``block_tbl`` (B, NB) become
+    (B, NB*BT, H, W).  Because the packed capacity tiles exactly into
+    blocks, the result is shape-identical to the striped cache the same
+    traffic would have produced — unallocated table entries gather the
+    null block, whose contents sit past every slot's packed frontier and
+    are masked out by the shared segment math, so downstream attention is
+    bit-identical to the striped path.
+    """
+    tbl = cache["block_tbl"]
+    out = {}
+    for key, v in cache.items():
+        if key == "block_tbl":
+            continue
+        if is_plane_key(key):
+            g = jnp.take(v, tbl, axis=0)              # (B, NB, BT, ...)
+            v = g.reshape((tbl.shape[0], tbl.shape[1] * g.shape[2])
+                          + g.shape[3:])
+        out[key] = v
+    return out
+
+
+def pool_insert_blocks(dst: Cache, src: Cache, pairs, src_slot: int = 0,
+                       pool_axis: int = 0) -> Cache:
+    """Copy packed blocks of a striped cache into pool slots (DESIGN.md §9).
+
+    ``src`` is a striped cache (e.g. a freshly prefilled batch) whose packed
+    region tiles into the pool's block size; ``pairs`` is (n, 2) int32 rows
+    of [logical_block, physical_block]: logical block ``lb`` of ``src`` row
+    ``src_slot`` lands at pool block ``phys``.  Rows with ``phys == 0``
+    write the null block — a semantic no-op (the null block is never read
+    unmasked), so a fixed-size ``pairs`` array padded with (0, 0) keeps one
+    compiled executable whatever the live pair count.  ``pool_axis`` is 0
+    for single-layer caches, 1 for the engine's layer-stacked leaves.
+    """
+    pairs = jnp.asarray(pairs, jnp.int32).reshape(-1, 2)
+    lb, phys = pairs[:, 0], pairs[:, 1]
+    sel = (slice(None),) * pool_axis
+    out = dict(dst)
+    for key, d in dst.items():
+        if not is_plane_key(key):
+            continue
+        bt = d.shape[pool_axis + 1]
+        srow = src[key][sel + (src_slot,)]            # (..., sq_src, H, W)
+        shp = srow.shape
+        nbs = shp[pool_axis] // bt
+        blocks = srow.reshape(shp[:pool_axis] + (nbs, bt) + shp[pool_axis + 1:])
+        take = jnp.take(blocks, jnp.clip(lb, 0, nbs - 1), axis=pool_axis)
+        out[key] = d.at[sel + (phys,)].set(take.astype(d.dtype))
+    return out
+
+
+def pool_copy_block(cache: Cache, pairs, pool_axis: int = 0) -> Cache:
+    """Copy pool blocks src -> dst across every plane leaf (DESIGN.md §9
+    copy-on-write).  ``pairs`` is (n, 2) int32 rows of [src_phys, dst_phys];
+    (0, 0) rows copy null onto null — a no-op — so a fixed-size padded
+    array keeps the executable stable as the live CoW count varies."""
+    pairs = jnp.asarray(pairs, jnp.int32).reshape(-1, 2)
+    src_b, dst_b = pairs[:, 0], pairs[:, 1]
+    sel = (slice(None),) * pool_axis
+    out = dict(cache)
+    for key, v in cache.items():
+        if not is_plane_key(key):
+            continue
+        out[key] = v.at[sel + (dst_b,)].set(v[sel + (src_b,)])
+    return out
+
+
+def pool_block_nbytes(n_kv: int, head_dim: int, policy: QuantPolicy,
+                      block_tokens: int) -> int:
+    """Exact bytes of ONE physical pool block for one layer — packed codes
+    plus scale/zero metadata across both K and V planes, straight from
+    :func:`_qtensor_shapes` so accounting can't drift from allocation
+    (DESIGN.md §9)."""
+    policy = as_layer_policy(policy)
+    if policy.is_fp16:
+        raise ValueError("fp16 policies have no packed planes")
+    gsz = min(policy.group_size, head_dim)
+    total = 0
+    for bits in (policy.bits_k, policy.bits_v):
+        for (s, d) in _qtensor_shapes(1, block_tokens, n_kv, head_dim, bits,
+                                      gsz, policy.meta_dtype_bits).values():
+            total += math.prod(s) * jnp.dtype(d).itemsize
+    return total
+
+
 def _split_q(cache: Cache, pref: str):
     plen = len(pref) + 1
     return {k[plen:]: v for k, v in cache.items() if k.startswith(pref + "_")}
@@ -103,7 +259,10 @@ def slot_lengths(cache: Cache, batch: Optional[int] = None) -> jnp.ndarray:
     t = jnp.asarray(cache["length"])
     if t.ndim == 0:
         if batch is None:
-            batch = next(v.shape[0] for k, v in cache.items() if k != "length")
+            # pooled plane leaves lead with the pool axis, not batch — infer
+            # batch from a per-slot leaf (block_tbl is always per-slot).
+            batch = next(v.shape[0] for k, v in cache.items()
+                         if k != "length" and not is_plane_key(k))
         t = jnp.broadcast_to(t, (batch,))
     return t
 
@@ -128,6 +287,21 @@ def _put_tok_where(buf, idx, val, cond):
     return buf.at[jnp.arange(buf.shape[0]), idx].set(new)
 
 
+def _put_tok_pool(buf, tbl, idx, block_tokens, val, cond):
+    """Pooled plane scatter (DESIGN.md §9): packed index ``idx`` (B,) routes
+    through the slot's block table to (physical block, offset).  Rows with
+    ``cond`` False are steered to the null block (physical 0), which is
+    never read unmasked — so the write is unconditional device-side and
+    one executable serves every ragged batch state.  The engine's
+    ensure-writable pass guarantees live rows own their target block
+    exclusively (CoW), so scatters never collide across slots."""
+    lb = jnp.clip(idx // block_tokens, 0, tbl.shape[1] - 1)
+    off = idx % block_tokens
+    phys = seg.physical_block(tbl, lb)
+    p = jnp.where(cond, phys, 0)
+    return buf.at[p, off].set(val[:, 0])
+
+
 # ------------------------------------------------------- slot lifecycle ops
 
 def reset_slot(caches, i, batch_axis: int = 0):
@@ -137,13 +311,33 @@ def reset_slot(caches, i, batch_axis: int = 0):
     Works on a single-layer cache dict (leaves ``(B, ...)``, batch_axis=0) or
     the engine's layer-stacked cache groups (leaves ``(L, B, ...)``,
     batch_axis=1).  ``i`` may be a traced scalar — one compiled executable
-    serves every slot."""
+    serves every slot.
+
+    Pooled cache dicts (DESIGN.md §9) are table-aware: the slot's
+    ``block_tbl`` row zeroes (every logical block -> null) but the shared
+    plane pool is untouched — freeing the physical blocks is the host
+    :class:`~repro.core.block_pool.BlockPool`'s job, and other slots may
+    still share them."""
     sel = (slice(None),) * batch_axis
 
     def one(leaf):
         return leaf.at[sel + (i,)].set(jnp.zeros((), leaf.dtype))
 
-    return jax.tree.map(one, caches)
+    def rec(node):
+        if not isinstance(node, dict):
+            return jax.tree.map(one, node)
+        pooled = is_pooled(node)
+        out = {}
+        for k, v in node.items():
+            if isinstance(v, dict):
+                out[k] = rec(v)
+            elif pooled and is_plane_key(k):
+                out[k] = v                    # shared pool: not per-slot
+            else:
+                out[k] = one(v)
+        return out
+
+    return rec(caches)
 
 
 def insert_slot(dst, i, src, src_slot: int = 0, batch_axis: int = 0):
@@ -152,13 +346,34 @@ def insert_slot(dst, i, src, src_slot: int = 0, batch_axis: int = 0):
     Slot-lifecycle op for the serving engine (DESIGN.md §6: admission).
     ``src`` is a structurally-identical cache with its own (smaller) batch —
     typically a freshly prefilled batch-of-1 request being admitted into a
-    serving slot.  Non-batch dims must match (same max_len/policy/layout)."""
+    serving slot.  Non-batch dims must match (same max_len/policy/layout).
+
+    When ``dst`` is pooled (DESIGN.md §9) and ``src`` is the striped
+    prefill output, only the striped leaves (length, sink, window ring)
+    copy here; the packed planes land in the pool via
+    :func:`pool_insert_blocks` and the slot's ``block_tbl`` row is owned
+    by the host :class:`~repro.core.block_pool.BlockPool` (the engine
+    flushes it separately), so both are left untouched."""
     sel = (slice(None),) * batch_axis
 
     def one(d, s):
         return d.at[sel + (i,)].set(s[sel + (src_slot,)])
 
-    return jax.tree.map(one, dst, src)
+    def rec(d, s):
+        if not isinstance(d, dict):
+            return jax.tree.map(one, d, s)
+        pooled = is_pooled(d)
+        out = {}
+        for k, v in d.items():
+            if isinstance(v, dict):
+                out[k] = rec(v, s[k])
+            elif pooled and (is_plane_key(k) or k == "block_tbl"):
+                out[k] = v
+            else:
+                out[k] = one(v, s[k])
+        return out
+
+    return rec(dst, src)
 
 
 # ------------------------------------------------------------------- prefill
@@ -237,6 +452,11 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     no-ops — no buffer is touched and ``length`` does not advance.  This is
     the primitive under chunked prefill (DESIGN.md §7), where a chunk padded
     to its compile bucket must append only its real tokens.
+
+    Pooled caches (DESIGN.md §9) route the packed-plane write through the
+    slot's block table (:func:`_put_tok_pool`); invalid rows land in the
+    null block.  Everything else — ring math, sink writes, length — is
+    layout-independent and identical to the striped path.
     """
     policy = as_layer_policy(policy)
     qf = quant_fn or quantize_groups
@@ -245,7 +465,14 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     t = slot_lengths(cache, b)  # (B,)
     ok = jnp.ones((b,), bool) if valid is None else jnp.broadcast_to(
         jnp.asarray(valid), (b,))
+    pooled = is_pooled(cache)
     cache = dict(cache)
+
+    def put_packed(full, idx, val, cond):
+        if pooled:
+            bt = full.shape[1]
+            return _put_tok_pool(full, cache["block_tbl"], idx, bt, val, cond)
+        return _put_tok_where(full, idx, val, cond)
     if policy.is_fp16:
         idx = jnp.clip(t, 0, cache["k"].shape[1] - 1)
         for buf, x in (("k", k_new), ("v", v_new)):
@@ -260,7 +487,8 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
         u_e = t - ns - w  # quantized-region index of the evicted token
         has_q = "qk_codes_hi" in cache and cache["qk_codes_hi"].shape[1] > 0
         if has_q:
-            sq = cache["qk_codes_hi"].shape[1]
+            sq = (cache["block_tbl"].shape[-1] * cache["qk_codes_hi"].shape[1]
+                  if pooled else cache["qk_codes_hi"].shape[1])
             idx = jnp.clip(u_e, 0, sq - 1)
             ek = _gat_tok(cache["win_k"], slot)
             ev = _gat_tok(cache["win_v"], slot)
@@ -270,7 +498,7 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
             for name, qt in (("qk", qk), ("qv", qv)):
                 for kk, vv in qt.items():
                     full = cache[f"{name}_{kk}"]
-                    cache[f"{name}_{kk}"] = _put_tok_where(
+                    cache[f"{name}_{kk}"] = put_packed(
                         full, idx, vv.astype(full.dtype), do_write)
         # write the new token into the ring (or the sink buffer when t < ns)
         is_sink = t < ns
@@ -287,16 +515,16 @@ def decode_append(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     else:
         # no window: quantize immediately (the paper's no-window ablation)
         u = jnp.maximum(t - ns, 0)
-        sq = cache["qk_codes_hi"].shape[1]
+        sq = (cache["block_tbl"].shape[-1] * cache["qk_codes_hi"].shape[1]
+              if pooled else cache["qk_codes_hi"].shape[1])
         idx = jnp.clip(u, 0, sq - 1)
         qk = qf(k_new, policy.bits_k, gsz, alpha_k, policy.fp8_meta)
         qv = qf(v_new, policy.bits_v, gsz, alpha_v, policy.fp8_meta)
         for name, qt in (("qk", qk), ("qv", qv)):
             for kk, vv in qt.items():
                 full = cache[f"{name}_{kk}"]
-                cache[f"{name}_{kk}"] = _put_tok_where(full, idx,
-                                                       vv.astype(full.dtype),
-                                                       ok)
+                cache[f"{name}_{kk}"] = put_packed(full, idx,
+                                                   vv.astype(full.dtype), ok)
         if ns > 0:
             is_sink = t < ns
             sidx = jnp.clip(t, 0, ns - 1)
@@ -354,7 +582,13 @@ def gather_attention_inputs(cache: Cache, head_dim: int, policy: QuantPolicy,
     T = n_sink + S_q + W — per-slot because each batch row sits at its own
     ``length``.  Ordering is [sinks, quantized, window].  The Pallas decode
     kernel consumes the packed segments directly instead.
+
+    Pooled caches (DESIGN.md §9) first gather their striped view via
+    :func:`unpool_cache`, after which the flow is identical — this is what
+    makes the reference backend bit-identical across layouts.
     """
+    if is_pooled(cache):
+        cache = unpool_cache(cache)
     policy = as_layer_policy(policy)
     w, ns = policy.window, policy.n_sink
     t_total = slot_lengths(cache)  # (B,) tokens currently stored per slot

@@ -172,6 +172,66 @@ def blocks_visited(bounds) -> jnp.ndarray:
     return jnp.maximum(hi - lo, 1)
 
 
+# ------------------------------------------------- block-table index math
+# The paged pool (DESIGN.md §9) tiles the packed region into fixed
+# ``block_tokens``-token blocks.  A slot's packed token ``u`` lives at
+# logical block ``u // block_tokens``, offset ``u % block_tokens``; the
+# per-slot block table maps logical -> physical block id, with physical id
+# 0 reserved as the never-read null block.  Ring/window semantics are
+# untouched: ``u`` is exactly the packed index of the striped layout, so
+# every mask above applies unchanged to the pooled view.
+
+def n_table_blocks(packed_len: int, block_tokens: int) -> int:
+    """Logical blocks covering a ``packed_len``-token packed region.
+
+    The pool requires the packed capacity to tile exactly — a ragged tail
+    block would make the gathered striped view longer than the striped
+    buffer and break bit-parity between the two layouts."""
+    if block_tokens < 1:
+        raise ValueError(f"block_tokens must be >= 1, got {block_tokens}")
+    if packed_len % block_tokens:
+        raise ValueError(
+            f"packed region of {packed_len} tokens does not tile into "
+            f"{block_tokens}-token blocks; round the capacity so that "
+            f"(max_len - n_sink - window) % block_tokens == 0")
+    return packed_len // block_tokens
+
+
+def logical_block(u, block_tokens: int):
+    """Packed token index ``u`` -> its logical block index."""
+    return jnp.asarray(u) // block_tokens
+
+
+def block_offset(u, block_tokens: int):
+    """Packed token index ``u`` -> its offset inside its logical block."""
+    return jnp.asarray(u) % block_tokens
+
+
+def physical_block(table, lb) -> jnp.ndarray:
+    """Per-slot logical -> physical block lookup.
+
+    table: (B, NB) int32 block table; lb: (B,) per-slot logical block
+    index.  Returns (B,) physical block ids (0 = the null block for
+    unallocated entries)."""
+    lb = jnp.asarray(lb)
+    return jnp.take_along_axis(jnp.asarray(table), lb[:, None], axis=1)[:, 0]
+
+
+def blocks_spanned(u_lo: int, u_hi: int, block_tokens: int,
+                   n_blocks: int) -> range:
+    """Host helper: logical blocks touched by packed writes at
+    ``u in [u_lo, u_hi)``, clipped into the table (writes past the packed
+    frontier clamp onto the last block, mirroring the device-side
+    ``jnp.clip`` in ``kv_cache.decode_append``).  Negative ``u`` (window
+    not yet full) touches nothing."""
+    if n_blocks <= 0 or u_hi <= 0 or u_hi <= u_lo:
+        return range(0)
+    lo = max(u_lo, 0)
+    first = min(lo // block_tokens, n_blocks - 1)
+    last = min((u_hi - 1) // block_tokens, n_blocks - 1)
+    return range(first, last + 1)
+
+
 def attend_ok(pos, stored, t_now, window_eff) -> jnp.ndarray:
     """Final attendability: stored ∧ causal ∧ inside the local band.
 

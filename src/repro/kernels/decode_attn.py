@@ -139,6 +139,7 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
                        scale: float, interpret: Optional[bool] = None,
                        block_s: int = BLOCK_S, softcap: float = 0.0,
                        block_bounds: Optional[jnp.ndarray] = None,
+                       block_table: Optional[jnp.ndarray] = None,
                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns flash triple (num (B,H,Gq,D), m (B,H,Gq,1), l (B,H,Gq,1)).
 
@@ -157,12 +158,34 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
     batch's max ``hi``; under jit they are traced, the grid stays
     capacity-sized, and pruning rides entirely on the remap + skip.
 
+    ``block_table`` (DESIGN.md §9): optional (B, NB) int32 per-slot
+    logical->physical block map for the pooled layout, in which case
+    k_qt/v_qt leaves are pool-major — (NP, BT, Hkv, ...) with BT ==
+    ``block_s`` — and the logical sequence length is ``NB * BT``.  The
+    table rides in as a second scalar-prefetch operand so the plane
+    BlockSpec index maps gather ``tbl[slot, logical_block]`` — the
+    PagedAttention-style remap — while the mask, bounds, and flash math
+    all stay in logical coordinates.  Dead grid steps clamp onto a live
+    logical block, hence a repeated *physical* id, so the DMA-eliding
+    pruning behaviour carries over unchanged.  Table contents are data,
+    not shape: tables growing/shrinking under ragged traffic never
+    recompile.
+
     ``interpret=None`` resolves via ``kernels._compat.resolve_interpret``:
     compiled on TPU, interpreter elsewhere, ``REPRO_PALLAS_INTERPRET``
     overriding.
     """
     b, hkv, gq, d = q.shape
-    s_len = k_qt["codes_hi"].shape[1]
+    pooled = block_table is not None
+    if pooled:
+        block_table = jnp.asarray(block_table, jnp.int32)
+        bt = k_qt["codes_hi"].shape[1]
+        assert block_s == bt, (
+            f"pooled mode requires block_s == block_tokens, got "
+            f"block_s={block_s} block_tokens={bt}")
+        s_len = block_table.shape[1] * bt
+    else:
+        s_len = k_qt["codes_hi"].shape[1]
     assert s_len % block_s == 0, (s_len, block_s)
     interpret = resolve_interpret(interpret)
     gsz = min(policy.group_size, head_dim)
@@ -192,15 +215,36 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
         hi1 = jnp.maximum(bnd[bh // hkv, 1] - 1, lo)
         return jnp.clip(s, lo, hi1)
 
+    # Index maps: pooled mode prefetches TWO scalar operands (bounds, table),
+    # so every map grows a trailing ``tbl`` argument.  Only the plane map
+    # actually reads it — the q/mask/out maps and the logical-coordinate
+    # `_blk` clamp are identical across layouts.
+    if pooled:
+        def _head_map(bh, s, bnd, tbl):
+            return (bh // hkv, bh % hkv, 0, 0)
+
+        def _mask_map(bh, s, bnd, tbl):
+            return (bh // hkv, _blk(bh, s, bnd), 0)
+
+        def _plane_map(bh, s, bnd, tbl):
+            return (tbl[bh // hkv, _blk(bh, s, bnd)], bh % hkv, 0, 0)
+    else:
+        def _head_map(bh, s, bnd):
+            return (bh // hkv, bh % hkv, 0, 0)
+
+        def _mask_map(bh, s, bnd):
+            return (bh // hkv, _blk(bh, s, bnd), 0)
+
+        def _plane_map(bh, s, bnd):
+            return (bh // hkv, bh % hkv, _blk(bh, s, bnd), 0)
+
     mask = jnp.asarray(mask, jnp.float32)
     if mask.ndim == 1:
         mask = jnp.broadcast_to(mask[None], (b, s_len))
     ins = [q, mask.reshape(b, s_len, 1)]
     in_specs = [
-        pl.BlockSpec((1, 1, gq, d),
-                     lambda bh, s, bnd: (bh // hkv, bh % hkv, 0, 0)),
-        pl.BlockSpec((1, block_s, 1),
-                     lambda bh, s, bnd: (bh // hkv, _blk(bh, s, bnd), 0)),
+        pl.BlockSpec((1, 1, gq, d), _head_map),
+        pl.BlockSpec((1, block_s, 1), _mask_map),
     ]
     for qt, layout in ((k_qt, layout_k), (v_qt, layout_v)):
         for name, _ in zip(("hi", "lo"), layout):
@@ -208,28 +252,22 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
                 arr = _tile(qt, f"{part}_{name}")
                 ins.append(arr)
                 w = arr.shape[-1]
-                in_specs.append(pl.BlockSpec(
-                    (1, 1, block_s, w),
-                    lambda bh, s, bnd: (bh // hkv, bh % hkv,
-                                        _blk(bh, s, bnd), 0)))
+                in_specs.append(pl.BlockSpec((1, 1, block_s, w), _plane_map))
 
     out_shape = [jax.ShapeDtypeStruct((b, hkv, gq, d), jnp.float32),
                  jax.ShapeDtypeStruct((b, hkv, gq, 1), jnp.float32),
                  jax.ShapeDtypeStruct((b, hkv, gq, 1), jnp.float32)]
     out_specs = [
-        pl.BlockSpec((1, 1, gq, d),
-                     lambda bh, s, bnd: (bh // hkv, bh % hkv, 0, 0)),
-        pl.BlockSpec((1, 1, gq, 1),
-                     lambda bh, s, bnd: (bh // hkv, bh % hkv, 0, 0)),
-        pl.BlockSpec((1, 1, gq, 1),
-                     lambda bh, s, bnd: (bh // hkv, bh % hkv, 0, 0)),
+        pl.BlockSpec((1, 1, gq, d), _head_map),
+        pl.BlockSpec((1, 1, gq, 1), _head_map),
+        pl.BlockSpec((1, 1, gq, 1), _head_map),
     ]
     scratch = [pltpu.VMEM((gq, d), jnp.float32),
                pltpu.VMEM((gq, 1), jnp.float32),
                pltpu.VMEM((gq, 1), jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2 if pooled else 1,
         grid=(b * hkv, grid_s),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -238,13 +276,26 @@ def decode_attn_pallas(q: jnp.ndarray, k_qt: dict, v_qt: dict,
     extra = ({} if CompilerParams is None else
              {"compiler_params": CompilerParams(
                  dimension_semantics=("parallel", "arbitrary"))})
+    kern = functools.partial(_kernel, layout_k=layout_k, layout_v=layout_v,
+                             fp8_meta=policy.fp8_meta, scale=scale,
+                             softcap=softcap, hkv=hkv, n_sblocks=grid_s)
+    if pooled:
+        base = kern
+
+        def kern(bnd_ref, tbl_ref, *rest):
+            # the table is consumed by the BlockSpec index maps; the kernel
+            # body itself works in logical coordinates and never reads it.
+            del tbl_ref
+            return base(bnd_ref, *rest)
+
+        scalars = (block_bounds, block_table)
+    else:
+        scalars = (block_bounds,)
     num, m, l = pl.pallas_call(
-        functools.partial(_kernel, layout_k=layout_k, layout_v=layout_v,
-                          fp8_meta=policy.fp8_meta, scale=scale,
-                          softcap=softcap, hkv=hkv, n_sblocks=grid_s),
+        kern,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
         **extra,
-    )(block_bounds, *ins)
+    )(*scalars, *ins)
     return num, m[..., 0:1], l[..., 0:1]

@@ -148,11 +148,26 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
     contribution is exactly zero — so it defaults on; False keeps the
     capacity-proportional baseline (benchmarks compare the two).
 
+    Pooled caches (DESIGN.md §9) take the fast path: the per-slot
+    ``block_tbl`` scalar-prefetches into the kernel alongside the pruning
+    bounds and the plane BlockSpecs gather physical blocks in-kernel — no
+    host-side gather, no recompiles as tables change, and the tile grid is
+    the pool's ``block_tokens`` so the flash merge order (hence bits) maps
+    onto a striped run at ``block_s == block_tokens``.  The ``local_slice``
+    and ``packed_override`` levers pre-slice plane tensors, which has no
+    pooled analogue — those calls fall back to the gathered striped view
+    (``kv_cache.unpool_cache``), still bit-identical.
+
     ``interpret=None`` resolves compiled-on-TPU / interpreter-elsewhere
     (``REPRO_PALLAS_INTERPRET`` overriding; ``kernels._compat``).
 
     q: (B, 1, Hq, D) -> (B, 1, Hq, D).
     """
+    pooled = "block_tbl" in cache
+    if pooled and (packed_override is not None or local_slice):
+        from ..core import kv_cache as kvc
+        cache = kvc.unpool_cache(cache)
+        pooled = False
     w, ns = policy.window, policy.n_sink
     b, _, hq, d = q.shape
     lens = kvc_slot_lengths(cache, b)
@@ -177,8 +192,30 @@ def pallas_decode_attention(q, cache, policy: QuantPolicy, *, scale: float,
     qg = q.reshape(b, hkv, hq // hkv, d)
     parts = []
 
-    s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
-    if s_q > 0:
+    if pooled:
+        bt = cache["qk_codes_hi"].shape[1]
+        s_q = cache["block_tbl"].shape[-1] * bt
+    else:
+        s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
+    if pooled:
+        # pooled fast path: planes stay pool-major; the kernel remaps
+        # physical blocks via the prefetched table.  The logical capacity
+        # already tiles into block_tokens, so no padding is needed and the
+        # mask/bounds math runs in logical coordinates exactly as striped.
+        k_qt = {kk[3:]: vv for kk, vv in cache.items()
+                if kk.startswith("qk_")}
+        v_qt = {kk[3:]: vv for kk, vv in cache.items()
+                if kk.startswith("qv_")}
+        j = jnp.arange(s_q, dtype=jnp.int32)
+        ok = _packed_ok(j, lens, t_now, weff, policy, b)       # (B, S_q)
+        bounds = (seg.packed_block_bounds(ok, bt) if prune_blocks else None)
+        num, m, l = decode_attn_pallas(qg, k_qt, v_qt, ok.astype(jnp.float32),
+                                       policy, d, scale, interpret=interpret,
+                                       block_s=bt, softcap=softcap,
+                                       block_bounds=bounds,
+                                       block_table=cache["block_tbl"])
+        parts.append((num, m[..., 0], l[..., 0]))
+    elif s_q > 0:
         qc = seg.quantized_count(lens, ns, w)  # (B,)
         if packed_override is not None:
             # pre-sliced (hoisted) local view: (k_qt, v_qt, j_positions)
@@ -256,7 +293,13 @@ def decode_block_report(cache, policy: QuantPolicy, head_dim: int, *,
     vs ``B * total * bytes_per_block`` unpruned — the blocks-visited and
     bytes/step columns of the ragged-occupancy bench.
     """
-    s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
+    pooled = "block_tbl" in cache
+    if pooled:
+        # pooled layout (DESIGN.md §9): tile = pool block, logical capacity
+        # from the table — planes are pool-major, not per-slot.
+        s_q = cache["block_tbl"].shape[-1] * cache["qk_codes_hi"].shape[1]
+    else:
+        s_q = cache["qk_codes_hi"].shape[1] if "qk_codes_hi" in cache else 0
     lens = kvc_slot_lengths(cache)
     b = lens.shape[0]
     if s_q == 0 or policy.is_fp16:
@@ -266,7 +309,10 @@ def decode_block_report(cache, policy: QuantPolicy, head_dim: int, *,
     t_now = lens - 1 if q_pos is None else jnp.broadcast_to(
         jnp.asarray(q_pos), (b,))
     weff = seg.effective_window(window)
-    bs, s_pad = _block_pad(s_q, block_s)
+    if pooled:
+        bs, s_pad = cache["qk_codes_hi"].shape[1], s_q
+    else:
+        bs, s_pad = _block_pad(s_q, block_s)
     j = _pad_to(jnp.arange(s_q, dtype=jnp.int32), s_pad, axis=0, fill=_FAR)
     ok = _packed_ok(j, lens, t_now, weff, policy, b)
     bounds = seg.packed_block_bounds(ok, bs)

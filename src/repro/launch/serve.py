@@ -100,6 +100,16 @@ def main(argv=None):
                          "in chunks of at most this many tokens, bounded "
                          "compile shapes (0 = whole-prompt prefill, one "
                          "executable per distinct prompt length)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged KV block pool (DESIGN.md §9): share this "
+                         "many physical quantized-KV blocks per band across "
+                         "all slots, with per-slot block tables, "
+                         "content-addressed prefix sharing and block-level "
+                         "admission (0 = per-slot stripes)")
+    ap.add_argument("--pool-block-tokens", type=int, default=16,
+                    help="tokens per pool block (>= 8; max_len is rounded "
+                         "up so every quantized band tiles into whole "
+                         "blocks)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -147,13 +157,39 @@ def main(argv=None):
 
     max_len = (args.prompt_len + args.prompt_jitter + args.new_tokens + jit
                + args.steps_per_sync)
+    if args.pool_blocks:
+        # round max_len up so every quantized band's packed region
+        # (max_len - n_sink - window) tiles into whole pool blocks
+        bt = args.pool_block_tokens
+        for _ in range(bt):
+            if all(p.is_fp16 or (max_len - p.n_sink - p.window) % bt == 0
+                   for p in schedule.distinct()):
+                break
+            max_len += 1
     eng = Engine(params, cfg, schedule, batch_slots=args.batch,
                  max_len=max_len, backend=args.backend,
                  steps_per_sync=args.steps_per_sync,
-                 prefill_chunk=args.prefill_chunk or None)
+                 prefill_chunk=args.prefill_chunk or None,
+                 pool_blocks=args.pool_blocks or None,
+                 pool_block_tokens=args.pool_block_tokens)
     t0 = time.time()
     handles = [eng.submit(r) for r in reqs]
-    eng.run(handles)
+    occ_at_finish = {}
+    if args.pool_blocks:
+        # step manually so the pool occupancy each request finished at is
+        # sampled live (run() would only expose the drained end state)
+        while any(not h.finished for h in handles):
+            before = eng.stats()["used"]
+            if not eng.step():
+                break
+            # a request's tick-local occupancy: blocks held entering the
+            # tick vs still held after its retire released the finishers
+            used = max(before, eng.stats()["used"])
+            for h in handles:
+                if h.finished and h.rid not in occ_at_finish:
+                    occ_at_finish[h.rid] = used
+    else:
+        eng.run(handles)
     dt = time.time() - t0
 
     total_toks = sum(len(h.tokens) for h in handles)
@@ -185,6 +221,22 @@ def main(argv=None):
               f"compiled prefill shapes={eng.prefill_shapes} "
               f"(whole-prompt mode would compile one per distinct "
               f"prompt length)")
+    if args.pool_blocks:
+        st = eng.stats()
+        print("  req  plen  new  ttft_ms  lat_ms  pool_used")
+        for h in handles:
+            print(f"  {h.rid:<4d} {len(h.request.prompt):<5d} "
+                  f"{len(h.tokens):<4d} "
+                  f"{(h.first_token_time - h.submit_time) * 1e3:<8.0f} "
+                  f"{(h.finish_time - h.submit_time) * 1e3:<7.0f} "
+                  f"{occ_at_finish.get(h.rid, 0)}/{st['blocks']}")
+        print(f"pool: {st['pool_blocks']} blocks x "
+              f"{st['pool_block_tokens']} tok/band, peak used "
+              f"{st['peak_used']} ({st['peak_resident_bytes']} B packed "
+              f"vs {st['striped_worst_case_bytes']} B striped worst case), "
+              f"prefix hit rate {st['prefix_hit_rate']:.2f} "
+              f"({st['prefix_hits']} hits / {st['prefix_misses']} misses), "
+              f"cow copies {st['cow_copies']}")
     print(f"KV bytes/token-head: fp16={fp16_b}  skvq={q_b} "
           f"({fp16_b / q_b:.1f}x compression)")
     print("sample:", handles[0].result()[:16])

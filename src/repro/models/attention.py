@@ -251,7 +251,15 @@ def decode_attention_skvq(q, cache, cfg: ArchConfig, policy: QuantPolicy,
         backend's work also scales with live tokens and the two backends
         stay comparable at equal occupancy.  A dead tile's merge weight is
         exactly zero, so outputs are unchanged.
+
+    Pooled caches (DESIGN.md §9) gather their striped view up front
+    (``kv_cache.unpool_cache``) and then run the identical flow — the
+    gathered planes are shape- and value-identical to the striped cache
+    the same traffic would produce, so pooled decode is bit-identical to
+    striped decode on this backend by construction.
     """
+    if kvc.is_pooled(cache):
+        cache = kvc.unpool_cache(cache)
     w, ns = policy.window, policy.n_sink
     b, _, hq, d = q.shape
     lens = kvc.slot_lengths(cache, b)  # (B,)

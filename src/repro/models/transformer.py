@@ -930,8 +930,12 @@ def decode_step(params: Params, cfg: ArchConfig, token, caches,
             # gather shared by every local layer.
             presliced = None
             lw = cfg.local_window
+            # pooled bands (DESIGN.md §9) have pool-major plane stacks with
+            # no per-slot token axis to preslice; skip the hoist and let the
+            # backend's local_slice path gather the striped view instead.
             s_q = (cstack["qk_codes_hi"].shape[2]
-                   if "qk_codes_hi" in cstack else 0)
+                   if "qk_codes_hi" in cstack and "block_tbl" not in cstack
+                   else 0)
             any_local = any(cfg.layer_is_local(start + i) for i in range(n))
             if lw > 0 and any_local and s_q > lw:
                 # per-slot window frontier: each row slices its own last lw

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core import kv_cache as kvc
+from ..core import segments as seg
+from ..core.block_pool import BlockPool, prefix_block_keys
 from ..core.policy import QuantPolicy, PolicySchedule, as_schedule
 from ..models.config import ArchConfig
 from ..models import backends as bk
@@ -290,12 +292,30 @@ class Engine:
     longer head-of-line-blocks decoding, ragged traffic compiles at most
     ``len(chunk_buckets)`` prefill executables, and greedy streams stay
     bit-identical to the whole-prompt path.
+
+    ``pool_blocks`` (DESIGN.md §9) switches the packed quantized planes
+    from per-slot stripes to a shared **paged block pool** of that many
+    physical ``pool_block_tokens``-token blocks per quantized band, with
+    per-slot block tables and content-addressed prefix sharing: admission
+    accounts in free blocks rather than free slots (a request is admitted
+    when every band's pool can cover its prompt blocks — minus resident
+    prefix hits — plus a decode reservation), identical prompt prefixes
+    quantize once and share blocks copy-on-write, and decode is
+    bit-identical to the striped layout on both backends.  Memory then
+    scales with *live* tokens across the batch instead of
+    ``batch_slots * max_len`` — the multiplicative partner to the 2-bit
+    quantization and block pruning.  Requires the dense family and that
+    every quantized band's packed capacity (``max_len - n_sink - window``)
+    is a multiple of ``pool_block_tokens``.  ``stats()`` reports occupancy,
+    prefix hit rate and resident bytes.
     """
 
     def __init__(self, params, cfg: ArchConfig, policy, batch_slots: int,
                  max_len: int, calib=None, seed: int = 0,
                  backend=None, steps_per_sync: int = 8, dtype=None,
-                 prefill_chunk: Optional[int] = None, chunk_buckets=None):
+                 prefill_chunk: Optional[int] = None, chunk_buckets=None,
+                 pool_blocks: Optional[int] = None,
+                 pool_block_tokens: int = 16):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if max_len < 1:
@@ -356,6 +376,64 @@ class Engine:
         self._next_rid = 0
         self.n_completed = 0   # callers keep their own handles for stats
 
+        # ----- paged block pool (DESIGN.md §9) -----
+        self.pool_blocks = pool_blocks
+        self.pool_block_tokens = int(pool_block_tokens)
+        self._pools: Dict[tuple, BlockPool] = {}
+        self._pool_bands: List[tuple] = []  # (group, bkey, bs, be, pol, nb)
+        self._pool_insert_fns: Dict[tuple, Callable] = {}
+        self._pool_copy_fn: Optional[Callable] = None
+        self._pending_insert: Dict[int, dict] = {}   # slot -> band miss pairs
+        self._pending_register: Dict[int, dict] = {} # slot -> band (key, phys)
+        self._hostlen = np.zeros((b,), np.int64)     # device length mirror
+        self._stall_reason: Optional[str] = None
+        if pool_blocks is not None:
+            self._init_pool()
+
+    def _init_pool(self):
+        cfg, bt = self.cfg, self.pool_block_tokens
+        if self.pool_blocks < 1:
+            raise ValueError(f"pool_blocks must be >= 1, "
+                             f"got {self.pool_blocks}")
+        if bt < 8:
+            raise ValueError(f"pool_block_tokens must be >= 8 (the pallas "
+                             f"sublane tile minimum), got {bt}")
+        if cfg.family != "dense":
+            raise ValueError(
+                f"the paged KV block pool supports the dense family only "
+                f"(the scan-family recurrence has no packed planes to "
+                f"pool), got family={cfg.family!r}")
+        nf = cfg.first_dense
+        for group, g0, g1 in (("dense", 0, nf), ("scan", nf, cfg.n_layers)):
+            if g1 == g0:
+                continue
+            for bs, be, pol in self.schedule.bands(g0, g1):
+                if pol.is_fp16:
+                    continue      # fp16 bands have no packed planes: striped
+                sq = max(0, self.max_len - pol.n_sink - pol.window)
+                if sq == 0:
+                    continue      # window+sinks cover max_len: striped
+                if sq % bt:
+                    raise ValueError(
+                        f"band L{bs:03d} packed capacity {sq} (max_len="
+                        f"{self.max_len} - n_sink={pol.n_sink} - window="
+                        f"{pol.window}) is not a multiple of "
+                        f"pool_block_tokens={bt}; choose max_len so every "
+                        f"quantized band's packed region tiles into whole "
+                        f"pool blocks")
+                nbytes = kvc.pool_block_nbytes(
+                    cfg.n_kv_heads, cfg.head_dim, pol, bt) * (be - bs)
+                self._pools[(group, f"L{bs:03d}")] = BlockPool(
+                    self.pool_blocks, self.batch_slots, sq // bt,
+                    block_nbytes=nbytes)
+                self._pool_bands.append(
+                    (group, f"L{bs:03d}", bs, be, pol, sq // bt))
+        if not self._pools:
+            raise ValueError(
+                "pool_blocks was set but no band has a packed region to "
+                "pool (every band is fp16 or its window+sinks cover "
+                "max_len); drop pool_blocks to serve striped")
+
     # ------------------------------------------------------------ public API
 
     def submit(self, request: Request) -> StreamHandle:
@@ -381,6 +459,18 @@ class Engine:
                 f"exceeds the engine's per-slot cache capacity "
                 f"max_len={self.max_len}; shorten the prompt, lower "
                 f"max_new, or build the Engine with a larger max_len")
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            need = self._eventual_blocks(prompt.size, request.max_new,
+                                         pol, nb)
+            if need > self.pool_blocks:
+                st = self._pools[(group, bkey)].stats()
+                raise ValueError(
+                    f"Request needs up to {need} pool blocks in band "
+                    f"{bkey} ({group}) but the engine's pool only has "
+                    f"pool_blocks={self.pool_blocks} "
+                    f"({st['used']} used, {st['free']} free, "
+                    f"{st['reserved']} reserved); raise pool_blocks or "
+                    f"shorten the request — it could never be admitted")
         request = dataclasses.replace(request, prompt=prompt)
         handle = StreamHandle(request, self._next_rid)
         self._next_rid += 1
@@ -447,7 +537,60 @@ class Engine:
             "layer_cache_bytes": layer_bytes,
             "cache_bytes_per_slot": sum(layer_bytes),
         })
+        if self._pools:
+            info.update({
+                "pooled": True,
+                "pool_blocks": self.pool_blocks,
+                "pool_block_tokens": self.pool_block_tokens,
+                "pool_bands": {
+                    f"{g}/{k}": self._pools[(g, k)].block_nbytes
+                    for g, k, *_ in self._pool_bands},
+                "pool_bytes": sum(self.pool_blocks * p.block_nbytes
+                                  for p in self._pools.values()),
+            })
+        else:
+            info["pooled"] = False
         return info
+
+    def stats(self) -> dict:
+        """Pool occupancy + sharing counters (DESIGN.md §9).
+
+        Per band and aggregated: blocks used/free/reserved, prefix hit
+        rate, copy-on-write copies, resident *packed* bytes, and the
+        striped worst case (``batch_slots`` full stripes) those bytes
+        replace.  ``admission_stall`` carries the most recent reason the
+        FIFO head could not be admitted, for queue diagnostics."""
+        out: dict = {"pooled": bool(self._pools)}
+        if not self._pools:
+            return out
+        bands = {}
+        agg = {k: 0 for k in ("blocks", "used", "free", "reserved",
+                              "peak_used", "prefix_hits", "prefix_misses",
+                              "cow_copies", "resident_bytes")}
+        striped_worst = peak_bytes = 0
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            pool = self._pools[(group, bkey)]
+            st = pool.stats()
+            st["n_table"] = nb
+            bands[f"{group}/{bkey}"] = st
+            for k in agg:
+                agg[k] += st[k]
+            striped_worst += self.batch_slots * nb * pool.block_nbytes
+            peak_bytes += pool.peak_used * pool.block_nbytes
+        h, m = agg["prefix_hits"], agg["prefix_misses"]
+        out.update(agg)
+        out.update({
+            "prefix_hit_rate": h / (h + m) if h + m else 0.0,
+            "peak_resident_bytes": peak_bytes,
+            "striped_worst_case_bytes": striped_worst,
+            "pool_blocks": self.pool_blocks,
+            "pool_block_tokens": self.pool_block_tokens,
+            "bands": bands,
+            "queue_depth": len(self._queue),
+        })
+        if self._stall_reason:
+            out["admission_stall"] = self._stall_reason
+        return out
 
     @property
     def prefill_shapes(self) -> tuple:
@@ -475,6 +618,9 @@ class Engine:
                 self._slot_handle[i] = None
                 self._done[i] = True
                 self._eos[i] = -1
+                for pool in self._pools.values():
+                    pool.release_slot(i)   # deref blocks; shared ones live on
+                self._hostlen[i] = 0
                 if self._caches is not None:
                     if self._reset is None:
                         self._reset = jax.jit(
@@ -497,10 +643,43 @@ class Engine:
             return
         if self.prefill_chunk is not None:
             if self._prefill_job is None:
-                handle = self._queue.pop(0)
+                if self._pools:
+                    plan = self._plan_pool_admission(
+                        self._queue[0].request, free[0])
+                    if plan is None:
+                        return           # FIFO: head waits for free blocks
+                    handle = self._queue.pop(0)
+                    # content lands at _finish_prefill: defer registration
+                    self._commit_pool_admission(handle, free[0], plan,
+                                                register=False)
+                else:
+                    handle = self._queue.pop(0)
                 self._prefill_job = _PrefillJob(
                     handle=handle, slot=free[0], pos=0,
                     state=self._take_chunk_state())
+            return
+        if self._pools:
+            # pooled admission is FIFO in *blocks*: the head request is
+            # admitted only when every band's pool covers its prompt blocks
+            # (minus resident prefix hits) plus its decode reservation
+            taken: List[tuple] = []
+            self._stall_reason = None
+            while self._queue and len(taken) < len(free):
+                slot = free[len(taken)]
+                plan = self._plan_pool_admission(self._queue[0].request, slot)
+                if plan is None:
+                    break
+                h = self._queue.pop(0)
+                self._commit_pool_admission(h, slot, plan)
+                taken.append((h, slot))
+            if not taken:
+                return
+            pgroups: Dict[int, List[tuple]] = {}
+            for h, slot in taken:
+                pgroups.setdefault(len(h.request.prompt), []).append((h, slot))
+            for plen, pairs in pgroups.items():
+                self._admit_group([h for h, _ in pairs],
+                                  [s for _, s in pairs])
             return
         take, rest = self._queue[:len(free)], self._queue[len(free):]
         self._queue = rest
@@ -514,6 +693,194 @@ class Engine:
         it = iter(free)
         for plen, hs in groups.items():
             self._admit_group(hs, [next(it) for _ in hs])
+
+    # ----------------------------------------------- paged block pool details
+
+    def _eventual_blocks(self, plen: int, max_new: int, pol, nb: int) -> int:
+        """Worst-case pool blocks a request will ever hold in one band:
+        every packed position its stream can reach, including up to
+        ``steps_per_sync - 1`` clipped overshoot writes past max_len, all
+        landing inside the nb-block table."""
+        bt = self.pool_block_tokens
+        qc_end = min(max(0, plen + max_new + self.steps_per_sync
+                         - pol.n_sink - pol.window), nb * bt)
+        return -(-qc_end // bt)
+
+    def _plan_pool_admission(self, req: Request, slot: int):
+        """Dry-run admission for one request: per band, the prefix-key
+        lookups and the block budget.  Returns None (setting
+        ``_stall_reason``) if any band lacks free blocks — nothing is
+        allocated until :meth:`_commit_pool_admission`."""
+        plen = len(req.prompt)
+        plans = {}
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            pool = self._pools[(group, bkey)]
+            full_keys, tail_key = prefix_block_keys(
+                req.prompt.tolist(), pol.n_sink, pol.window,
+                self.pool_block_tokens, seed=f"{group}:{bkey}:{pol}")
+            hits = [(lb, key, pool.lookup(key))
+                    for lb, key in enumerate(full_keys)]
+            n_hit = sum(1 for _, _, p in hits if p is not None)
+            eventual = self._eventual_blocks(plen, req.max_new, pol, nb)
+            if eventual - n_hit > pool.available():
+                st = pool.stats()
+                self._stall_reason = (
+                    f"queued: the head request needs "
+                    f"{eventual - n_hit} blocks in band {bkey} ({group}) "
+                    f"but only {pool.available()} are uncommitted "
+                    f"({st['used']}/{st['blocks']} used, "
+                    f"{st['reserved']} reserved for in-flight decodes, "
+                    f"{st['resident_bytes']} resident bytes)")
+                return None
+            tail_phys = pool.lookup(tail_key) if tail_key else None
+            plans[(group, bkey)] = (hits, tail_key, tail_phys,
+                                    eventual, n_hit)
+        return plans
+
+    def _commit_pool_admission(self, h: StreamHandle, slot: int, plans,
+                               register: bool = True):
+        """Apply a planned admission: ref prefix hits, alloc misses into the
+        slot's table, reserve the remaining decode blocks, and record which
+        blocks still need their quantized content inserted after prefill."""
+        pend, pend_reg = {}, {}
+        for (group, bkey), (hits, tail_key, tail_phys, eventual,
+                            n_hit) in plans.items():
+            pool = self._pools[(group, bkey)]
+            miss_pairs, reg, now = [], [], 0
+            for lb, key, phys in hits:
+                if phys is not None:
+                    pool.ref(phys)
+                    pool.assign(slot, lb, phys)
+                    pool.hits += 1
+                else:
+                    fresh = pool.alloc(slot)
+                    pool.assign(slot, lb, fresh)
+                    pool.misses += 1
+                    miss_pairs.append((lb, fresh))
+                    reg.append((key, fresh))
+                    now += 1
+            if tail_key is not None:
+                if tail_phys is not None:
+                    pool.ref(tail_phys)
+                    pool.assign(slot, len(hits), tail_phys)
+                    pool.hits += 1
+                else:
+                    fresh = pool.alloc(slot)
+                    pool.assign(slot, len(hits), fresh)
+                    pool.misses += 1
+                    miss_pairs.append((len(hits), fresh))
+                    reg.append((tail_key, fresh))
+                    now += 1
+            # decode still needs (eventual - full hits - allocated-now)
+            # blocks; a shared tail counts — its first write goes CoW
+            pool.set_reservation(slot, max(0, eventual - n_hit - now))
+            if register:
+                for key, phys in reg:
+                    pool.register(key, phys)
+            else:
+                pend_reg[(group, bkey)] = reg
+            pend[(group, bkey)] = miss_pairs
+        self._pending_insert[slot] = pend
+        if not register:
+            self._pending_register[slot] = pend_reg
+
+    def _pool_insert_fn(self, group: str, bkey: str) -> Callable:
+        key = (group, bkey)
+        if key not in self._pool_insert_fns:
+            self._pool_insert_fns[key] = jax.jit(
+                lambda d, s, p, r: kvc.pool_insert_blocks(
+                    d, s, p, src_slot=r, pool_axis=1),
+                donate_argnums=0)
+        return self._pool_insert_fns[key]
+
+    def _band_cache_ref(self, group: str, bkey: str):
+        g = self._caches[group]
+        return g if "length" in g else g[bkey]
+
+    def _set_band_cache(self, group: str, bkey: str, cache):
+        g = self._caches[group]
+        if "length" in g:
+            self._caches[group] = cache
+        else:
+            g[bkey] = cache
+
+    @staticmethod
+    def _band_cache_src(caches, group: str, bkey: str):
+        g = caches[group]
+        return g if "length" in g else g[bkey]
+
+    def _apply_pool_insert(self, slot: int, src_caches, row: int):
+        """Quantize-once commit: copy the slot's *miss* blocks from its
+        freshly-prefilled striped cache into the pool (hits are already
+        resident and are never re-inserted), then register any deferred
+        prefix keys now that the content is on device."""
+        pend = self._pending_insert.pop(slot, None)
+        pend_reg = self._pending_register.pop(slot, {})
+        if pend is None:
+            return
+        for (group, bkey), miss_pairs in pend.items():
+            if miss_pairs:
+                pool = self._pools[(group, bkey)]
+                pairs = np.zeros((pool.n_table, 2), np.int32)
+                pairs[:len(miss_pairs)] = miss_pairs
+                out = self._pool_insert_fn(group, bkey)(
+                    self._band_cache_ref(group, bkey),
+                    self._band_cache_src(src_caches, group, bkey),
+                    jnp.asarray(pairs), jnp.int32(row))
+                self._set_band_cache(group, bkey, out)
+            for key, phys in pend_reg.get((group, bkey), ()):
+                self._pools[(group, bkey)].register(key, phys)
+
+    def _pool_prewrite(self):
+        """Copy-on-write pass before a decode chunk: every packed block the
+        next ``steps_per_sync`` ring-evictions can touch must be privately
+        owned by its slot.  Shared blocks are copied to fresh physical ids
+        (consuming the slot's reservation); exclusively-held blocks merely
+        drop their prefix-hash registration — they are about to diverge
+        from the content the hash names."""
+        sps, bt = self.steps_per_sync, self.pool_block_tokens
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            pool = self._pools[(group, bkey)]
+            pairs = []
+            for i in range(self.batch_slots):
+                if self._slot_handle[i] is None:
+                    continue
+                u_lo = int(self._hostlen[i]) - pol.n_sink - pol.window
+                for lb in seg.blocks_spanned(u_lo, u_lo + sps, bt, nb):
+                    work = pool.ensure_writable(i, lb)
+                    if work is not None and work[0] == "copy":
+                        pairs.append((work[1], work[2]))
+            if pairs:
+                if self._pool_copy_fn is None:
+                    self._pool_copy_fn = jax.jit(
+                        lambda c, p: kvc.pool_copy_block(c, p, pool_axis=1),
+                        donate_argnums=0)
+                # a span of sps tokens touches at most ceil((sps-1)/bt)+1
+                # blocks per slot; fixed capacity -> one compiled copy shape
+                cap = self.batch_slots * ((sps - 1 + bt - 1) // bt + 1)
+                arr = np.zeros((cap, 2), np.int32)
+                arr[:len(pairs)] = pairs
+                self._set_band_cache(
+                    group, bkey,
+                    self._pool_copy_fn(self._band_cache_ref(group, bkey),
+                                       jnp.asarray(arr)))
+
+    def _flush_tables(self):
+        """Push dirty host block tables to the device caches.  Rows of
+        slots with no active handle are masked to the null block so a
+        freewheeling (retired or mid-chunked-prefill) device row can never
+        write into committed pool blocks."""
+        live = np.array([h is not None for h in self._slot_handle],
+                        np.int32)
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            pool = self._pools[(group, bkey)]
+            if not pool.dirty:
+                continue
+            tbl = jnp.asarray(pool.tables * live[:, None])
+            cache = self._band_cache_ref(group, bkey)
+            cache["block_tbl"] = jnp.broadcast_to(
+                tbl[None], (be - bs,) + tbl.shape)
+            pool.dirty = False
 
     def _admit_group(self, handles: List[StreamHandle], slots: List[int]):
         prompts = np.stack([h.request.prompt for h in handles])
@@ -531,7 +898,8 @@ class Engine:
         keys = np.asarray(keys)
 
         if self._caches is None:
-            self._caches = self._alloc_like(caches)
+            self._caches = (self._alloc_pooled() if self._pools
+                            else self._alloc_like(caches))
         if self._insert is None:
             self._insert = jax.jit(
                 lambda dst, src, j, row: kvc.insert_slot(
@@ -541,6 +909,9 @@ class Engine:
         for row, (h, slot) in enumerate(zip(handles, slots)):
             self._caches = self._insert(self._caches, caches, jnp.int32(slot),
                                         jnp.int32(row))
+            if self._pools:
+                self._apply_pool_insert(slot, caches, row)
+                self._hostlen[slot] = len(h.request.prompt)
             req = h.request
             self._slot_handle[slot] = h
             self._tok[slot, 0] = first[row]
@@ -616,7 +987,8 @@ class Engine:
         first = int(np.asarray(sample_per_slot(logits[:, -1], temps, subs))[0])
 
         if self._caches is None:
-            self._caches = self._alloc_like(caches)
+            self._caches = (self._alloc_pooled() if self._pools
+                            else self._alloc_like(caches))
         if self._insert is None:
             self._insert = jax.jit(
                 lambda dst, src, j, row: kvc.insert_slot(
@@ -624,6 +996,9 @@ class Engine:
                 donate_argnums=0)
         self._caches = self._insert(self._caches, caches, jnp.int32(slot),
                                     jnp.int32(0))
+        if self._pools:
+            self._apply_pool_insert(slot, caches, 0)
+            self._hostlen[slot] = len(h.request.prompt)
         self._chunk_state = job.state    # recycle buffers for the next job
         req = h.request
         self._slot_handle[slot] = h
@@ -644,7 +1019,40 @@ class Engine:
             return jnp.zeros(shape, x.dtype)
         return jax.tree.map(widen, caches)
 
+    def _alloc_pooled(self):
+        """Zeroed engine cache for pooled mode, built from shapes directly:
+        `_alloc_like` widens axis 1 of every leaf, but a pooled plane's
+        axis 1 is the physical pool axis, not the batch axis.  Pooled bands
+        get pool-major planes + per-slot tables; fp16 / fully-windowed
+        bands keep their striped layout."""
+        cfg = self.cfg
+        dtype = self.dtype or self.params["embed"].dtype
+        nf = cfg.first_dense
+        caches = {}
+        for group, g0, g1 in (("dense", 0, nf), ("scan", nf, cfg.n_layers)):
+            if g1 == g0:
+                continue
+            bands = self.schedule.bands(g0, g1)
+            couts = {}
+            for bs, be, pol in bands:
+                if (group, f"L{bs:03d}") in self._pools:
+                    shapes = kvc.pooled_cache_shapes(
+                        self.batch_slots, self.max_len, cfg.n_kv_heads,
+                        cfg.head_dim, pol, self.pool_blocks,
+                        self.pool_block_tokens, dtype)
+                else:
+                    shapes = kvc.cache_shapes(
+                        self.batch_slots, self.max_len, cfg.n_kv_heads,
+                        cfg.head_dim, pol, dtype)
+                couts[f"L{bs:03d}"] = {k: jnp.zeros((be - bs,) + s, d)
+                                       for k, (s, d) in shapes.items()}
+            caches[group] = T._band_out(couts, bands, g0)
+        return caches
+
     def _decode_chunk(self):
+        if self._pools:
+            self._pool_prewrite()
+            self._flush_tables()
         toks, tok, caches, keys, done = self._multi_fn()(
             self.params, jnp.asarray(self._tok), self._caches,
             jnp.asarray(self._keys), jnp.asarray(self._done),
@@ -658,6 +1066,7 @@ class Engine:
         self._done = np.array(done)
         for i in range(self.batch_slots):
             if self._slot_handle[i] is not None:
+                self._hostlen[i] += self.steps_per_sync
                 self._deliver(i, toks[i].tolist())
 
     def _deliver(self, slot: int, tokens: List[int]):
@@ -698,12 +1107,16 @@ class ServeSession:
                  batch_slots: int, max_len: int, calib=None, temperature=0.0,
                  seed: int = 0, backend=None, steps_per_sync: int = 8,
                  eos_id: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None, chunk_buckets=None):
+                 prefill_chunk: Optional[int] = None, chunk_buckets=None,
+                 pool_blocks: Optional[int] = None,
+                 pool_block_tokens: int = 16):
         self.engine = Engine(params, cfg, policy, batch_slots=batch_slots,
                              max_len=max_len, calib=calib, seed=seed,
                              backend=backend, steps_per_sync=steps_per_sync,
                              prefill_chunk=prefill_chunk,
-                             chunk_buckets=chunk_buckets)
+                             chunk_buckets=chunk_buckets,
+                             pool_blocks=pool_blocks,
+                             pool_block_tokens=pool_block_tokens)
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.temperature = temperature
