@@ -15,9 +15,19 @@ This suite serves the same ragged request mix through both admission modes
 and emits TTFT percentiles plus the *measured* prefill-shape counts, so the
 bounded-compile-shape contract is tracked in the benchmarks JSON artifact
 across PRs.
+
+Rows are labeled by loop discipline so they stay comparable across PRs:
+``mode=closed`` rows submit everything up front and run to completion
+(offered load is unbounded — the engine sets the pace), while the
+``mode=open`` rows of :func:`_open_loop_suite` (DESIGN.md §10) submit on a
+seeded Poisson clock and report offered vs achieved req/s, TTFT/TPOT
+percentiles, goodput under an SLA, and a saturation sweep — all after
+``Engine.warmup()``, with the jax compile counter gating that ZERO XLA
+compiles hit the open-loop traffic.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -27,7 +37,15 @@ from repro import configs
 from repro.core.policy import QuantPolicy
 from repro.data import SyntheticCorpus
 from repro.models import transformer as T
-from repro.serving import Engine, Request
+from repro.serving import (Engine, Request, WorkloadSpec, poisson_trace,
+                           run_open_loop, MetricsRecorder, find_saturation)
+
+
+def _compile_counter():
+    from jax._src import test_util as jtu
+    if hasattr(jtu, "count_jit_compilation_cache_miss"):
+        return jtu.count_jit_compilation_cache_miss()
+    return jtu.count_jit_and_pmap_lowerings()
 
 
 def _pct(xs, q):
@@ -120,6 +138,8 @@ def _shared_prefix_suite(emit, params, cfg, smoke):
     ratio = st["peak_resident_bytes"] / max(st["striped_worst_case_bytes"], 1)
     emit(f"serve_shared_prefix_pooled,"
          f"{pooled['wall_s'] * 1e6 / len(reqs):.1f},"
+         f"mode=closed;offered_rps=unbounded;"
+         f"achieved_rps={len(reqs) / max(pooled['wall_s'], 1e-9):.2f};"
          f"resident_peak_bytes={st['peak_resident_bytes']};"
          f"striped_worst_case_bytes={st['striped_worst_case_bytes']};"
          f"resident_ratio={ratio:.3f};"
@@ -152,6 +172,95 @@ def _shared_prefix_suite(emit, params, cfg, smoke):
             f"shared-prefix pool gates failed: {failed} (stats: {st})")
 
 
+def _open_loop_suite(emit, params, cfg, smoke):
+    """Open-loop serving under a Poisson clock (DESIGN.md §10): AOT-warm a
+    chunked + pooled + async engine, then drive a seeded arrival trace and
+    report offered vs achieved load, TTFT/TPOT percentiles, and goodput
+    under an SLA, plus a small saturation sweep reusing the SAME engine.
+
+    CI-gated twice: the jax compile counter must read ZERO over the traffic
+    window (everything was compiled by ``Engine.warmup()``), and the
+    goodput/percentile rows must be non-empty (every request finished)."""
+    pol = QuantPolicy(bits_k=2.0, bits_v=2.0,
+                      group_size=min(16, cfg.head_dim), window=16, n_sink=4)
+    bt, max_len, slots = 16, 148, 3        # packed = 128 tokens = 8 blocks
+    eng = Engine(params, cfg, pol, batch_slots=slots, max_len=max_len,
+                 steps_per_sync=4, prefill_chunk=16,
+                 pool_blocks=64, pool_block_tokens=bt, async_host=True)
+    rep = eng.warmup()
+    emit(f"serve_warmup,{rep['compile_s'] * 1e6:.1f},"
+         f"n_executables={rep['n_executables']};"
+         f"compile_s={rep['compile_s']:.2f};"
+         f"rehearse_s={rep['rehearse_s']:.2f}")
+
+    sla_ttft_ms, sla_tpot_ms = 2000.0, 500.0
+    spec = WorkloadSpec(n_requests=8 if smoke else 24, arrival_rate=8.0,
+                        prompt_lens=(24, 40, 56), max_news=(6, 10),
+                        shared_prefix_ratio=0.5, shared_prefix_len=12,
+                        vocab=cfg.vocab_size, seed=0)
+    rec = MetricsRecorder()
+    with _compile_counter() as n_compiles:
+        handles, _ = run_open_loop(eng, poisson_trace(spec), rec)
+    post = eng.warmup_report()["post_warmup_compiles"]
+    summ = rec.summary(sla_ttft_ms=sla_ttft_ms, sla_tpot_ms=sla_tpot_ms)
+    good = summ["goodput"]
+    gates = {"zero_compiles": n_compiles[0] == 0 and post == 0,
+             "all_finished": summ["n_finished"] == summ["n_requests"],
+             "goodput_rows": summ["n_requests"] > 0
+             and good["goodput_rps"] >= 0.0}
+    emit(f"serve_open_loop,{summ['makespan_s'] * 1e6:.1f},"
+         f"mode=open;"
+         f"offered_rps={summ['offered_rps']:.2f};"
+         f"achieved_rps={summ['achieved_rps']:.2f};"
+         f"achieved_tok_s={summ['achieved_tok_s']:.2f};"
+         f"n_requests={summ['n_requests']};"
+         f"n_finished={summ['n_finished']};"
+         f"ttft_p50_ms={summ['ttft_ms']['p50']:.0f};"
+         f"ttft_p90_ms={summ['ttft_ms']['p90']:.0f};"
+         f"ttft_p99_ms={summ['ttft_ms']['p99']:.0f};"
+         f"tpot_p50_ms={summ['tpot_ms']['p50']:.1f};"
+         f"tpot_p90_ms={summ['tpot_ms']['p90']:.1f};"
+         f"tpot_p99_ms={summ['tpot_ms']['p99']:.1f};"
+         f"queue_wait_p90_ms={summ['queue_wait_ms']['p90']:.0f};"
+         f"queue_depth_max={summ.get('queue_depth_max', 0)};"
+         f"pool_used_max={summ.get('pool_used_max', 0)};"
+         f"sla_ttft_ms={sla_ttft_ms:.0f};sla_tpot_ms={sla_tpot_ms:.0f};"
+         f"sla_attainment={good['attainment']:.3f};"
+         f"goodput_rps={good['goodput_rps']:.2f};"
+         f"goodput_tok_s={good['goodput_tok_s']:.2f};"
+         f"post_warmup_compiles={post};"
+         f"traffic_compiles={n_compiles[0]};"
+         f"gate={'pass' if all(gates.values()) else 'FAIL'}")
+
+    # saturation sweep: same engine, ascending offered load, find the last
+    # rate whose SLA attainment still clears the target
+    rates = (4.0, 12.0) if smoke else (4.0, 8.0, 16.0, 32.0)
+
+    def eval_at_rate(rate):
+        s = dataclasses.replace(spec, arrival_rate=rate,
+                                seed=int(round(rate * 1000)))
+        r = MetricsRecorder()
+        run_open_loop(eng, poisson_trace(s), r)
+        return r.summary(sla_ttft_ms=sla_ttft_ms, sla_tpot_ms=sla_tpot_ms)
+
+    sat = find_saturation(eval_at_rate, rates, attainment_target=0.9)
+    table = ";".join(
+        f"rate{row['rate']:.0f}_att={row['attainment']:.3f}"
+        for row in sat["table"])
+    sat_rps = sat["saturation_rps"]
+    emit(f"serve_saturation,0.0,"
+         f"mode=open;attainment_target={sat['attainment_target']:.2f};"
+         f"saturation_rps={'none' if sat_rps is None else f'{sat_rps:.1f}'};"
+         f"{table}")
+    eng.close()
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        raise RuntimeError(
+            f"open-loop serving gates failed: {failed} "
+            f"(traffic_compiles={n_compiles[0]}, post_warmup={post}, "
+            f"summary={summ})")
+
+
 def run(emit, smoke: bool = False):
     cfg = configs.get_smoke("llama3p2_1b")
     pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
@@ -175,7 +284,13 @@ def run(emit, smoke: bool = False):
 
     for name, r in (("serve_ragged_whole_prompt", whole),
                     (f"serve_ragged_chunked_c{chunk}", chunked)):
+        # mode=closed: every request is submitted up front, so the offered
+        # load is unbounded (the engine sets the pace) and only the
+        # achieved rate is meaningful — labeled so these rows are never
+        # silently compared against open-loop rows (DESIGN.md §10)
         emit(f"{name},{r['wall_s'] * 1e6 / max(len(reqs), 1):.1f},"
+             f"mode=closed;offered_rps=unbounded;"
+             f"achieved_rps={len(reqs) / max(r['wall_s'], 1e-9):.2f};"
              f"occupancy_mean={r['occ_mean']:.2f};"
              f"occupancy_max={r['occ_max']:.2f};"
              f"ttft_p50_ms={r['ttft_p50_ms']:.0f};"
@@ -194,3 +309,4 @@ def run(emit, smoke: bool = False):
          ";".join(f"{k}={v}" for k, v in sorted(info.items())))
 
     _shared_prefix_suite(emit, params, cfg, smoke)
+    _open_loop_suite(emit, params, cfg, smoke)

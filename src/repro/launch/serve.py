@@ -14,10 +14,25 @@ latency AND time-to-first-token percentiles.
         --batch 4 --requests 8 --prompt-len 256 --prompt-jitter 64 \
         --new-tokens 32 --max-new-jitter 8 --prefill-chunk 64 \
         --bits-k 2 --bits-v 1.5
+
+``--open-loop`` switches from the closed loop above to the throughput
+harness of DESIGN.md §10: requests arrive on a seeded Poisson clock at
+``--arrival-rate`` req/s regardless of engine progress, ``--warmup``
+AOT-compiles every executable before the first arrival (the run fails if
+any compile hits traffic afterwards), ``--async-host`` moves delivery to
+the background host loop, and the report becomes TTFT/TPOT percentiles +
+goodput under the ``--sla-ttft-ms``/``--sla-tpot-ms`` SLA:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_1b --smoke \
+        --open-loop --arrival-rate 8 --requests 16 --warmup --async-host \
+        --prefill-chunk 16 --pool-blocks 64 --prompt-len 40 \
+        --prompt-jitter 16 --new-tokens 12 --sla-ttft-ms 2000 \
+        --sla-tpot-ms 500
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -29,7 +44,8 @@ from ..core.kv_cache import schedule_cache_nbytes
 from ..core.quant import packed_nbytes
 from ..data import SyntheticCorpus
 from ..models import transformer as T
-from ..serving import Engine, Request
+from ..serving import (Engine, Request, WorkloadSpec, poisson_trace,
+                       run_open_loop, MetricsRecorder)
 
 
 def _pct(xs, q):
@@ -52,6 +68,59 @@ def _print_schedule_table(schedule, cfg, max_len, dtype):
               f"  {nbytes[bs] / 1024:.1f}")
     print(f"  schedule avg_bits={schedule.avg_bits(cfg.head_dim):.3f} "
           f"total cache KB/slot={sum(nbytes) / 1024:.1f}")
+
+
+def _open_loop(eng, args, cfg, n_req, max_len):
+    """Open-loop serving run + SLA goodput report (DESIGN.md §10).
+
+    Generates a seeded Poisson trace from the CLI's prompt/max-new knobs,
+    drives the engine on the wall clock, and prints offered vs achieved
+    load, TTFT/TPOT/e2e percentiles, queue/pool gauges, and goodput under
+    the ``--sla-*`` bounds.  With ``--warmup``, exits non-zero if any XLA
+    compile hit traffic after warmup — the CI smoke gate."""
+    plens = sorted({max(1, args.prompt_len + d) for d in
+                    (-args.prompt_jitter, 0, args.prompt_jitter)})
+    mnews = sorted({max(1, args.new_tokens + d) for d in
+                    (-args.max_new_jitter, 0, args.max_new_jitter)})
+    spec = WorkloadSpec(
+        n_requests=n_req, arrival_rate=args.arrival_rate,
+        prompt_lens=plens, max_news=mnews, temperature=args.temperature,
+        eos_id=args.eos_id, shared_prefix_ratio=args.shared_prefix_ratio,
+        shared_prefix_len=min(plens) // 2 if args.shared_prefix_ratio else 0,
+        vocab=cfg.vocab_size, seed=0)
+    rec = MetricsRecorder()
+    handles, makespan = run_open_loop(eng, poisson_trace(spec), rec)
+    s = rec.summary(sla_ttft_ms=args.sla_ttft_ms,
+                    sla_tpot_ms=args.sla_tpot_ms)
+    print(f"open loop: {s['n_finished']}/{s['n_requests']} requests in "
+          f"{makespan:.2f}s — offered {s['offered_rps']:.2f} req/s, "
+          f"achieved {s['achieved_rps']:.2f} req/s "
+          f"({s['achieved_tok_s']:.1f} tok/s)")
+    for name in ("ttft_ms", "tpot_ms", "e2e_ms", "queue_wait_ms"):
+        p = s[name]
+        print(f"  {name:<14} p50={p['p50']:.1f} p90={p['p90']:.1f} "
+              f"p99={p['p99']:.1f}")
+    print(f"  gauges: queue max={s.get('queue_depth_max', 0)} "
+          f"host-queue max={s.get('host_queue_depth_max', 0)} "
+          f"slots max={s.get('active_slots_max', 0)}"
+          + (f" pool-used max={s['pool_used_max']}"
+             if "pool_used_max" in s else ""))
+    st = eng.stats()
+    print(f"  counters: {st['counters']}")
+    if "goodput" in s:
+        g = s["goodput"]
+        print(f"  goodput @ SLA(ttft<={g['sla_ttft_ms']}ms, "
+              f"tpot<={g['sla_tpot_ms']}ms): {g['n_ok']}/{s['n_finished']} "
+              f"ok ({100 * g['attainment']:.0f}%), "
+              f"{g['goodput_rps']:.2f} req/s, {g['goodput_tok_s']:.1f} tok/s")
+    if args.warmup:
+        cold = eng.warmup_report()["post_warmup_compiles"]
+        if cold:
+            print(f"FAIL: {cold} XLA compiles hit traffic after warmup "
+                  f"({eng.warmup_report()['cold_names']})", file=sys.stderr)
+            raise SystemExit(1)
+        print("  zero XLA compiles after warmup ✓")
+    eng.close()
 
 
 def main(argv=None):
@@ -110,6 +179,30 @@ def main(argv=None):
                     help="tokens per pool block (>= 8; max_len is rounded "
                          "up so every quantized band tiles into whole "
                          "blocks)")
+    ap.add_argument("--pool-memory-mb", type=float, default=0,
+                    help="size the block pool from a device-memory budget "
+                         "instead of --pool-blocks (DESIGN.md §10): blocks "
+                         "= budget // per-block bytes summed across bands")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the engine's executable set before "
+                         "traffic (DESIGN.md §10); with --open-loop the run "
+                         "fails if any compile hits traffic afterwards")
+    ap.add_argument("--async-host", action="store_true",
+                    help="deliver tokens on the background host loop "
+                         "(DESIGN.md §10) instead of the scheduler thread")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="open-loop load: Poisson arrivals at "
+                         "--arrival-rate req/s, SLA goodput report "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="open-loop offered load, requests/second")
+    ap.add_argument("--shared-prefix-ratio", type=float, default=0.0,
+                    help="fraction of open-loop prompts sharing one common "
+                         "prefix (exercises pool prefix sharing)")
+    ap.add_argument("--sla-ttft-ms", type=float, default=None,
+                    help="TTFT SLA bound for the goodput report, ms")
+    ap.add_argument("--sla-tpot-ms", type=float, default=None,
+                    help="TPOT SLA bound for the goodput report, ms")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -157,7 +250,8 @@ def main(argv=None):
 
     max_len = (args.prompt_len + args.prompt_jitter + args.new_tokens + jit
                + args.steps_per_sync)
-    if args.pool_blocks:
+    pooled = args.pool_blocks or args.pool_memory_mb
+    if pooled:
         # round max_len up so every quantized band's packed region
         # (max_len - n_sink - window) tiles into whole pool blocks
         bt = args.pool_block_tokens
@@ -171,11 +265,19 @@ def main(argv=None):
                  steps_per_sync=args.steps_per_sync,
                  prefill_chunk=args.prefill_chunk or None,
                  pool_blocks=args.pool_blocks or None,
-                 pool_block_tokens=args.pool_block_tokens)
+                 pool_block_tokens=args.pool_block_tokens,
+                 pool_memory_bytes=int(args.pool_memory_mb * 2**20) or None,
+                 async_host=args.async_host)
+    if args.warmup:
+        rep = eng.warmup()
+        print(f"warmup: {rep['n_executables']} executables AOT-compiled in "
+              f"{rep['compile_s']:.2f}s, rehearsal {rep['rehearse_s']:.2f}s")
+    if args.open_loop:
+        return _open_loop(eng, args, cfg, n_req, max_len)
     t0 = time.time()
     handles = [eng.submit(r) for r in reqs]
     occ_at_finish = {}
-    if args.pool_blocks:
+    if pooled:
         # step manually so the pool occupancy each request finished at is
         # sampled live (run() would only expose the drained end state)
         while any(not h.finished for h in handles):
@@ -190,6 +292,7 @@ def main(argv=None):
                     occ_at_finish[h.rid] = used
     else:
         eng.run(handles)
+    eng.drain()              # async host loop: all streams final (§10)
     dt = time.time() - t0
 
     total_toks = sum(len(h.tokens) for h in handles)
@@ -221,7 +324,7 @@ def main(argv=None):
               f"compiled prefill shapes={eng.prefill_shapes} "
               f"(whole-prompt mode would compile one per distinct "
               f"prompt length)")
-    if args.pool_blocks:
+    if pooled:
         st = eng.stats()
         print("  req  plen  new  ttft_ms  lat_ms  pool_used")
         for h in handles:

@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -54,6 +55,8 @@ from ..core.policy import QuantPolicy, PolicySchedule, as_schedule
 from ..models.config import ArchConfig
 from ..models import backends as bk
 from ..models import transformer as T
+from .host_loop import HostLoop, TokenDelivery
+from .warmup import ExecutableCache, avatar
 
 
 # ------------------------------------------------------------------ sampling
@@ -159,18 +162,25 @@ def make_multi_decode_fn(cfg: ArchConfig, policy, n_tokens: int,
     everything (the scanned multi-token decode of DESIGN.md §6).
 
     Signature: ``(params, token (B,1), caches, keys (B,2), done (B,),
-    temps (B,), eos (B,)) -> (tokens (B, n), token, caches, keys, done)`` —
-    one host sync per call.  ``temps`` selects greedy vs categorical per
-    slot, ``eos`` is the per-slot EOS id (< 0 disables EOS handling for that
-    slot).  Slots that hit their EOS keep stepping (the scan is shape-static)
-    but their emitted tokens are pinned to their ``eos`` id; the host-side
-    engine discards whatever tail of the chunk a request does not need, so
-    ONE compiled executable serves every ``max_new``.
+    temps (B,), eos (B,)) -> (tokens (B, n), token, caches, keys, done,
+    live (B,))`` — one host sync per call.  ``temps`` selects greedy vs
+    categorical per slot, ``eos`` is the per-slot EOS id (< 0 disables EOS
+    handling for that slot).  Slots that hit their EOS keep stepping (the
+    scan is shape-static) but their emitted tokens are pinned to their
+    ``eos`` id; the host-side engine discards whatever tail of the chunk a
+    request does not need, so ONE compiled executable serves every
+    ``max_new``.
+
+    ``live`` counts the tokens each slot emitted *before* pinning — the
+    EOS token itself included.  It is what lets the async host loop
+    (DESIGN.md §10) decide eos/length finishes from tiny per-slot scalars
+    while the big ``tokens`` array stays on device for the background
+    consumer thread to materialize.
     """
     @jax.jit
     def multi(params, token, caches, keys, done, temps, eos):
         def step(carry, _):
-            tok, caches, keys, done = carry
+            tok, caches, keys, done, live = carry
             logits, caches = T.decode_step(params, cfg, tok, caches, policy,
                                            calib=calib, dtype=dtype,
                                            backend=backend)
@@ -178,13 +188,15 @@ def make_multi_decode_fn(cfg: ArchConfig, policy, n_tokens: int,
             nxt = sample_per_slot(logits[:, -1], temps, subs)
             has = eos >= 0
             nxt = jnp.where(done & has, eos, nxt)
+            live = live + jnp.where(done, 0, 1).astype(jnp.int32)
             done = done | (has & (nxt == eos))
-            return (nxt[:, None], caches, keys, done), nxt
+            return (nxt[:, None], caches, keys, done, live), nxt
 
-        carry, toks = jax.lax.scan(step, (token, caches, keys, done), None,
-                                   length=n_tokens)
-        token, caches, keys, done = carry
-        return jnp.swapaxes(toks, 0, 1), token, caches, keys, done
+        live0 = jnp.zeros(token.shape[:1], jnp.int32)
+        carry, toks = jax.lax.scan(step, (token, caches, keys, done, live0),
+                                   None, length=n_tokens)
+        token, caches, keys, done, live = carry
+        return jnp.swapaxes(toks, 0, 1), token, caches, keys, done, live
 
     return multi
 
@@ -212,19 +224,28 @@ class StreamHandle:
 
     ``tokens`` grows after every engine sync; ``finished`` flips when the
     request hits EOS ("eos") or its max_new budget ("length").  Wall-clock
-    marks (``submit_time``/``first_token_time``/``finish_time``) support
-    per-request latency percentiles in the serving CLI.
+    marks (``submit_time``/``admit_time``/``first_token_time``/
+    ``finish_time``) support per-request latency percentiles in the serving
+    CLI and the open-loop SLA accounting of DESIGN.md §10.  Under the async
+    host loop, ``tokens``/``finished`` are written by the background
+    consumer thread — poll ``done`` or call ``Engine.drain()`` before
+    reading a final stream; the scheduler-side ``_sched_*`` fields mirror
+    the finish decision without waiting for delivery.
     """
 
     def __init__(self, request: Request, rid: int):
         self.request = request
         self.rid = rid
         self.tokens: List[int] = []
+        self.text = ""                     # grows when a detokenizer is set
         self.finished = False
         self.finish_reason: Optional[str] = None
         self.submit_time = time.time()
+        self.admit_time: Optional[float] = None
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
+        self._sched_consumed = 0           # tokens the scheduler committed
+        self._sched_fin: Optional[str] = None  # scheduler's finish verdict
 
     @property
     def done(self) -> bool:
@@ -308,6 +329,29 @@ class Engine:
     every quantized band's packed capacity (``max_len - n_sink - window``)
     is a multiple of ``pool_block_tokens``.  ``stats()`` reports occupancy,
     prefix hit rate and resident bytes.
+
+    ``pool_memory_bytes`` sizes the pool from a device-memory budget
+    instead of a block count (DESIGN.md §10): ``pool_blocks`` is the
+    budget floor-divided by the per-block bytes summed across quantized
+    bands (every band's pool holds the same number of blocks), warning
+    when the division leaves unusable remainder.  An explicit
+    ``pool_blocks=`` always overrides the budget.
+
+    ``async_host`` moves detokenization and stream delivery onto a
+    background host thread (DESIGN.md §10): the scheduler decides
+    eos/length finishes from per-slot counters synced off the decode scan,
+    while the chunk's token array rides a bounded queue (``host_queue``
+    items) to the consumer, which materializes it, appends to
+    ``handle.tokens``, applies ``detokenize`` (when given) to
+    ``handle.text``, and stamps delivery times.  Token streams are
+    bit-identical to the synchronous loop; call :meth:`drain` (or
+    :meth:`run`, which drains) before reading final streams.
+    ``detokenize`` is honored in the synchronous loop too.
+
+    ``warmup()`` (DESIGN.md §10) AOT-compiles the engine's bounded
+    executable set and rehearses the host path before traffic arrives, so
+    serving triggers zero new XLA compiles afterwards; an un-warmed engine
+    compiles lazily exactly as before.
     """
 
     def __init__(self, params, cfg: ArchConfig, policy, batch_slots: int,
@@ -315,7 +359,10 @@ class Engine:
                  backend=None, steps_per_sync: int = 8, dtype=None,
                  prefill_chunk: Optional[int] = None, chunk_buckets=None,
                  pool_blocks: Optional[int] = None,
-                 pool_block_tokens: int = 16):
+                 pool_block_tokens: int = 16,
+                 pool_memory_bytes: Optional[int] = None,
+                 async_host: bool = False, host_queue: int = 8,
+                 detokenize: Optional[Callable] = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if max_len < 1:
@@ -376,6 +423,16 @@ class Engine:
         self._next_rid = 0
         self.n_completed = 0   # callers keep their own handles for stats
 
+        # ----- warmup executable cache + async host loop (DESIGN.md §10) ----
+        self._exec = ExecutableCache()
+        self._detok = detokenize
+        self._host: Optional[HostLoop] = HostLoop(
+            self._finish, detokenize, max_queue=host_queue) \
+            if async_host else None
+        self._rehearse_s: Optional[float] = None
+        self._counters = {"admitted": 0, "queue_wait_ticks": 0,
+                          "pool_exhausted_stalls": 0}
+
         # ----- paged block pool (DESIGN.md §9) -----
         self.pool_blocks = pool_blocks
         self.pool_block_tokens = int(pool_block_tokens)
@@ -387,14 +444,21 @@ class Engine:
         self._pending_register: Dict[int, dict] = {} # slot -> band (key, phys)
         self._hostlen = np.zeros((b,), np.int64)     # device length mirror
         self._stall_reason: Optional[str] = None
-        if pool_blocks is not None:
+        if pool_blocks is None and pool_memory_bytes is not None:
+            self.pool_blocks = self._size_pool_blocks(pool_memory_bytes)
+        elif pool_blocks is not None and pool_memory_bytes is not None:
+            warnings.warn(
+                f"explicit pool_blocks={pool_blocks} overrides "
+                f"pool_memory_bytes={pool_memory_bytes}", stacklevel=2)
+        if self.pool_blocks is not None:
             self._init_pool()
 
-    def _init_pool(self):
+    def _enumerate_pool_bands(self) -> List[tuple]:
+        """Quantized bands with a packed region to pool, with per-band
+        block bytes: ``(group, bkey, bs, be, pol, nb, nbytes)`` rows
+        (shared by :meth:`_init_pool` and the ``pool_memory_bytes`` sizing
+        of DESIGN.md §10 — validation happens once, here)."""
         cfg, bt = self.cfg, self.pool_block_tokens
-        if self.pool_blocks < 1:
-            raise ValueError(f"pool_blocks must be >= 1, "
-                             f"got {self.pool_blocks}")
         if bt < 8:
             raise ValueError(f"pool_block_tokens must be >= 8 (the pallas "
                              f"sublane tile minimum), got {bt}")
@@ -404,6 +468,7 @@ class Engine:
                 f"(the scan-family recurrence has no packed planes to "
                 f"pool), got family={cfg.family!r}")
         nf = cfg.first_dense
+        rows: List[tuple] = []
         for group, g0, g1 in (("dense", 0, nf), ("scan", nf, cfg.n_layers)):
             if g1 == g0:
                 continue
@@ -423,16 +488,48 @@ class Engine:
                         f"pool blocks")
                 nbytes = kvc.pool_block_nbytes(
                     cfg.n_kv_heads, cfg.head_dim, pol, bt) * (be - bs)
-                self._pools[(group, f"L{bs:03d}")] = BlockPool(
-                    self.pool_blocks, self.batch_slots, sq // bt,
-                    block_nbytes=nbytes)
-                self._pool_bands.append(
-                    (group, f"L{bs:03d}", bs, be, pol, sq // bt))
-        if not self._pools:
+                rows.append((group, f"L{bs:03d}", bs, be, pol,
+                             sq // bt, nbytes))
+        if not rows:
             raise ValueError(
                 "pool_blocks was set but no band has a packed region to "
                 "pool (every band is fp16 or its window+sinks cover "
                 "max_len); drop pool_blocks to serve striped")
+        return rows
+
+    def _size_pool_blocks(self, budget: int) -> int:
+        """Blocks per band affordable under a ``pool_memory_bytes`` budget
+        (DESIGN.md §10): floor-divide by the summed per-band block bytes
+        (every band's pool holds the same block count), warning when the
+        remainder is non-zero."""
+        if budget < 1:
+            raise ValueError(f"pool_memory_bytes must be >= 1, got {budget}")
+        per_block = sum(r[6] for r in self._enumerate_pool_bands())
+        blocks = budget // per_block
+        if blocks < 1:
+            raise ValueError(
+                f"pool_memory_bytes={budget} cannot fit a single pool "
+                f"block: one block across all quantized bands costs "
+                f"{per_block} bytes; raise the budget or coarsen the "
+                f"policy")
+        waste = budget - blocks * per_block
+        if waste:
+            warnings.warn(
+                f"pool_memory_bytes={budget} rounds down to "
+                f"pool_blocks={blocks} ({per_block} bytes/block across "
+                f"bands; {waste} bytes of the budget unusable)",
+                stacklevel=3)
+        return int(blocks)
+
+    def _init_pool(self):
+        if self.pool_blocks < 1:
+            raise ValueError(f"pool_blocks must be >= 1, "
+                             f"got {self.pool_blocks}")
+        for group, bkey, bs, be, pol, nb, nbytes in \
+                self._enumerate_pool_bands():
+            self._pools[(group, bkey)] = BlockPool(
+                self.pool_blocks, self.batch_slots, nb, block_nbytes=nbytes)
+            self._pool_bands.append((group, bkey, bs, be, pol, nb))
 
     # ------------------------------------------------------------ public API
 
@@ -488,6 +585,7 @@ class Engine:
         flight, and an empty queue)."""
         self._retire()
         self._admit()
+        self._counters["queue_wait_ticks"] += len(self._queue)
         self._prefill_tick()
         active = [i for i in range(self.batch_slots)
                   if self._slot_handle[i] is not None]
@@ -495,23 +593,177 @@ class Engine:
             return self._prefill_job is not None
         # a request can finish at admission (max_new=1 or instant EOS) —
         # only spin the decode chunk when someone still needs tokens
-        if any(not self._slot_handle[i].finished for i in active):
+        if any(not self._h_done(self._slot_handle[i]) for i in active):
             self._decode_chunk()
         self._retire()
         return True
 
     def run(self, handles: Optional[List[StreamHandle]] = None) -> None:
-        """Step until the given handles (default: all submitted) finish
-        (DESIGN.md §6)."""
+        """Step until the given handles (default: all submitted) finish,
+        then drain the async host loop so every returned stream is final
+        (DESIGN.md §6, §10)."""
         def pending():
             if handles is not None:
-                return any(not h.finished for h in handles)
+                return any(not self._h_done(h) for h in handles)
             return (bool(self._queue) or self._prefill_job is not None
                     or any(h is not None for h in self._slot_handle))
 
         while pending():
             if not self.step():
                 break
+        self.drain()
+
+    def drain(self) -> None:
+        """Block until the async host loop has delivered every enqueued
+        chunk (no-op for the synchronous engine) — the graceful-drain
+        contract of DESIGN.md §10."""
+        if self._host is not None:
+            self._host.drain()
+
+    def close(self, drain: bool = True) -> None:
+        """Shut down the async host loop thread, draining first by default
+        (DESIGN.md §10).  The engine stays usable: the next async delivery
+        restarts the thread."""
+        if self._host is not None:
+            self._host.close(drain=drain)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted yet (DESIGN.md §10 metrics gauge)."""
+        return len(self._queue)
+
+    @property
+    def active_slots(self) -> int:
+        """Decode lanes currently occupied (DESIGN.md §10 metrics gauge)."""
+        return sum(h is not None for h in self._slot_handle)
+
+    # ------------------------------------------------- warmup (DESIGN.md §10)
+
+    def warmup(self, prompt_lens: Optional[Sequence[int]] = None,
+               rehearse: bool = True) -> dict:
+        """AOT-compile the engine's bounded executable set before traffic
+        (DESIGN.md §10) and return :meth:`warmup_report`.
+
+        Enumerates every jitted function the steady state can reach — the
+        scanned decode step, one chunked-prefill executable per
+        ``chunk_buckets`` entry (plus slot insert / reset / chunk-state
+        zeroing), and the pool's block-insert / CoW-copy executables per
+        band — lowers each against ``jax.ShapeDtypeStruct`` avatars (no
+        buffers allocated beyond the engine cache itself, which warmup
+        allocates exactly as first admission would), compiles, and stores
+        the executables in the shape-keyed cache that serve-time call
+        sites dispatch through.  In whole-prompt mode, ``prompt_lens``
+        lists the batch-of-1 prompt lengths to pre-compile (chunked mode
+        ignores it: the bucket ladder is the compile-shape set).
+
+        ``rehearse`` then pushes one throwaway request per chunk bucket
+        through the real scheduler (restoring all counters afterwards) to
+        warm the *eager* host-path ops (admission sampling, key folding,
+        table broadcasts) that AOT lowering cannot reach — after that, a
+        mixed ragged workload triggers zero new XLA compiles (asserted
+        with the jax compile counter in tests/test_serving_harness.py and
+        gated in CI smoke).
+        """
+        params_av = avatar(self.params)
+        dtype = self.dtype or self.params["embed"].dtype
+        plen0 = min(8, self.max_len)
+        # cache template: the structure prefill returns, batch-of-1 —
+        # eval_shape is abstract, so nothing compiles or allocates here
+        template = jax.eval_shape(
+            self.prefill_fn, params_av,
+            {"tokens": jax.ShapeDtypeStruct((1, plen0), jnp.int32)})[1]
+        if self._caches is None:
+            self._caches = (self._alloc_pooled() if self._pools
+                            else self._alloc_like(template))
+        cache_av = avatar(self._caches)
+        i32 = jax.ShapeDtypeStruct((), jnp.int32)
+        b = self.batch_slots
+
+        self._exec.warm(
+            "multi", self._multi_fn(), params_av,
+            jax.ShapeDtypeStruct((b, 1), jnp.int32), cache_av,
+            jax.ShapeDtypeStruct((b, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.bool_),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32))
+        self._exec.warm("insert", self._insert_fn(), cache_av, template,
+                        i32, i32)
+        self._exec.warm("reset", self._reset_fn(), cache_av, i32)
+        if self.prefill_chunk is not None:
+            state_av = jax.eval_shape(functools.partial(
+                T.prefill_chunk_init, self.cfg, self.schedule, self.max_len,
+                self.max_len, batch=1, dtype=dtype))
+            for bucket in self.chunk_buckets:
+                self._exec.warm(
+                    f"chunk_{bucket}", self._chunk_fn(bucket), params_av,
+                    jax.ShapeDtypeStruct((1, bucket), jnp.int32), state_av,
+                    i32, i32)
+            self._exec.warm("zero_caches", self._zero_fn(),
+                            avatar(state_av["caches"]))
+        elif prompt_lens:
+            for plen in prompt_lens:
+                self._exec.warm(
+                    "prefill", self.prefill_fn, params_av,
+                    {"tokens": jax.ShapeDtypeStruct((1, int(plen)),
+                                                    jnp.int32)})
+        for group, bkey, bs, be, pol, nb in self._pool_bands:
+            band_av = avatar(self._band_cache_ref(group, bkey))
+            src_av = self._band_cache_src(template, group, bkey)
+            self._exec.warm(
+                f"pool_insert:{group}:{bkey}",
+                self._pool_insert_fn(group, bkey), band_av, src_av,
+                jax.ShapeDtypeStruct((nb, 2), jnp.int32), i32)
+            self._exec.warm(
+                "pool_copy", self._pool_copy(), band_av,
+                jax.ShapeDtypeStruct((self._cow_cap(), 2), jnp.int32))
+        if rehearse:
+            t0 = time.perf_counter()
+            self._rehearse()
+            self._rehearse_s = time.perf_counter() - t0
+        self._exec.warmed = True
+        return self.warmup_report()
+
+    def warmup_report(self) -> dict:
+        """Warmup accounting (DESIGN.md §10): executables compiled, AOT
+        compile seconds, rehearsal seconds, and ``post_warmup_compiles`` —
+        the count of cold compiles that hit serving traffic after
+        :meth:`warmup`, whose contract is that it stays 0 (CI-gated)."""
+        out = self._exec.report()
+        out["rehearse_s"] = self._rehearse_s
+        return out
+
+    def _rehearse(self):
+        """Run one tiny scripted request per compile family through the
+        real scheduler, then restore every counter — warms eager host-path
+        ops that AOT lowering can't reach (DESIGN.md §10)."""
+        if self.chunk_buckets is not None:
+            lens = [bkt for bkt in self.chunk_buckets
+                    if bkt + 2 <= self.max_len]
+        else:
+            lens = [p for p in (min(8, self.max_len - 2),) if p >= 1]
+        handles = []
+        for i, plen in enumerate(lens):
+            prompt = (np.arange(plen, dtype=np.int32) % 17) + 1
+            try:
+                handles.append(self.submit(Request(
+                    prompt=prompt, max_new=2, seed=0x7FFF0000 + i)))
+            except ValueError:
+                continue           # e.g. tight pools: skip, smaller lens warm
+        if handles:
+            self.run(handles)
+        self.n_completed = 0
+        self._next_rid = 0
+        self._stall_reason = None
+        for k in self._counters:
+            self._counters[k] = 0
+        for pool in self._pools.values():
+            pool.hits = pool.misses = pool.cow_copies = 0
+            pool.peak_used = pool.used()
+        if self._host is not None:
+            self._host.enqueued = self._host.delivered = 0
+            self._host.backpressure_waits = 0
+            self._host.backpressure_s = 0.0
+            self._host.max_depth = 0
 
     @property
     def backend_info(self) -> dict:
@@ -559,8 +811,22 @@ class Engine:
         rate, copy-on-write copies, resident *packed* bytes, and the
         striped worst case (``batch_slots`` full stripes) those bytes
         replace.  ``admission_stall`` carries the most recent reason the
-        FIFO head could not be admitted, for queue diagnostics."""
-        out: dict = {"pooled": bool(self._pools)}
+        FIFO head could not be admitted, for queue diagnostics.
+
+        ``counters`` (DESIGN.md §10) are cumulative since engine build (or
+        since :meth:`warmup`, which restores them): requests admitted,
+        request-ticks spent queued, ticks the FIFO head stalled on an
+        exhausted pool, and CoW copies; ``host`` carries the async host
+        loop's delivery/backpressure counters when enabled."""
+        out: dict = {"pooled": bool(self._pools),
+                     "queue_depth": len(self._queue),
+                     "active_slots": self.active_slots,
+                     "counters": dict(
+                         self._counters,
+                         cow_copies=sum(p.cow_copies
+                                        for p in self._pools.values()))}
+        if self._host is not None:
+            out["host"] = self._host.stats()
         if not self._pools:
             return out
         bands = {}
@@ -612,9 +878,57 @@ class Engine:
                 calib=self.calib, dtype=self.dtype, backend=self.backend)
         return self._multi
 
+    def _call(self, name: str, jitfn: Callable, *args):
+        # every jitted call site dispatches through the executable cache:
+        # warmed signatures hit the AOT-compiled executable, everything
+        # else falls back to the plain jitted function (an un-warmed
+        # engine behaves exactly as before warmup existed — DESIGN.md §10)
+        return self._exec.call(name, jitfn, *args)
+
+    def _h_done(self, h: StreamHandle) -> bool:
+        # async: the scheduler's verdict stands in for h.finished, which
+        # the consumer thread sets later, at delivery (DESIGN.md §10)
+        if self._host is not None:
+            return h._sched_fin is not None
+        return h.finished
+
+    def _insert_fn(self) -> Callable:
+        if self._insert is None:
+            self._insert = jax.jit(
+                lambda dst, src, j, row: kvc.insert_slot(
+                    dst, j, src, src_slot=row, batch_axis=1),
+                donate_argnums=0)
+        return self._insert
+
+    def _reset_fn(self) -> Callable:
+        if self._reset is None:
+            self._reset = jax.jit(
+                lambda c, j: kvc.reset_slot(c, j, batch_axis=1),
+                donate_argnums=0)
+        return self._reset
+
+    def _zero_fn(self) -> Callable:
+        if self._zero_caches is None:
+            self._zero_caches = jax.jit(
+                lambda c: jax.tree.map(jnp.zeros_like, c), donate_argnums=0)
+        return self._zero_caches
+
+    def _pool_copy(self) -> Callable:
+        if self._pool_copy_fn is None:
+            self._pool_copy_fn = jax.jit(
+                lambda c, p: kvc.pool_copy_block(c, p, pool_axis=1),
+                donate_argnums=0)
+        return self._pool_copy_fn
+
+    def _cow_cap(self) -> int:
+        # a span of sps tokens touches at most ceil((sps-1)/bt)+1 blocks
+        # per slot; fixed capacity -> one compiled CoW-copy shape
+        sps, bt = self.steps_per_sync, self.pool_block_tokens
+        return self.batch_slots * ((sps - 1 + bt - 1) // bt + 1)
+
     def _retire(self):
         for i, h in enumerate(self._slot_handle):
-            if h is not None and h.finished:
+            if h is not None and self._h_done(h):
                 self._slot_handle[i] = None
                 self._done[i] = True
                 self._eos[i] = -1
@@ -622,11 +936,9 @@ class Engine:
                     pool.release_slot(i)   # deref blocks; shared ones live on
                 self._hostlen[i] = 0
                 if self._caches is not None:
-                    if self._reset is None:
-                        self._reset = jax.jit(
-                            lambda c, j: kvc.reset_slot(c, j, batch_axis=1),
-                            donate_argnums=0)
-                    self._caches = self._reset(self._caches, jnp.int32(i))
+                    self._caches = self._call(
+                        "reset", self._reset_fn(), self._caches,
+                        jnp.int32(i))
 
     def _admit(self):
         """Move queued requests toward decode slots (DESIGN.md §6 admission).
@@ -647,13 +959,16 @@ class Engine:
                     plan = self._plan_pool_admission(
                         self._queue[0].request, free[0])
                     if plan is None:
-                        return           # FIFO: head waits for free blocks
+                        # FIFO: head waits for free blocks
+                        self._counters["pool_exhausted_stalls"] += 1
+                        return
                     handle = self._queue.pop(0)
                     # content lands at _finish_prefill: defer registration
                     self._commit_pool_admission(handle, free[0], plan,
                                                 register=False)
                 else:
                     handle = self._queue.pop(0)
+                handle.admit_time = time.time()
                 self._prefill_job = _PrefillJob(
                     handle=handle, slot=free[0], pos=0,
                     state=self._take_chunk_state())
@@ -668,6 +983,7 @@ class Engine:
                 slot = free[len(taken)]
                 plan = self._plan_pool_admission(self._queue[0].request, slot)
                 if plan is None:
+                    self._counters["pool_exhausted_stalls"] += 1
                     break
                 h = self._queue.pop(0)
                 self._commit_pool_admission(h, slot, plan)
@@ -823,7 +1139,9 @@ class Engine:
                 pool = self._pools[(group, bkey)]
                 pairs = np.zeros((pool.n_table, 2), np.int32)
                 pairs[:len(miss_pairs)] = miss_pairs
-                out = self._pool_insert_fn(group, bkey)(
+                out = self._call(
+                    f"pool_insert:{group}:{bkey}",
+                    self._pool_insert_fn(group, bkey),
                     self._band_cache_ref(group, bkey),
                     self._band_cache_src(src_caches, group, bkey),
                     jnp.asarray(pairs), jnp.int32(row))
@@ -851,19 +1169,13 @@ class Engine:
                     if work is not None and work[0] == "copy":
                         pairs.append((work[1], work[2]))
             if pairs:
-                if self._pool_copy_fn is None:
-                    self._pool_copy_fn = jax.jit(
-                        lambda c, p: kvc.pool_copy_block(c, p, pool_axis=1),
-                        donate_argnums=0)
-                # a span of sps tokens touches at most ceil((sps-1)/bt)+1
-                # blocks per slot; fixed capacity -> one compiled copy shape
-                cap = self.batch_slots * ((sps - 1 + bt - 1) // bt + 1)
-                arr = np.zeros((cap, 2), np.int32)
+                arr = np.zeros((self._cow_cap(), 2), np.int32)
                 arr[:len(pairs)] = pairs
                 self._set_band_cache(
                     group, bkey,
-                    self._pool_copy_fn(self._band_cache_ref(group, bkey),
-                                       jnp.asarray(arr)))
+                    self._call("pool_copy", self._pool_copy(),
+                               self._band_cache_ref(group, bkey),
+                               jnp.asarray(arr)))
 
     def _flush_tables(self):
         """Push dirty host block tables to the device caches.  Rows of
@@ -884,8 +1196,9 @@ class Engine:
 
     def _admit_group(self, handles: List[StreamHandle], slots: List[int]):
         prompts = np.stack([h.request.prompt for h in handles])
-        logits, caches = self.prefill_fn(
-            self.params, {"tokens": jnp.asarray(prompts, jnp.int32)})
+        logits, caches = self._call(
+            "prefill", self.prefill_fn, self.params,
+            {"tokens": jnp.asarray(prompts, jnp.int32)})
         # per-request stream = engine seed folded with the request seed:
         # replayable per request, perturbable per engine
         keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(self.seed),
@@ -900,15 +1213,12 @@ class Engine:
         if self._caches is None:
             self._caches = (self._alloc_pooled() if self._pools
                             else self._alloc_like(caches))
-        if self._insert is None:
-            self._insert = jax.jit(
-                lambda dst, src, j, row: kvc.insert_slot(
-                    dst, j, src, src_slot=row, batch_axis=1),
-                donate_argnums=0)
         now = time.time()
+        self._counters["admitted"] += len(handles)
         for row, (h, slot) in enumerate(zip(handles, slots)):
-            self._caches = self._insert(self._caches, caches, jnp.int32(slot),
-                                        jnp.int32(row))
+            self._caches = self._call(
+                "insert", self._insert_fn(), self._caches, caches,
+                jnp.int32(slot), jnp.int32(row))
             if self._pools:
                 self._apply_pool_insert(slot, caches, row)
                 self._hostlen[slot] = len(h.request.prompt)
@@ -920,8 +1230,9 @@ class Engine:
             self._eos[slot] = -1 if req.eos_id is None else req.eos_id
             self._done[slot] = (req.eos_id is not None
                                 and int(first[row]) == req.eos_id)
-            h.first_token_time = now
-            self._deliver(slot, [int(first[row])])
+            if h.admit_time is None:
+                h.admit_time = now
+            self._admit_deliver(slot, h, int(first[row]))
 
     def _prefill_tick(self):
         """Advance the in-flight chunked prefill by one chunk (DESIGN.md §7).
@@ -941,7 +1252,8 @@ class Engine:
         bucket = next(b for b in self.chunk_buckets if b >= n)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :n] = prompt[job.pos:job.pos + n]
-        logits, job.state = self._chunk_fn(bucket)(
+        logits, job.state = self._call(
+            f"chunk_{bucket}", self._chunk_fn(bucket),
             self.params, jnp.asarray(toks), job.state,
             jnp.int32(job.pos), jnp.int32(n))
         job.pos += n
@@ -963,10 +1275,8 @@ class Engine:
             return T.prefill_chunk_init(
                 self.cfg, self.schedule, self.max_len, self.max_len, batch=1,
                 dtype=self.dtype or self.params["embed"].dtype)
-        if self._zero_caches is None:
-            self._zero_caches = jax.jit(
-                lambda c: jax.tree.map(jnp.zeros_like, c), donate_argnums=0)
-        st["caches"] = self._zero_caches(st["caches"])
+        st["caches"] = self._call("zero_caches", self._zero_fn(),
+                                  st["caches"])
         return st
 
     def _chunk_fn(self, bucket: int) -> Callable:
@@ -989,17 +1299,14 @@ class Engine:
         if self._caches is None:
             self._caches = (self._alloc_pooled() if self._pools
                             else self._alloc_like(caches))
-        if self._insert is None:
-            self._insert = jax.jit(
-                lambda dst, src, j, row: kvc.insert_slot(
-                    dst, j, src, src_slot=row, batch_axis=1),
-                donate_argnums=0)
-        self._caches = self._insert(self._caches, caches, jnp.int32(slot),
-                                    jnp.int32(0))
+        self._caches = self._call(
+            "insert", self._insert_fn(), self._caches, caches,
+            jnp.int32(slot), jnp.int32(0))
         if self._pools:
             self._apply_pool_insert(slot, caches, 0)
             self._hostlen[slot] = len(h.request.prompt)
         self._chunk_state = job.state    # recycle buffers for the next job
+        self._counters["admitted"] += 1
         req = h.request
         self._slot_handle[slot] = h
         self._tok[slot, 0] = first
@@ -1007,8 +1314,7 @@ class Engine:
         self._temps[slot] = max(req.temperature, 0.0)
         self._eos[slot] = -1 if req.eos_id is None else req.eos_id
         self._done[slot] = req.eos_id is not None and first == req.eos_id
-        h.first_token_time = time.time()
-        self._deliver(slot, [first])
+        self._admit_deliver(slot, h, first)
 
     def _alloc_like(self, caches):
         """Zeroed engine cache: the prefilled group's structure with the
@@ -1053,34 +1359,91 @@ class Engine:
         if self._pools:
             self._pool_prewrite()
             self._flush_tables()
-        toks, tok, caches, keys, done = self._multi_fn()(
+        toks, tok, caches, keys, done, live = self._call(
+            "multi", self._multi_fn(),
             self.params, jnp.asarray(self._tok), self._caches,
             jnp.asarray(self._keys), jnp.asarray(self._done),
             jnp.asarray(self._temps), jnp.asarray(self._eos))
         self._caches = caches
-        toks = np.asarray(toks)                 # ONE sync per chunk
         # np.array copies: jax->numpy views are read-only and the scheduler
         # mutates these in place at retire/admit time
         self._tok = np.array(tok)
         self._keys = np.array(keys)
-        self._done = np.array(done)
+        done_np = self._done = np.array(done)
+        if self._host is not None:
+            # async (DESIGN.md §10): decide finishes from the tiny per-slot
+            # live counts; the big token array stays on device and the
+            # consumer thread materializes it off the scheduler's critical
+            # path
+            live = np.asarray(live)
+            handles, rows, counts, reasons = [], [], [], []
+            for i in range(self.batch_slots):
+                h = self._slot_handle[i]
+                if h is None or h._sched_fin is not None:
+                    continue
+                self._hostlen[i] += self.steps_per_sync
+                left = h.request.max_new - h._sched_consumed
+                n_live = int(live[i])
+                if bool(done_np[i]) and n_live <= left:
+                    consumed, reason = n_live, "eos"
+                elif left <= n_live:
+                    consumed, reason = left, "length"
+                else:
+                    consumed, reason = n_live, None
+                h._sched_consumed += consumed
+                h._sched_fin = reason
+                handles.append(h)
+                rows.append(i)
+                counts.append(consumed)
+                reasons.append(reason)
+            if handles:
+                self._host.put(TokenDelivery(
+                    handles=handles, rows=rows, counts=counts,
+                    reasons=reasons, tokens=toks))
+            return
+        toks = np.asarray(toks)                 # ONE sync per chunk
         for i in range(self.batch_slots):
             if self._slot_handle[i] is not None:
                 self._hostlen[i] += self.steps_per_sync
                 self._deliver(i, toks[i].tolist())
 
+    def _admit_deliver(self, slot: int, h: StreamHandle, first: int):
+        """Deliver a request's first (admission-sampled) token: directly in
+        the synchronous loop, via the host-loop queue in async mode — the
+        same transport every decode chunk takes (DESIGN.md §10)."""
+        if self._host is None:
+            h.first_token_time = time.time()
+            self._deliver(slot, [first])
+            return
+        req = h.request
+        if req.eos_id is not None and first == req.eos_id:
+            reason = "eos"
+        elif req.max_new <= 1:
+            reason = "length"
+        else:
+            reason = None
+        h._sched_consumed = 1
+        h._sched_fin = reason
+        self._host.put(TokenDelivery(
+            handles=[h], rows=[0], counts=[1], reasons=[reason],
+            tokens=np.asarray([[first]], np.int32)))
+
     def _deliver(self, slot: int, tokens: List[int]):
         """Append chunk tokens to a slot's handle, honoring eos/max_new."""
         h = self._slot_handle[slot]
         req = h.request
+        taken: List[int] = []
         for t in tokens:
             if h.finished:
                 break
             h.tokens.append(int(t))
+            taken.append(int(t))
             if req.eos_id is not None and int(t) == req.eos_id:
                 self._finish(h, "eos")
             elif len(h.tokens) >= req.max_new:
                 self._finish(h, "length")
+        if self._detok is not None and taken:
+            h.text += self._detok(taken)
 
     def _finish(self, h: StreamHandle, reason: str):
         h.finished = True

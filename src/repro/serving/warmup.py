@@ -1,0 +1,125 @@
+"""AOT warmup executable cache (DESIGN.md §10).
+
+Serving traffic must never pay cold-start XLA compiles: the Engine's
+compile-shape set is bounded by construction (one scanned-decode shape,
+``len(chunk_buckets)`` prefill-chunk shapes, and a handful of slot-surgery
+helpers — DESIGN.md §6–§7), so every executable the steady state can reach
+is enumerable *before* the first request arrives.  :class:`ExecutableCache`
+is the mechanism: ``Engine.warmup()`` AOT-lowers and compiles each
+enumerated ``jax.jit`` function against :func:`avatar` shapes
+(``jax.ShapeDtypeStruct`` — no buffers are allocated) and stores the
+resulting ``Compiled`` executables keyed by :func:`shape_signature`.
+
+Serve-time call sites go through :meth:`ExecutableCache.call`: a signature
+hit dispatches straight to the compiled executable (zero tracing, zero
+compile-cache traffic — asserted with the jax compile counter in
+tests/test_serving_harness.py), a miss falls back to the plain jitted
+function and, once the cache is marked warm, is recorded as a
+``post_warmup_compiles`` event for ``Engine.warmup_report()`` and the CI
+gate.  An un-warmed engine therefore behaves exactly as before this module
+existed — the cache is pure opt-in.
+
+AOT compilation is required, not an optimization: in this jax version
+``jit(f).lower(args).compile()`` does NOT populate ``jit``'s own call-path
+cache, so "warming" by lowering alone would still compile again on the
+first real call — the cache must dispatch to the stored executables
+itself.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+
+__all__ = ["avatar", "shape_signature", "ExecutableCache"]
+
+
+def avatar(tree):
+    """Shape/dtype avatars (``jax.ShapeDtypeStruct``) for a pytree of
+    arrays — what AOT lowering traces against instead of real buffers
+    (DESIGN.md §10)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def shape_signature(args: tuple) -> tuple:
+    """Hashable shape/dtype signature of a call's argument pytree
+    (DESIGN.md §10).
+
+    Two calls with equal signatures hit the same XLA executable — this is
+    exactly jax's own cache key minus the static/treedef parts, which are
+    fixed per named call site here (the Engine names each of its jitted
+    functions, so the (name, signature) pair is unambiguous).
+    """
+    return tuple(
+        (tuple(getattr(leaf, "shape", ())), str(getattr(leaf, "dtype", "")))
+        for leaf in jax.tree_util.tree_leaves(args))
+
+
+class ExecutableCache:
+    """Named, shape-keyed cache of AOT-compiled executables
+    (DESIGN.md §10).
+
+    * :meth:`warm` — lower + compile a jitted function for one avatar
+      signature and store the ``Compiled`` executable.
+    * :meth:`call` — dispatch ``(name, args)``: compiled hit if the
+      signature was warmed, else the plain jitted fallback.  Fallback
+      signatures first seen after :attr:`warmed` was set are recorded —
+      they are exactly the compiles that would have hit user traffic.
+    """
+
+    def __init__(self):
+        self._compiled: Dict[Tuple[str, tuple], Any] = {}
+        self.entries: List[dict] = []       # one row per warmed executable
+        self.warmed = False                 # set by Engine.warmup()
+        self._cold: Dict[Tuple[str, tuple], None] = {}  # post-warmup misses
+
+    def __len__(self) -> int:
+        return len(self._compiled)
+
+    @property
+    def post_warmup_compiles(self) -> int:
+        """Distinct (name, signature) fallback compiles seen since the
+        cache was marked warm — 0 is the serving contract (DESIGN.md §10)."""
+        return len(self._cold)
+
+    def warm(self, name: str, jitfn: Callable, *avatars) -> float:
+        """AOT-lower and compile ``jitfn`` for the given avatar arguments;
+        returns the compile seconds (0.0 if this signature was already
+        warm).  Donation declared on ``jitfn`` is preserved by the
+        compiled executable (DESIGN.md §10)."""
+        key = (name, shape_signature(avatars))
+        if key in self._compiled:
+            return 0.0
+        t0 = time.perf_counter()
+        self._compiled[key] = jitfn.lower(*avatars).compile()
+        dt = time.perf_counter() - t0
+        self.entries.append({"name": name, "seconds": dt,
+                             "n_leaves": len(key[1])})
+        return dt
+
+    def call(self, name: str, jitfn: Callable, *args):
+        """Dispatch a call site: compiled executable on a signature hit,
+        plain jitted function otherwise (recording the miss when warm) —
+        DESIGN.md §10."""
+        key = (name, shape_signature(args))
+        compiled = self._compiled.get(key)
+        if compiled is not None:
+            return compiled(*args)
+        if self.warmed and key not in self._cold:
+            self._cold[key] = None
+        return jitfn(*args)
+
+    def report(self) -> dict:
+        """Warmup accounting for ``Engine.warmup_report()`` (DESIGN.md
+        §10): executable count, total compile seconds, per-executable rows,
+        and the post-warmup cold-compile counter the CI smoke gates on."""
+        return {
+            "warmed": self.warmed,
+            "n_executables": len(self._compiled),
+            "compile_s": round(sum(e["seconds"] for e in self.entries), 4),
+            "executables": list(self.entries),
+            "post_warmup_compiles": self.post_warmup_compiles,
+            "cold_names": sorted({n for n, _ in self._cold}),
+        }

@@ -19,7 +19,9 @@ import pytest
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 AUDITED = ["repro.serving.engine", "repro.core.kv_cache",
-           "repro.models.backends"]
+           "repro.models.backends", "repro.serving.warmup",
+           "repro.serving.host_loop", "repro.serving.loadgen",
+           "repro.serving.metrics"]
 
 
 def test_markdown_links_resolve():
