@@ -38,7 +38,9 @@ from repro.core.policy import QuantPolicy
 from repro.data import SyntheticCorpus
 from repro.models import transformer as T
 from repro.serving import (Engine, Request, WorkloadSpec, poisson_trace,
-                           run_open_loop, MetricsRecorder, find_saturation)
+                           run_open_loop, MetricsRecorder, find_saturation,
+                           FinishReason, ChaosEvent, FaultInjector,
+                           TickClock)
 
 
 def _compile_counter():
@@ -261,6 +263,161 @@ def _open_loop_suite(emit, params, cfg, smoke):
             f"summary={summ})")
 
 
+def _overload_suite(emit, params, cfg, smoke):
+    """Graceful degradation under overload (DESIGN.md §11): offered load
+    well past saturation, a priority mix, and a block pool sized at ~50%
+    of the wave's working-set demand, so admission must stall, preempt,
+    and spill instead of expanding.
+
+    CI-gated: the run must terminate (no deadlock), every request must
+    carry a valid terminal FinishReason (no hung streams), goodput must
+    stay positive, and the post-run pool/spill invariant audit must be
+    clean (zero leaked blocks)."""
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
+                      group_size=min(16, cfg.head_dim), window=16, n_sink=4)
+    # 40-token prompts + <=12 new + 4-step sync margin - (sink+window) = 36
+    # packed tokens -> 5 blocks eventual demand per request; 2 slots x 5 =
+    # 10 working-set blocks, pool_blocks=5 puts the pool at 50% of that
+    bt, max_len, slots = 8, 84, 2
+    eng = Engine(params, cfg, pol, batch_slots=slots, max_len=max_len,
+                 steps_per_sync=4, prefill_chunk=8,
+                 pool_blocks=5, pool_block_tokens=bt, async_host=True,
+                 host_spill_bytes=4 << 20)
+    rep = eng.warmup()
+    # offered ~2x+ past anything this pool can sustain: every arrival hits
+    # a busy engine, so the queue/preemption/stall machinery carries it
+    spec = WorkloadSpec(n_requests=6 if smoke else 14, arrival_rate=100.0,
+                        prompt_lens=(40,), max_news=(8, 12),
+                        shared_prefix_ratio=0.5, shared_prefix_len=16,
+                        vocab=cfg.vocab_size, priorities=(0, 1), seed=11)
+    rec = MetricsRecorder()
+    handles, makespan = run_open_loop(eng, poisson_trace(spec), rec)
+    summ = rec.summary(sla_ttft_ms=120_000.0, sla_tpot_ms=None)
+    st = eng.stats()
+    c = st["counters"]
+    try:
+        eng.check_invariants()
+        leak_ok = True
+    except RuntimeError:
+        leak_ok = False
+    gates = {
+        "all_terminal": all(
+            h.finished and h.finish_reason in FinishReason.TERMINAL
+            for h in handles),
+        "goodput>0": summ["goodput"]["goodput_rps"] > 0,
+        "no_block_leak": leak_ok,
+        "zero_compiles": rep["post_warmup_compiles"] == 0
+        and eng.warmup_report()["post_warmup_compiles"] == 0,
+    }
+    emit(f"serve_overload,{makespan * 1e6 / len(handles):.1f},"
+         f"mode=open;offered_rps={summ['offered_rps']:.1f};"
+         f"achieved_rps={summ['achieved_rps']:.2f};"
+         f"n_requests={summ['n_requests']};"
+         f"n_finished={summ['n_finished']};"
+         f"finish_reasons={summ['finish_reasons']};"
+         f"pool_blocks=5;working_set_blocks=10;"
+         f"preemptions={c['preemptions']};"
+         f"pool_stalls={c['pool_exhausted_stalls']};"
+         f"spilled_blocks={c['spilled_blocks']};"
+         f"restored_blocks={c['restored_blocks']};"
+         f"goodput_rps={summ['goodput']['goodput_rps']:.2f};"
+         f"gate={'pass' if all(gates.values()) else 'FAIL'}")
+    eng.close()
+    failed = [k for k, ok in gates.items() if not ok]
+    if failed:
+        raise RuntimeError(
+            f"overload gates failed: {failed} "
+            f"(reasons={summ['finish_reasons']}, counters={c})")
+
+
+def run_chaos(emit, smoke: bool = False):
+    """Seeded chaos smoke (DESIGN.md §11): drive pooled engines through
+    pool-exhaustion and NaN-logit fault traces and gate the degradation
+    invariants in CI — every stream terminates with a valid FinishReason
+    (no hangs), the pool/spill audit finds zero leaked blocks, and no XLA
+    compile hits traffic after warmup.
+
+        PYTHONPATH=src python -m benchmarks.serving_bench --smoke --chaos
+    """
+    cfg = configs.get_smoke("llama3p2_1b")
+    pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
+                      group_size=min(16, cfg.head_dim), window=16, n_sink=4)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    bt, max_len, slots = 8, 84, 2
+    n_req = 5 if smoke else 10
+    rng = np.random.default_rng(3)
+
+    def wave():
+        return [Request(prompt=corpus.sample(40, np.random.default_rng(i)),
+                        max_new=int(rng.integers(6, 11)), seed=i,
+                        priority=i % 2)
+                for i in range(n_req)]
+
+    scenarios = {
+        # exhaustion bursts seize 60% of free blocks for 6 ticks, twice
+        "pool": [ChaosEvent(tick=t, kind="pool", duration=6, magnitude=0.6)
+                 for t in (3, 14)],
+        # two NaN-poisoned decode chunks -> slot quarantine, others clean
+        "nan": [ChaosEvent(tick=t, kind="nan") for t in (4, 12)],
+    }
+    for name, events in scenarios.items():
+        inj = FaultInjector(events)
+        eng = Engine(params, cfg, pol, batch_slots=slots, max_len=max_len,
+                     steps_per_sync=4, prefill_chunk=8,
+                     pool_blocks=12, pool_block_tokens=bt, async_host=True,
+                     host_spill_bytes=4 << 20, clock=TickClock(0.01),
+                     faults=inj)
+        rep = eng.warmup()
+        t0 = time.time()
+        handles = [eng.submit(r) for r in wave()]
+        ticks = 0
+        while eng.step():
+            ticks += 1
+            if ticks > 5000:
+                raise RuntimeError(f"chaos '{name}': engine still busy "
+                                   f"after {ticks} ticks — hung stream")
+        eng.drain()
+        wall = time.time() - t0
+        st = eng.stats()
+        c = st["counters"]
+        try:
+            eng.check_invariants()
+            leak_ok = True
+        except RuntimeError:
+            leak_ok = False
+        post = eng.warmup_report()["post_warmup_compiles"]
+        gates = {
+            "all_terminal": all(
+                h.finished and h.finish_reason in FinishReason.TERMINAL
+                for h in handles),
+            "no_block_leak": leak_ok,
+            "zero_compiles": rep["post_warmup_compiles"] == 0 and post == 0,
+            "faults_fired": sum(inj.stats()["injected"].values()) > 0,
+        }
+        reasons = {}
+        for h in handles:
+            reasons[h.finish_reason] = reasons.get(h.finish_reason, 0) + 1
+        emit(f"serve_chaos_{name},{wall * 1e6 / len(handles):.1f},"
+             f"mode=closed;n_requests={len(handles)};"
+             f"finish_reasons={reasons};"
+             f"injected={inj.stats()['injected']};"
+             f"preemptions={c['preemptions']};"
+             f"pool_stalls={c['pool_exhausted_stalls']};"
+             f"nan_quarantines={c['nan_quarantines']};"
+             f"spilled_blocks={c['spilled_blocks']};"
+             f"restored_blocks={c['restored_blocks']};"
+             f"post_warmup_compiles={post};"
+             f"gate={'pass' if all(gates.values()) else 'FAIL'}")
+        eng.close()
+        failed = [k for k, ok in gates.items() if not ok]
+        if failed:
+            raise RuntimeError(
+                f"chaos '{name}' gates failed: {failed} "
+                f"(reasons={reasons}, injected={inj.stats()['injected']}, "
+                f"counters={c})")
+
+
 def run(emit, smoke: bool = False):
     cfg = configs.get_smoke("llama3p2_1b")
     pol = QuantPolicy(bits_k=2.0, bits_v=1.5,
@@ -310,3 +467,24 @@ def run(emit, smoke: bool = False):
 
     _shared_prefix_suite(emit, params, cfg, smoke)
     _open_loop_suite(emit, params, cfg, smoke)
+    _overload_suite(emit, params, cfg, smoke)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (shrunk waves)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run only the seeded fault-injection suite "
+                         "(DESIGN.md §11) — the CI chaos-smoke gate")
+    _args = ap.parse_args()
+    print("name,us_per_call,derived")
+
+    def _emit(row):
+        print(row, flush=True)
+
+    if _args.chaos:
+        run_chaos(_emit, smoke=_args.smoke)
+    else:
+        run(_emit, smoke=_args.smoke)

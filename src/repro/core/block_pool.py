@@ -31,11 +31,12 @@ write can't corrupt another slot's — or a future request's — view.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["BlockPool", "prefix_block_keys"]
+__all__ = ["BlockPool", "HostSpillTier", "prefix_block_keys"]
 
 
 def prefix_block_keys(prompt: Sequence[int], n_sink: int, window: int,
@@ -80,6 +81,104 @@ def prefix_block_keys(prompt: Sequence[int], n_sink: int, window: int,
     return full_keys, tail_key
 
 
+class HostSpillTier:
+    """LRU host-RAM tier for cold pool blocks (DESIGN.md §11).
+
+    When a hash-registered block's refcount drops to zero the engine can
+    park its packed bytes here (plain numpy arrays, one dict of plane
+    leaves per content key) instead of losing them with the device free.
+    A later admission whose prefix key misses the device registry but hits
+    this tier *restores* the block with one host→device copy — skipping
+    the re-quantization commit the miss would otherwise pay.
+
+    ``budget_bytes`` bounds the tier: inserting past the budget evicts
+    least-recently-used entries (a :meth:`get` refreshes recency).  One
+    tier serves every band of an engine — content keys already fold in the
+    band id and policy, so keys cannot collide across bands.
+    """
+
+    def __init__(self, budget_bytes: int):
+        if budget_bytes < 1:
+            raise ValueError(
+                f"host spill budget must be >= 1 byte, got {budget_bytes}")
+        self.budget_bytes = int(budget_bytes)
+        self._entries: "OrderedDict[str, Tuple[dict, int]]" = OrderedDict()
+        self.bytes = 0
+        self.spilled = 0          # blocks parked (device -> host copies)
+        self.restored = 0         # blocks revived (host -> device copies)
+        self.evicted = 0          # LRU drops under budget pressure
+        self.rejected = 0         # blocks larger than the whole budget
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def put(self, key: str, arrays: dict, nbytes: int) -> bool:
+        """Park one block's plane leaves under ``key`` (DESIGN.md §11),
+        evicting LRU entries until the budget covers it.  Returns False
+        (and counts a rejection) when a single block exceeds the whole
+        budget — the tier never over-commits host RAM."""
+        nbytes = int(nbytes)
+        if nbytes > self.budget_bytes:
+            self.rejected += 1
+            return False
+        if key in self._entries:
+            _, old = self._entries.pop(key)
+            self.bytes -= old
+        while self.bytes + nbytes > self.budget_bytes and self._entries:
+            _, (_, old) = self._entries.popitem(last=False)
+            self.bytes -= old
+            self.evicted += 1
+        self._entries[key] = (arrays, nbytes)
+        self.bytes += nbytes
+        self.spilled += 1
+        return True
+
+    def get(self, key: str) -> Optional[dict]:
+        """Plane leaves for ``key`` (refreshing its LRU recency), or None
+        (DESIGN.md §11)."""
+        hit = self._entries.get(key)
+        if hit is None:
+            return None
+        self._entries.move_to_end(key)
+        return hit[0]
+
+    def pop(self, key: str) -> Optional[dict]:
+        """Remove and return ``key``'s plane leaves (the restore path:
+        the block is device-resident again — DESIGN.md §11)."""
+        hit = self._entries.pop(key, None)
+        if hit is None:
+            return None
+        arrays, nbytes = hit
+        self.bytes -= nbytes
+        self.restored += 1
+        return arrays
+
+    def stats(self) -> dict:
+        """Occupancy + traffic counters for ``Engine.stats()``
+        (DESIGN.md §11)."""
+        return {"budget_bytes": self.budget_bytes, "bytes": self.bytes,
+                "entries": len(self._entries), "spilled": self.spilled,
+                "restored": self.restored, "evicted": self.evicted,
+                "rejected": self.rejected}
+
+    def check_invariants(self) -> None:
+        """Audit the tier's byte accounting (DESIGN.md §11 fault-model
+        contract): tracked bytes equal the sum of entry sizes and never
+        exceed the budget.  Raises ``RuntimeError`` on violation."""
+        total = sum(n for _, n in self._entries.values())
+        if total != self.bytes:
+            raise RuntimeError(
+                f"host spill tier byte drift: tracked {self.bytes} != "
+                f"summed {total}")
+        if self.bytes > self.budget_bytes:
+            raise RuntimeError(
+                f"host spill tier over budget: {self.bytes} > "
+                f"{self.budget_bytes}")
+
+
 class BlockPool:
     """Free list + refcounts + hash registry + per-slot tables for ONE
     quantized band's physical block pool (DESIGN.md §9).
@@ -112,6 +211,15 @@ class BlockPool:
         self.cow_copies = 0
         self.peak_used = 0
         self.dirty = True                      # device table needs a flush
+        # spill hook (DESIGN.md §11): called as on_evict(key, phys) when a
+        # hash-registered block's refcount hits zero, BEFORE the block is
+        # deregistered and freed — the engine's chance to copy its bytes
+        # to the host tier while they are still device-resident
+        self.on_evict: Optional[Callable[[str, int], None]] = None
+        # fault-injection holds (DESIGN.md §11): blocks seized out of the
+        # free list by a chaos injector — referenced by nobody's table, so
+        # the invariant audit accounts them explicitly
+        self.seized: set = set()
 
     # ------------------------------------------------------------- accounting
 
@@ -142,6 +250,7 @@ class BlockPool:
                 "prefix_hit_rate": (self.hits / (self.hits + self.misses)
                                     if self.hits + self.misses else 0.0),
                 "cow_copies": self.cow_copies,
+                "seized": len(self.seized),
                 "resident_bytes": used * self.block_nbytes}
 
     # ------------------------------------------------------------- allocation
@@ -171,7 +280,9 @@ class BlockPool:
 
     def deref(self, phys: int) -> None:
         """Drop a reference; the last one frees the block and retires any
-        hash registration pointing at it."""
+        hash registration pointing at it.  A hash-registered block hitting
+        refcount zero first fires :attr:`on_evict` — the engine's host
+        spill hook (DESIGN.md §11) — while its bytes are still resident."""
         if phys <= 0:
             return
         if self.refs[phys] <= 0:
@@ -181,6 +292,8 @@ class BlockPool:
             key = self.phys_to_hash.pop(phys, None)
             if key is not None:
                 self.hash_to_phys.pop(key, None)
+                if self.on_evict is not None:
+                    self.on_evict(key, phys)
             self._free.append(phys)
 
     # ----------------------------------------------------------- hash registry
@@ -206,6 +319,8 @@ class BlockPool:
     # ------------------------------------------------------------- slot tables
 
     def table(self, slot: int) -> np.ndarray:
+        """``slot``'s logical-block -> physical-block table (DESIGN.md §9),
+        the host array gathered into the device ``block_tbl`` leaf."""
         return self.tables[slot]
 
     def assign(self, slot: int, lb: int, phys: int) -> None:
@@ -252,3 +367,91 @@ class BlockPool:
         self.tables[slot] = 0
         self._reserved[slot] = 0
         self.dirty = True
+
+    # ------------------------------------------------- faults + audit (§11)
+
+    def seize(self, n: int) -> List[int]:
+        """Take up to ``n`` blocks out of the free list without assigning
+        them to any slot — the pool-exhaustion chaos injector's handle
+        (DESIGN.md §11).  Seized blocks are tracked so
+        :meth:`check_invariants` can tell an injector hold from a leak."""
+        out: List[int] = []
+        for _ in range(max(0, int(n))):
+            if not self._free:
+                break
+            phys = self._free.pop()
+            self.refs[phys] = 1
+            self.seized.add(phys)
+            out.append(phys)
+        self.peak_used = max(self.peak_used, self.used())
+        return out
+
+    def release_seized(self, blocks: Optional[Sequence[int]] = None) -> None:
+        """Return seized blocks (default: all of them) to the free list —
+        the end of a chaos exhaustion burst (DESIGN.md §11)."""
+        for phys in list(blocks if blocks is not None else self.seized):
+            if phys not in self.seized:
+                raise ValueError(f"block {phys} was not seized")
+            self.seized.discard(phys)
+            self.refs[phys] = 0
+            self._free.append(phys)
+
+    def check_invariants(self) -> dict:
+        """Full refcount / free-list / registry audit (DESIGN.md §11).
+
+        Verifies, raising ``RuntimeError`` with the violation on failure:
+
+        * the null block stays pinned and unassignable;
+        * the free list holds exactly the refcount-zero blocks, without
+          duplicates, and ``used + free == n_blocks``;
+        * every allocated block's refcount equals its table occurrences
+          across slots (plus one if a chaos injector seized it) — the
+          no-leak / no-double-free core;
+        * outstanding reservations never exceed the free list;
+        * the hash registry is a bijection onto live blocks.
+
+        Returns the audit facts (used/free/seized/registered counts) so
+        chaos harnesses can log them next to the pass.
+        """
+        def fail(msg: str):
+            raise RuntimeError(f"BlockPool invariant violated: {msg} "
+                               f"(stats: {self.stats()})")
+
+        if self.refs[0] < 1:
+            fail("null block lost its pin")
+        free = list(self._free)
+        if len(set(free)) != len(free):
+            fail("duplicate entries in the free list")
+        for phys in free:
+            if not (1 <= phys <= self.n_blocks):
+                fail(f"free-list entry {phys} out of range")
+            if self.refs[phys] != 0:
+                fail(f"free block {phys} has refcount {self.refs[phys]}")
+        if self.used() + len(free) != self.n_blocks:
+            fail(f"used ({self.used()}) + free ({len(free)}) != "
+                 f"n_blocks ({self.n_blocks})")
+        occ = np.bincount(self.tables.reshape(-1),
+                          minlength=self.n_blocks + 1)
+        if (self.tables == 0).sum() != occ[0]:
+            fail("table occupancy miscount")      # unreachable; sanity
+        for phys in range(1, self.n_blocks + 1):
+            want = int(occ[phys]) + (1 if phys in self.seized else 0)
+            if int(self.refs[phys]) != want:
+                fail(f"block {phys}: refcount {int(self.refs[phys])} != "
+                     f"{int(occ[phys])} table refs"
+                     + (" + 1 seized" if phys in self.seized else ""))
+        if int(self._reserved.sum()) > len(free):
+            fail(f"reservations ({int(self._reserved.sum())}) exceed the "
+                 f"free list ({len(free)})")
+        for key, phys in self.hash_to_phys.items():
+            if self.phys_to_hash.get(phys) != key:
+                fail(f"registry asymmetry at key {key[:12]}…")
+            if self.refs[phys] <= 0:
+                fail(f"registered block {phys} is not allocated")
+        for phys, key in self.phys_to_hash.items():
+            if self.hash_to_phys.get(key) != phys:
+                fail(f"registry asymmetry at block {phys}")
+        return {"blocks": self.n_blocks, "used": self.used(),
+                "free": len(free), "seized": len(self.seized),
+                "registered": len(self.hash_to_phys),
+                "reserved": self.reserved()}

@@ -227,6 +227,41 @@ def pool_copy_block(cache: Cache, pairs, pool_axis: int = 0) -> Cache:
     return out
 
 
+def pool_read_block(cache: Cache, phys, pool_axis: int = 0) -> Cache:
+    """Slice ONE physical block out of every packed-plane leaf — the
+    device->host read of the spill tier (DESIGN.md §11).
+
+    Returns ``{plane_key: (..., BT, H, W)}`` with the pool axis removed;
+    for the engine's layer-stacked leaves (``pool_axis=1``) each slice
+    keeps the leading layer axis.  ``phys`` may be traced, so one compiled
+    executable serves every spill regardless of which block cools off.
+    """
+    sel = (slice(None),) * pool_axis
+    return {key: v[sel + (phys,)] for key, v in cache.items()
+            if is_plane_key(key)}
+
+
+def pool_write_block(cache: Cache, block: Cache, phys, pool_axis: int = 0
+                     ) -> Cache:
+    """Write a previously spilled block back into physical slot ``phys``
+    across every packed-plane leaf — the host->device restore of the spill
+    tier (DESIGN.md §11), inverse of :func:`pool_read_block`.
+
+    Restoring bytes the pool itself produced is what makes a spill-hit
+    bit-identical to a re-quantization of the same prefix: the packed
+    codes/scales round-trip untouched.  ``phys`` may be traced (the
+    restore lands wherever the free list says), keeping one executable.
+    """
+    sel = (slice(None),) * pool_axis
+    out = dict(cache)
+    for key, v in cache.items():
+        if not is_plane_key(key):
+            continue
+        out[key] = v.at[sel + (phys,)].set(
+            jnp.asarray(block[key]).astype(v.dtype))
+    return out
+
+
 def pool_block_nbytes(n_kv: int, head_dim: int, policy: QuantPolicy,
                       block_tokens: int) -> int:
     """Exact bytes of ONE physical pool block for one layer — packed codes

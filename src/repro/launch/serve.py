@@ -28,6 +28,20 @@ goodput under the ``--sla-ttft-ms``/``--sla-tpot-ms`` SLA:
         --prefill-chunk 16 --pool-blocks 64 --prompt-len 40 \
         --prompt-jitter 16 --new-tokens 12 --sla-ttft-ms 2000 \
         --sla-tpot-ms 500
+
+Degradation knobs (DESIGN.md §11): ``--deadline-ms`` expires requests that
+outstay their budget, ``--priority-mix`` assigns priority levels (under
+pool pressure higher-priority arrivals preempt strictly-lower running
+slots, which requeue and replay bit-identically), ``--host-spill-mb``
+turns on the host-RAM block spill tier, and ``--chaos {pool,nan,crash,
+timeout}`` runs a seeded fault-injection trace.  Every run ends with a
+degradation summary table and a pool invariant audit — a leak exits
+non-zero:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3p2_1b --smoke \
+        --batch 2 --requests 6 --prompt-len 24 --new-tokens 8 \
+        --prefill-chunk 8 --pool-blocks 12 --pool-block-tokens 8 \
+        --priority-mix 0,0,1 --host-spill-mb 16 --chaos pool
 """
 from __future__ import annotations
 
@@ -45,7 +59,8 @@ from ..core.quant import packed_nbytes
 from ..data import SyntheticCorpus
 from ..models import transformer as T
 from ..serving import (Engine, Request, WorkloadSpec, poisson_trace,
-                       run_open_loop, MetricsRecorder)
+                       run_open_loop, MetricsRecorder,
+                       ChaosSpec, chaos_trace, FaultInjector)
 
 
 def _pct(xs, q):
@@ -70,7 +85,69 @@ def _print_schedule_table(schedule, cfg, max_len, dtype):
           f"total cache KB/slot={sum(nbytes) / 1024:.1f}")
 
 
-def _open_loop(eng, args, cfg, n_req, max_len):
+def _priority_mix(args):
+    """Parse ``--priority-mix`` into the tuple of levels requests cycle
+    through / are sampled from (DESIGN.md §11)."""
+    try:
+        mix = tuple(int(x) for x in args.priority_mix.split(","))
+    except ValueError:
+        raise SystemExit(f"--priority-mix must be comma-separated ints, "
+                         f"got {args.priority_mix!r}")
+    if not mix:
+        raise SystemExit("--priority-mix must name at least one level")
+    return mix
+
+
+def _chaos_injector(args, horizon_ticks=64):
+    """Build the seeded :class:`FaultInjector` for ``--chaos`` (DESIGN.md
+    §11), or None when chaos is off."""
+    if args.chaos == "none":
+        return None
+    spec = ChaosSpec(n_events=args.chaos_events, kinds=(args.chaos,),
+                     horizon_ticks=horizon_ticks, seed=args.chaos_seed)
+    events = chaos_trace(spec)
+    print(f"chaos: {len(events)} '{args.chaos}' events at ticks "
+          f"{[e.tick for e in events]} (seed {args.chaos_seed})")
+    return FaultInjector(events)
+
+
+def _degradation_summary(eng, inj=None):
+    """Degradation ladder report + invariant audit (DESIGN.md §11).
+
+    Prints the overload-behaviour table (how many requests were preempted,
+    shed, deadline-missed, cancelled; blocks spilled/restored; NaN
+    quarantines; watchdog trips), the fault injector's accounting when
+    chaos was on, and then runs :meth:`Engine.check_invariants` — a failed
+    audit (leaked or double-owned pool blocks, spill-tier corruption)
+    exits non-zero so CI catches it."""
+    st = eng.stats()
+    c = st["counters"]
+    print("degradation summary (DESIGN.md §11):")
+    print(f"  preempted={c['preemptions']} shed={c['shed']} "
+          f"deadline_misses={c['deadline_misses']} "
+          f"cancelled={c['cancelled']} "
+          f"nan_quarantines={c['nan_quarantines']} "
+          f"watchdog_trips={c['watchdog_trips']} "
+          f"pool_stalls={c['pool_exhausted_stalls']}")
+    if "host_spill" in st:
+        t = st["host_spill"]
+        print(f"  host spill: {c['spilled_blocks']} spilled / "
+              f"{c['restored_blocks']} restored "
+              f"({t['bytes']}/{t['budget_bytes']} B resident, "
+              f"{t['evicted']} LRU-evicted, {t['rejected']} rejected)")
+    if inj is not None:
+        s = inj.stats()
+        print(f"  chaos: {s['injected']} injected, {s['skipped']} skipped, "
+              f"{s['active_holds']} holds outstanding")
+    try:
+        eng.check_invariants()
+        print("  invariant audit: PASS (no leaked blocks)")
+    except RuntimeError as e:
+        print(f"FAIL: invariant audit: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+def _open_loop(eng, args, cfg, n_req, max_len, inj=None):
     """Open-loop serving run + SLA goodput report (DESIGN.md §10).
 
     Generates a seeded Poisson trace from the CLI's prompt/max-new knobs,
@@ -87,7 +164,8 @@ def _open_loop(eng, args, cfg, n_req, max_len):
         prompt_lens=plens, max_news=mnews, temperature=args.temperature,
         eos_id=args.eos_id, shared_prefix_ratio=args.shared_prefix_ratio,
         shared_prefix_len=min(plens) // 2 if args.shared_prefix_ratio else 0,
-        vocab=cfg.vocab_size, seed=0)
+        vocab=cfg.vocab_size, deadline_ms=args.deadline_ms,
+        priorities=_priority_mix(args), seed=0)
     rec = MetricsRecorder()
     handles, makespan = run_open_loop(eng, poisson_trace(spec), rec)
     s = rec.summary(sla_ttft_ms=args.sla_ttft_ms,
@@ -120,6 +198,10 @@ def _open_loop(eng, args, cfg, n_req, max_len):
                   f"({eng.warmup_report()['cold_names']})", file=sys.stderr)
             raise SystemExit(1)
         print("  zero XLA compiles after warmup ✓")
+    reasons = s.get("finish_reasons", {})
+    if reasons:
+        print(f"  finish reasons: {reasons}")
+    _degradation_summary(eng, inj)
     eng.close()
 
 
@@ -203,6 +285,31 @@ def main(argv=None):
                     help="TTFT SLA bound for the goodput report, ms")
     ap.add_argument("--sla-tpot-ms", type=float, default=None,
                     help="TPOT SLA bound for the goodput report, ms")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline (DESIGN.md §11): a request "
+                         "still queued or running this many ms after submit "
+                         "finishes 'deadline' and frees its blocks")
+    ap.add_argument("--priority-mix", default="0",
+                    help="comma-separated priority levels assigned to "
+                         "requests (DESIGN.md §11); under pool pressure a "
+                         "higher-priority arrival preempts strictly-lower-"
+                         "priority running slots (e.g. '0,0,1')")
+    ap.add_argument("--host-spill-mb", type=float, default=0,
+                    help="host-RAM spill tier byte budget (DESIGN.md §11): "
+                         "cold refcount-0 pool blocks and preempted slots' "
+                         "blocks spill to host arrays and restore on demand "
+                         "instead of re-quantizing (0 = off)")
+    ap.add_argument("--chaos", default="none",
+                    choices=("none", "pool", "nan", "crash", "timeout"),
+                    help="seeded fault injection (DESIGN.md §11): pool "
+                         "exhaustion bursts, NaN-logit quarantine, host-"
+                         "loop consumer crashes, or simulated device-step "
+                         "timeouts; the run prints injector accounting and "
+                         "exits non-zero if the invariant audit fails")
+    ap.add_argument("--chaos-events", type=int, default=4,
+                    help="number of chaos events to schedule")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos trace seed (same seed, same fault ticks)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -234,6 +341,7 @@ def main(argv=None):
     rng = np.random.default_rng(0)
     jit = args.max_new_jitter
 
+    mix = _priority_mix(args)
     reqs = []
     for i in range(n_req):
         max_new = args.new_tokens + (int(rng.integers(-jit, jit + 1)) if jit
@@ -246,7 +354,8 @@ def main(argv=None):
         prompt = corpus.sample(plen, np.random.default_rng(i))
         reqs.append(Request(prompt=prompt, max_new=max_new,
                             temperature=args.temperature, eos_id=args.eos_id,
-                            seed=i))
+                            deadline_ms=args.deadline_ms,
+                            priority=mix[i % len(mix)], seed=i))
 
     max_len = (args.prompt_len + args.prompt_jitter + args.new_tokens + jit
                + args.steps_per_sync)
@@ -260,6 +369,7 @@ def main(argv=None):
                    for p in schedule.distinct()):
                 break
             max_len += 1
+    inj = _chaos_injector(args)
     eng = Engine(params, cfg, schedule, batch_slots=args.batch,
                  max_len=max_len, backend=args.backend,
                  steps_per_sync=args.steps_per_sync,
@@ -267,13 +377,14 @@ def main(argv=None):
                  pool_blocks=args.pool_blocks or None,
                  pool_block_tokens=args.pool_block_tokens,
                  pool_memory_bytes=int(args.pool_memory_mb * 2**20) or None,
-                 async_host=args.async_host)
+                 host_spill_bytes=int(args.host_spill_mb * 2**20) or None,
+                 async_host=args.async_host, faults=inj)
     if args.warmup:
         rep = eng.warmup()
         print(f"warmup: {rep['n_executables']} executables AOT-compiled in "
               f"{rep['compile_s']:.2f}s, rehearsal {rep['rehearse_s']:.2f}s")
     if args.open_loop:
-        return _open_loop(eng, args, cfg, n_req, max_len)
+        return _open_loop(eng, args, cfg, n_req, max_len, inj)
     t0 = time.time()
     handles = [eng.submit(r) for r in reqs]
     occ_at_finish = {}
@@ -296,8 +407,10 @@ def main(argv=None):
     dt = time.time() - t0
 
     total_toks = sum(len(h.tokens) for h in handles)
-    lat = [(h.finish_time - h.submit_time) * 1e3 for h in handles]
-    ttft = [(h.first_token_time - h.submit_time) * 1e3 for h in handles]
+    lat = [(h.finish_time - h.submit_time) * 1e3 for h in handles
+           if h.finish_time is not None]
+    ttft = [(h.first_token_time - h.submit_time) * 1e3 for h in handles
+            if h.first_token_time is not None]
     fp16_b = 2 * cfg.head_dim * 2
     q_b = packed_nbytes(cfg.head_dim, policy.bits_k, policy.group_size,
                         policy.meta_dtype_bits) + \
@@ -314,10 +427,10 @@ def main(argv=None):
           f"({total_toks / dt:.1f} tok/s aggregate)")
     print(f"latency ms/request: p50={_pct(lat, 50):.0f} "
           f"p90={_pct(lat, 90):.0f} p99={_pct(lat, 99):.0f} "
-          f"max={max(lat):.0f}")
+          f"max={max(lat, default=0):.0f}")
     print(f"time-to-first-token ms: p50={_pct(ttft, 50):.0f} "
           f"p90={_pct(ttft, 90):.0f} p99={_pct(ttft, 99):.0f} "
-          f"max={max(ttft):.0f}")
+          f"max={max(ttft, default=0):.0f}")
     if args.prefill_chunk:
         print(f"chunked prefill: chunk={args.prefill_chunk} "
               f"buckets={eng.chunk_buckets} "
@@ -326,13 +439,16 @@ def main(argv=None):
               f"prompt length)")
     if pooled:
         st = eng.stats()
-        print("  req  plen  new  ttft_ms  lat_ms  pool_used")
+        print("  req  plen  new  ttft_ms  lat_ms  pool_used  reason")
         for h in handles:
+            t1 = (f"{(h.first_token_time - h.submit_time) * 1e3:<8.0f}"
+                  if h.first_token_time is not None else f"{'-':<8}")
+            t2 = (f"{(h.finish_time - h.submit_time) * 1e3:<7.0f}"
+                  if h.finish_time is not None else f"{'-':<7}")
             print(f"  {h.rid:<4d} {len(h.request.prompt):<5d} "
-                  f"{len(h.tokens):<4d} "
-                  f"{(h.first_token_time - h.submit_time) * 1e3:<8.0f} "
-                  f"{(h.finish_time - h.submit_time) * 1e3:<7.0f} "
-                  f"{occ_at_finish.get(h.rid, 0)}/{st['blocks']}")
+                  f"{len(h.tokens):<4d} {t1} {t2} "
+                  f"{occ_at_finish.get(h.rid, 0)}/{st['blocks']}"
+                  f"{'':<6}{h.finish_reason}")
         print(f"pool: {st['pool_blocks']} blocks x "
               f"{st['pool_block_tokens']} tok/band, peak used "
               f"{st['peak_used']} ({st['peak_resident_bytes']} B packed "
@@ -342,7 +458,9 @@ def main(argv=None):
               f"cow copies {st['cow_copies']}")
     print(f"KV bytes/token-head: fp16={fp16_b}  skvq={q_b} "
           f"({fp16_b / q_b:.1f}x compression)")
-    print("sample:", handles[0].result()[:16])
+    if handles[0].tokens:
+        print("sample:", handles[0].tokens[:16])
+    _degradation_summary(eng, inj)
 
 
 if __name__ == "__main__":

@@ -1,19 +1,25 @@
 from .engine import (Engine, Request, StreamHandle, ServeSession,
+                     FinishReason,
                      make_prefill_fn, make_decode_fn, make_multi_decode_fn,
                      make_prefill_chunk_fn, default_chunk_buckets,
                      sample_token, sample_per_slot)
 from .warmup import ExecutableCache, avatar, shape_signature
-from .host_loop import HostLoop, TokenDelivery
+from .host_loop import HostLoop, TokenDelivery, HostLoopCrash
 from .loadgen import WorkloadSpec, Arrival, poisson_trace, run_open_loop
 from .metrics import (RequestRecord, MetricsRecorder, percentiles, goodput,
                       find_saturation)
+from .faults import (FAULT_KINDS, ChaosEvent, ChaosSpec, chaos_trace,
+                     TickClock, FaultInjector)
 
 __all__ = ["Engine", "Request", "StreamHandle", "ServeSession",
+           "FinishReason",
            "make_prefill_fn", "make_decode_fn", "make_multi_decode_fn",
            "make_prefill_chunk_fn", "default_chunk_buckets",
            "sample_token", "sample_per_slot",
            "ExecutableCache", "avatar", "shape_signature",
-           "HostLoop", "TokenDelivery",
+           "HostLoop", "TokenDelivery", "HostLoopCrash",
            "WorkloadSpec", "Arrival", "poisson_trace", "run_open_loop",
            "RequestRecord", "MetricsRecorder", "percentiles", "goodput",
-           "find_saturation"]
+           "find_saturation",
+           "FAULT_KINDS", "ChaosEvent", "ChaosSpec", "chaos_trace",
+           "TickClock", "FaultInjector"]

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 
 from ..core import kv_cache as kvc
 from ..core import segments as seg
-from ..core.block_pool import BlockPool, prefix_block_keys
+from ..core.block_pool import BlockPool, HostSpillTier, prefix_block_keys
 from ..core.policy import QuantPolicy, PolicySchedule, as_schedule
 from ..models.config import ArchConfig
 from ..models import backends as bk
@@ -176,32 +176,83 @@ def make_multi_decode_fn(cfg: ArchConfig, policy, n_tokens: int,
     (DESIGN.md §10) decide eos/length finishes from tiny per-slot scalars
     while the big ``tokens`` array stays on device for the background
     consumer thread to materialize.
+
+    ``nan_inject`` (B,) bool is the per-slot NaN guard's test hook
+    (DESIGN.md §11): rows flagged True have their logits poisoned with NaN
+    before sampling, exercising exactly the non-finite-logits path a
+    numerically misbehaving model would hit.  Either way, a slot whose
+    logits go non-finite raises its ``bad`` flag (returned (B,) bool),
+    samples from zeroed safe logits (so co-scheduled slots are unaffected
+    and the executable never traps), stops counting ``live`` tokens, and
+    pins ``done`` — the host quarantines it ("shed").  With ``nan_inject``
+    all-False and finite logits every ``where`` is the identity, so the
+    guarded scan is bit-identical to the unguarded one.
     """
     @jax.jit
-    def multi(params, token, caches, keys, done, temps, eos):
+    def multi(params, token, caches, keys, done, temps, eos, nan_inject):
         def step(carry, _):
-            tok, caches, keys, done, live = carry
+            tok, caches, keys, done, bad, live = carry
             logits, caches = T.decode_step(params, cfg, tok, caches, policy,
                                            calib=calib, dtype=dtype,
                                            backend=backend)
+            row = logits[:, -1]
+            row = jnp.where(nan_inject[:, None],
+                            jnp.full_like(row, jnp.nan), row)
+            bad = bad | ~jnp.isfinite(
+                row.astype(jnp.float32)).all(axis=-1)
+            safe = jnp.where(bad[:, None], jnp.zeros_like(row), row)
             keys, subs = _split_keys(keys)
-            nxt = sample_per_slot(logits[:, -1], temps, subs)
+            nxt = sample_per_slot(safe, temps, subs)
             has = eos >= 0
             nxt = jnp.where(done & has, eos, nxt)
-            live = live + jnp.where(done, 0, 1).astype(jnp.int32)
-            done = done | (has & (nxt == eos))
-            return (nxt[:, None], caches, keys, done, live), nxt
+            live = live + jnp.where(done | bad, 0, 1).astype(jnp.int32)
+            done = done | (has & (nxt == eos)) | bad
+            return (nxt[:, None], caches, keys, done, bad, live), nxt
 
         live0 = jnp.zeros(token.shape[:1], jnp.int32)
-        carry, toks = jax.lax.scan(step, (token, caches, keys, done, live0),
-                                   None, length=n_tokens)
-        token, caches, keys, done, live = carry
-        return jnp.swapaxes(toks, 0, 1), token, caches, keys, done, live
+        bad0 = jnp.zeros(token.shape[:1], bool)
+        carry, toks = jax.lax.scan(
+            step, (token, caches, keys, done, bad0, live0),
+            None, length=n_tokens)
+        token, caches, keys, done, bad, live = carry
+        return (jnp.swapaxes(toks, 0, 1), token, caches, keys, done, bad,
+                live)
 
     return multi
 
 
 # ------------------------------------------------------------------ requests
+
+class FinishReason:
+    """Structured stream-termination taxonomy (DESIGN.md §11).
+
+    Every stream the engine ever returns terminates with exactly one
+    *terminal* reason: ``OK`` (generic success, used by tooling), ``EOS``
+    (hit its eos id), ``LENGTH`` (hit max_new), ``DEADLINE`` (its
+    ``Request.deadline_ms`` expired, queued or running), ``CANCELLED``
+    (``StreamHandle.cancel()``), or ``SHED`` (the engine dropped it: NaN
+    quarantine or watchdog abort).  ``PREEMPTED`` is an *event*, not a
+    terminal state — a preempted request requeues for
+    recompute-from-prompt and still ends in a terminal reason; the event
+    is recorded in ``StreamHandle.events``.  The no-hung-streams chaos
+    invariant is exactly ":meth:`valid` for every handle" (gated in tests
+    and the CI chaos smoke).
+    """
+    OK = "ok"
+    EOS = "eos"
+    LENGTH = "length"
+    DEADLINE = "deadline"
+    CANCELLED = "cancelled"
+    PREEMPTED = "preempted-requeued"
+    SHED = "shed"
+    TERMINAL = frozenset({OK, EOS, LENGTH, DEADLINE, CANCELLED, SHED})
+
+    @classmethod
+    def valid(cls, reason) -> bool:
+        """True iff ``reason`` is a terminal FinishReason (DESIGN.md §11) —
+        the per-stream form of the no-hung-streams invariant."""
+        return reason in cls.TERMINAL
+
 
 @dataclasses.dataclass
 class Request:
@@ -211,12 +262,21 @@ class Request:
     always ends at ``max_new`` tokens or at the first ``eos_id``);
     temperature <= 0 means greedy; seed feeds this request's private PRNG
     stream (independent of co-scheduled requests).
+
+    ``deadline_ms`` / ``priority`` are the degradation-ladder knobs of
+    DESIGN.md §11: a request whose deadline (measured on the engine clock
+    from submit) expires — queued or mid-decode — terminates with
+    FinishReason ``deadline`` and frees its blocks immediately; under pool
+    pressure the scheduler preempts active requests of *strictly lower*
+    priority (larger = more important) to admit the head of the queue.
     """
     prompt: Sequence[int]
     max_new: int = 32
     temperature: float = 0.0
     eos_id: Optional[int] = None
     seed: int = 0
+    deadline_ms: Optional[float] = None
+    priority: int = 0
 
 
 class StreamHandle:
@@ -244,17 +304,56 @@ class StreamHandle:
         self.admit_time: Optional[float] = None
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
+        self.preempted = 0                 # times evicted + requeued (§11)
+        self.events: List[str] = []        # non-terminal lifecycle events
         self._sched_consumed = 0           # tokens the scheduler committed
         self._sched_fin: Optional[str] = None  # scheduler's finish verdict
+        self._cancel = False               # set by cancel(); acted on in step
+        self._t_submit: Optional[float] = None  # engine-clock submit stamp
+        self._replay_len = 0               # delivered tokens to replay (§11)
+        self._replay_cursor = 0
 
     @property
     def done(self) -> bool:
         """True once the request hit EOS or its max_new budget."""
         return self.finished
 
+    def cancel(self) -> None:
+        """Request cooperative cancellation (DESIGN.md §11): the engine
+        terminates the stream with FinishReason ``cancelled`` at its next
+        scheduler tick — queued requests never occupy a slot, running ones
+        free their pool blocks immediately.  Idempotent; a no-op once the
+        stream already finished."""
+        self._cancel = True
+
     def result(self) -> np.ndarray:
         """The generated tokens so far as a 1-D int32 array."""
         return np.asarray(self.tokens, np.int32)
+
+    def _absorb_replay(self, tokens) -> List[int]:
+        """Replay filter (DESIGN.md §11): after a preemption the request is
+        recomputed from its prompt, so the device re-generates tokens that
+        were already delivered.  Those must byte-match what the stream
+        already holds — asserted here, on both backends — and are dropped;
+        only the genuinely new suffix is returned for delivery."""
+        if self._replay_cursor >= self._replay_len:
+            return [int(t) for t in tokens]
+        fresh: List[int] = []
+        for t in tokens:
+            t = int(t)
+            if self._replay_cursor < self._replay_len:
+                want = self.tokens[self._replay_cursor]
+                if t != want:
+                    raise RuntimeError(
+                        f"preemption replay diverged for rid={self.rid}: "
+                        f"position {self._replay_cursor} regenerated {t} "
+                        f"but {want} was already delivered — "
+                        f"recompute-from-prompt must be bit-identical "
+                        f"(DESIGN.md §11)")
+                self._replay_cursor += 1
+            else:
+                fresh.append(t)
+        return fresh
 
     def __repr__(self):
         state = self.finish_reason if self.finished else "running"
@@ -362,7 +461,11 @@ class Engine:
                  pool_block_tokens: int = 16,
                  pool_memory_bytes: Optional[int] = None,
                  async_host: bool = False, host_queue: int = 8,
-                 detokenize: Optional[Callable] = None):
+                 detokenize: Optional[Callable] = None,
+                 host_spill_bytes: Optional[int] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 faults=None, step_timeout_s: Optional[float] = None,
+                 watchdog_max_trips: int = 2):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if max_len < 1:
@@ -427,11 +530,38 @@ class Engine:
         self._exec = ExecutableCache()
         self._detok = detokenize
         self._host: Optional[HostLoop] = HostLoop(
-            self._finish, detokenize, max_queue=host_queue) \
+            self._finish, detokenize, max_queue=host_queue,
+            fault_hook=getattr(faults, "on_consume", None)) \
             if async_host else None
         self._rehearse_s: Optional[float] = None
         self._counters = {"admitted": 0, "queue_wait_ticks": 0,
-                          "pool_exhausted_stalls": 0}
+                          "pool_exhausted_stalls": 0, "preemptions": 0,
+                          "spilled_blocks": 0, "restored_blocks": 0,
+                          "deadline_misses": 0, "cancelled": 0, "shed": 0,
+                          "nan_quarantines": 0, "watchdog_trips": 0}
+
+        # ----- degradation ladder + fault model (DESIGN.md §11) -----
+        if step_timeout_s is not None and step_timeout_s <= 0:
+            raise ValueError(f"step_timeout_s must be > 0, "
+                             f"got {step_timeout_s}")
+        if watchdog_max_trips < 1:
+            raise ValueError(f"watchdog_max_trips must be >= 1, "
+                             f"got {watchdog_max_trips}")
+        self._clock = clock if clock is not None else time.monotonic
+        self._faults = faults
+        self.step_timeout_s = step_timeout_s
+        self.watchdog_max_trips = int(watchdog_max_trips)
+        self._watchdog_consec = 0
+        self._wedged = False
+        self._tick = 0
+        self._last_stall_tick = -1      # one stall increment per tick (§11)
+        self._admit_seq = 0             # activation order, for victim policy
+        self._slot_seq = np.zeros((b,), np.int64)
+        self._nan_inject = np.zeros((b,), bool)
+        self._pending_restore: Dict[int, dict] = {}  # slot -> band restores
+        self._spill: Optional[HostSpillTier] = (
+            HostSpillTier(host_spill_bytes) if host_spill_bytes else None)
+        self._spill_fns: Dict[tuple, Callable] = {}
 
         # ----- paged block pool (DESIGN.md §9) -----
         self.pool_blocks = pool_blocks
@@ -452,6 +582,15 @@ class Engine:
                 f"pool_memory_bytes={pool_memory_bytes}", stacklevel=2)
         if self.pool_blocks is not None:
             self._init_pool()
+        if self._spill is not None:
+            if not self._pools:
+                raise ValueError(
+                    "host_spill_bytes requires the paged block pool "
+                    "(set pool_blocks or pool_memory_bytes): only pooled "
+                    "packed blocks spill to host RAM — DESIGN.md §11")
+            for (group, bkey), pool in self._pools.items():
+                pool.on_evict = functools.partial(
+                    self._spill_block, group, bkey)
 
     def _enumerate_pool_bands(self) -> List[tuple]:
         """Quantized bands with a packed region to pool, with per-band
@@ -549,6 +688,12 @@ class Engine:
         if request.max_new < 1:
             raise ValueError(f"Request.max_new must be >= 1, "
                              f"got {request.max_new}")
+        if request.deadline_ms is not None and request.deadline_ms <= 0:
+            raise ValueError(f"Request.deadline_ms must be > 0 (or None "
+                             f"for no deadline), got {request.deadline_ms}")
+        if request.priority != int(request.priority):
+            raise ValueError(f"Request.priority must be an integer, "
+                             f"got {request.priority!r}")
         if prompt.size + request.max_new > self.max_len:
             raise ValueError(
                 f"Request.prompt length ({prompt.size}) + Request.max_new "
@@ -570,19 +715,29 @@ class Engine:
                     f"shorten the request — it could never be admitted")
         request = dataclasses.replace(request, prompt=prompt)
         handle = StreamHandle(request, self._next_rid)
+        handle._t_submit = self._clock()   # deadline epoch (engine clock)
         self._next_rid += 1
         self._queue.append(handle)
         return handle
 
     def step(self) -> bool:
-        """One scheduler tick: retire -> admit -> [one prefill chunk] ->
-        one decode chunk (DESIGN.md §6–§7).
+        """One scheduler tick: faults -> lifecycle -> retire -> admit ->
+        [one prefill chunk] -> one decode chunk (DESIGN.md §6–§7, §11).
 
         In chunked-prefill mode at most ONE prefill chunk runs per tick,
         interleaved with the decode chunk for every already-active slot, so
         a long prompt never head-of-line-blocks decoding.  Returns False
-        when there is nothing left to do (no active slots, no prefill in
-        flight, and an empty queue)."""
+        when there is nothing left to do; a non-empty queue that cannot
+        admit (pool pressure, chaos-seized blocks) keeps returning True so
+        ``run`` never abandons queued work — the no-deadlock contract of
+        DESIGN.md §11."""
+        self._tick += 1
+        tick = getattr(self._clock, "tick", None)
+        if callable(tick):
+            tick()                       # deterministic virtual clocks
+        if self._faults is not None:
+            self._faults.on_tick(self)
+        self._lifecycle()
         self._retire()
         self._admit()
         self._counters["queue_wait_ticks"] += len(self._queue)
@@ -590,11 +745,14 @@ class Engine:
         active = [i for i in range(self.batch_slots)
                   if self._slot_handle[i] is not None]
         if not active:
-            return self._prefill_job is not None
+            return self._prefill_job is not None or bool(self._queue)
         # a request can finish at admission (max_new=1 or instant EOS) —
         # only spin the decode chunk when someone still needs tokens
         if any(not self._h_done(self._slot_handle[i]) for i in active):
             self._decode_chunk()
+            if self._wedged:
+                self._shed_all()          # watchdog abort: terminate clean
+                return False
         self._retire()
         return True
 
@@ -685,7 +843,8 @@ class Engine:
             jax.ShapeDtypeStruct((b, 2), jnp.uint32),
             jax.ShapeDtypeStruct((b,), jnp.bool_),
             jax.ShapeDtypeStruct((b,), jnp.float32),
-            jax.ShapeDtypeStruct((b,), jnp.int32))
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.bool_))
         self._exec.warm("insert", self._insert_fn(), cache_av, template,
                         i32, i32)
         self._exec.warm("reset", self._reset_fn(), cache_av, i32)
@@ -716,9 +875,25 @@ class Engine:
             self._exec.warm(
                 "pool_copy", self._pool_copy(), band_av,
                 jax.ShapeDtypeStruct((self._cow_cap(), 2), jnp.int32))
+            if self._spill is not None:
+                # spill read/restore executables (§11): warmed so host-tier
+                # traffic never triggers a post-warmup compile
+                blk_av = jax.eval_shape(
+                    functools.partial(kvc.pool_read_block, pool_axis=1),
+                    band_av, jax.ShapeDtypeStruct((), jnp.int32))
+                self._exec.warm(f"spill_read:{group}:{bkey}",
+                                self._spill_read_fn(group, bkey),
+                                band_av, i32)
+                self._exec.warm(f"spill_write:{group}:{bkey}",
+                                self._spill_write_fn(group, bkey),
+                                band_av, blk_av, i32)
         if rehearse:
             t0 = time.perf_counter()
-            self._rehearse()
+            faults, self._faults = self._faults, None   # no chaos in warmup
+            try:
+                self._rehearse()
+            finally:
+                self._faults = faults
             self._rehearse_s = time.perf_counter() - t0
         self._exec.warmed = True
         return self.warmup_report()
@@ -754,6 +929,12 @@ class Engine:
         self.n_completed = 0
         self._next_rid = 0
         self._stall_reason = None
+        self._tick = 0
+        self._last_stall_tick = -1
+        self._watchdog_consec = 0
+        self._wedged = False
+        if self._spill is not None:          # rehearsal spills don't count
+            self._spill = HostSpillTier(self._spill.budget_bytes)
         for k in self._counters:
             self._counters[k] = 0
         for pool in self._pools.values():
@@ -827,6 +1008,8 @@ class Engine:
                                         for p in self._pools.values()))}
         if self._host is not None:
             out["host"] = self._host.stats()
+        if self._spill is not None:
+            out["host_spill"] = self._spill.stats()
         if not self._pools:
             return out
         bands = {}
@@ -856,6 +1039,22 @@ class Engine:
         })
         if self._stall_reason:
             out["admission_stall"] = self._stall_reason
+        return out
+
+    def check_invariants(self) -> dict:
+        """Post-run leak/consistency audit (DESIGN.md §11): every band
+        pool's refcount/free-list/table audit
+        (:meth:`~repro.core.block_pool.BlockPool.check_invariants`) plus
+        the host spill tier's byte accounting.  Raises ``RuntimeError`` on
+        the first violation; returns per-band summaries for the chaos
+        bench and CLI gates.  Run it after draining — mid-flight state
+        (reserved blocks, pending inserts) is legitimately unbalanced."""
+        out: dict = {}
+        for (group, bkey), pool in self._pools.items():
+            out[f"{group}/{bkey}"] = pool.check_invariants()
+        if self._spill is not None:
+            self._spill.check_invariants()
+            out["host_spill"] = self._spill.stats()
         return out
 
     @property
@@ -929,16 +1128,178 @@ class Engine:
     def _retire(self):
         for i, h in enumerate(self._slot_handle):
             if h is not None and self._h_done(h):
-                self._slot_handle[i] = None
-                self._done[i] = True
-                self._eos[i] = -1
-                for pool in self._pools.values():
-                    pool.release_slot(i)   # deref blocks; shared ones live on
-                self._hostlen[i] = 0
-                if self._caches is not None:
-                    self._caches = self._call(
-                        "reset", self._reset_fn(), self._caches,
-                        jnp.int32(i))
+                self._release_slot(i)
+
+    def _release_slot(self, i: int):
+        """Free decode lane ``i``: pool blocks deref (cold registered blocks
+        spill to the host tier when enabled — DESIGN.md §11), pending
+        insert/register/restore state drops, the device row zeroes, and the
+        host mirrors clear.  Shared by retirement, preemption, cancellation,
+        deadline expiry and the watchdog abort."""
+        self._slot_handle[i] = None
+        self._done[i] = True
+        self._eos[i] = -1
+        self._nan_inject[i] = False
+        self._pending_insert.pop(i, None)
+        self._pending_register.pop(i, None)
+        for (group, bkey), rest in self._pending_restore.pop(i, {}).items():
+            for phys, key, arrays in rest:
+                if self._spill is not None:
+                    # un-applied restores go back to the tier, not the floor
+                    self._spill.put(key, arrays,
+                                    sum(a.nbytes for a in arrays.values()))
+        for pool in self._pools.values():
+            pool.release_slot(i)   # deref blocks; shared ones live on
+        self._hostlen[i] = 0
+        if self._caches is not None:
+            self._caches = self._call(
+                "reset", self._reset_fn(), self._caches, jnp.int32(i))
+
+    # ------------------------------------- lifecycle + degradation (§11)
+
+    def _expired(self, h: StreamHandle, now: float) -> bool:
+        dl = h.request.deadline_ms
+        return (dl is not None and h._t_submit is not None
+                and (now - h._t_submit) * 1e3 > dl)
+
+    def _finish_now(self, h: StreamHandle, reason: str):
+        """Terminate a stream outside the token path (deadline, cancel,
+        shed — DESIGN.md §11).  Async engines route the verdict through the
+        host-loop queue as a zero-token delivery so stream finalization
+        keeps its single writer (the consumer thread) and FIFO order."""
+        if self._host is not None:
+            h._sched_fin = reason
+            self._host.put(TokenDelivery(
+                handles=[h], rows=[0], counts=[0], reasons=[reason],
+                tokens=np.zeros((1, 1), np.int32)))
+        else:
+            self._finish(h, reason)
+
+    def _lifecycle(self):
+        """Deadline/cancel pass, once per tick (DESIGN.md §11): cancelled
+        or deadline-expired requests terminate with their structured
+        FinishReason and free their pool blocks immediately — queued ones
+        never occupy a slot, running ones release mid-stream."""
+        now = self._clock()
+        keep = []
+        for h in self._queue:
+            if h._cancel:
+                self._counters["cancelled"] += 1
+                self._finish_now(h, FinishReason.CANCELLED)
+            elif self._expired(h, now):
+                self._counters["deadline_misses"] += 1
+                self._finish_now(h, FinishReason.DEADLINE)
+            else:
+                keep.append(h)
+        self._queue = keep
+        job = self._prefill_job
+        if job is not None and (job.handle._cancel
+                                or self._expired(job.handle, now)):
+            h = job.handle
+            if h._cancel:
+                self._counters["cancelled"] += 1
+                self._finish_now(h, FinishReason.CANCELLED)
+            else:
+                self._counters["deadline_misses"] += 1
+                self._finish_now(h, FinishReason.DEADLINE)
+            self._prefill_job = None
+            self._chunk_state = job.state   # recycle the prefill buffers
+            self._release_slot(job.slot)
+        for i, h in enumerate(self._slot_handle):
+            if h is None or self._h_done(h):
+                continue
+            if h._cancel:
+                self._counters["cancelled"] += 1
+                self._finish_now(h, FinishReason.CANCELLED)
+                self._release_slot(i)
+            elif self._expired(h, now):
+                self._counters["deadline_misses"] += 1
+                self._finish_now(h, FinishReason.DEADLINE)
+                self._release_slot(i)
+
+    def _pick_victim(self, req: Request) -> Optional[int]:
+        """Victim policy (DESIGN.md §11): only slots of *strictly lower*
+        priority than the admission candidate are preemptible — equal
+        priorities stall FIFO instead, since mutual eviction would
+        livelock — and among victims, lowest priority first, last-admitted
+        first within a priority (the least sunk work)."""
+        best = None
+        for i, h in enumerate(self._slot_handle):
+            if h is None or self._h_done(h):
+                continue
+            if h.request.priority >= req.priority:
+                continue
+            rank = (h.request.priority, -int(self._slot_seq[i]))
+            if best is None or rank < best[0]:
+                best = (rank, i)
+        return None if best is None else best[1]
+
+    def _preempt_slot(self, i: int):
+        """Evict slot ``i`` back to the queue for recompute-from-prompt
+        (DESIGN.md §11).  Already-delivered tokens stay on the handle; the
+        resumed stream regenerates them deterministically (same fold-in
+        PRNG keys) and the replay filter asserts the prefix byte-matches
+        before appending anything new.  The slot's registered blocks spill
+        to the host tier (when enabled) on release, so resume often
+        restores the prompt's packed content instead of re-quantizing."""
+        h = self._slot_handle[i]
+        committed = (h._sched_consumed if self._host is not None
+                     else len(h.tokens))
+        h._replay_len = max(h._replay_len, committed)
+        h._replay_cursor = 0
+        h._sched_consumed = 0
+        h._sched_fin = None
+        h.preempted += 1
+        h.events.append(FinishReason.PREEMPTED)
+        self._counters["preemptions"] += 1
+        self._release_slot(i)
+        self._queue.append(h)   # re-sorted by (-priority, rid) at admission
+
+    def _plan_with_preemption(self, req: Request, slot: int):
+        """Admission plan for the queue head, evicting strictly-lower
+        priority victims one at a time until the plan fits or no victim
+        remains (DESIGN.md §11)."""
+        plan = self._plan_pool_admission(req, slot)
+        while plan is None:
+            victim = self._pick_victim(req)
+            if victim is None:
+                return None
+            self._preempt_slot(victim)
+            plan = self._plan_pool_admission(req, slot)
+        return plan
+
+    def _note_stall(self):
+        """Single accounting site for pool-exhaustion stalls: one stalled
+        scheduler tick increments ``pool_exhausted_stalls`` exactly once,
+        however many admission branches observe it (regression-tested in
+        tests/test_degradation.py)."""
+        if self._last_stall_tick != self._tick:
+            self._last_stall_tick = self._tick
+            self._counters["pool_exhausted_stalls"] += 1
+
+    def _shed_all(self):
+        """Watchdog abort (DESIGN.md §11): the device step is declared
+        wedged, so every queued and active stream terminates as ``shed``
+        (a valid FinishReason — ``run()`` returns instead of hanging) and
+        all pool state frees."""
+        job = self._prefill_job
+        if job is not None:
+            self._prefill_job = None
+            self._chunk_state = job.state
+            self._counters["shed"] += 1
+            self._finish_now(job.handle, FinishReason.SHED)
+            self._release_slot(job.slot)
+        for i, h in enumerate(self._slot_handle):
+            if h is None:
+                continue
+            if not self._h_done(h):
+                self._counters["shed"] += 1
+                self._finish_now(h, FinishReason.SHED)
+            self._release_slot(i)
+        for h in self._queue:
+            self._counters["shed"] += 1
+            self._finish_now(h, FinishReason.SHED)
+        self._queue = []
 
     def _admit(self):
         """Move queued requests toward decode slots (DESIGN.md §6 admission).
@@ -946,7 +1307,11 @@ class Engine:
         Whole-prompt mode prefills groups of equal-length prompts in one
         batch; chunked mode instead *reserves* a free slot and opens a
         :class:`_PrefillJob` that :meth:`_prefill_tick` advances one chunk
-        per step."""
+        per step.  The queue orders by (priority desc, rid asc) — FIFO
+        within a priority class — and under pool pressure the head may
+        preempt strictly-lower-priority active slots (DESIGN.md §11)."""
+        if len(self._queue) > 1:
+            self._queue.sort(key=lambda h: (-h.request.priority, h.rid))
         free = [i for i in range(self.batch_slots)
                 if self._slot_handle[i] is None
                 and not (self._prefill_job is not None
@@ -956,11 +1321,11 @@ class Engine:
         if self.prefill_chunk is not None:
             if self._prefill_job is None:
                 if self._pools:
-                    plan = self._plan_pool_admission(
+                    plan = self._plan_with_preemption(
                         self._queue[0].request, free[0])
                     if plan is None:
                         # FIFO: head waits for free blocks
-                        self._counters["pool_exhausted_stalls"] += 1
+                        self._note_stall()
                         return
                     handle = self._queue.pop(0)
                     # content lands at _finish_prefill: defer registration
@@ -981,9 +1346,10 @@ class Engine:
             self._stall_reason = None
             while self._queue and len(taken) < len(free):
                 slot = free[len(taken)]
-                plan = self._plan_pool_admission(self._queue[0].request, slot)
+                plan = self._plan_with_preemption(self._queue[0].request,
+                                                  slot)
                 if plan is None:
-                    self._counters["pool_exhausted_stalls"] += 1
+                    self._note_stall()
                     break
                 h = self._queue.pop(0)
                 self._commit_pool_admission(h, slot, plan)
@@ -1057,23 +1423,43 @@ class Engine:
                                register: bool = True):
         """Apply a planned admission: ref prefix hits, alloc misses into the
         slot's table, reserve the remaining decode blocks, and record which
-        blocks still need their quantized content inserted after prefill."""
-        pend, pend_reg = {}, {}
+        blocks still need their quantized content inserted after prefill.
+
+        Misses first consult the host spill tier (DESIGN.md §11): a block
+        whose content-hash key was spilled restores its exact packed bytes
+        into a fresh physical block instead of re-quantizing from the
+        prompt — it counts as a prefix hit and is excluded from the
+        post-prefill insert list.  The host arrays are popped here (the LRU
+        could evict them before activation) and written back to the device
+        at :meth:`_apply_pool_insert`."""
+        pend, pend_reg, pend_res = {}, {}, {}
         for (group, bkey), (hits, tail_key, tail_phys, eventual,
                             n_hit) in plans.items():
             pool = self._pools[(group, bkey)]
-            miss_pairs, reg, now = [], [], 0
+            miss_pairs, reg, restores, now = [], [], [], 0
+
+            def take(lb, key, pool=pool, slot=slot, miss_pairs=miss_pairs,
+                     reg=reg, restores=restores):
+                fresh = pool.alloc(slot)
+                pool.assign(slot, lb, fresh)
+                arrays = (self._spill.pop(key)
+                          if self._spill is not None else None)
+                if arrays is not None:
+                    pool.hits += 1
+                    restores.append((fresh, key, arrays))
+                    self._counters["restored_blocks"] += 1
+                else:
+                    pool.misses += 1
+                    miss_pairs.append((lb, fresh))
+                reg.append((key, fresh))
+
             for lb, key, phys in hits:
                 if phys is not None:
                     pool.ref(phys)
                     pool.assign(slot, lb, phys)
                     pool.hits += 1
                 else:
-                    fresh = pool.alloc(slot)
-                    pool.assign(slot, lb, fresh)
-                    pool.misses += 1
-                    miss_pairs.append((lb, fresh))
-                    reg.append((key, fresh))
+                    take(lb, key)
                     now += 1
             if tail_key is not None:
                 if tail_phys is not None:
@@ -1081,11 +1467,7 @@ class Engine:
                     pool.assign(slot, len(hits), tail_phys)
                     pool.hits += 1
                 else:
-                    fresh = pool.alloc(slot)
-                    pool.assign(slot, len(hits), fresh)
-                    pool.misses += 1
-                    miss_pairs.append((len(hits), fresh))
-                    reg.append((tail_key, fresh))
+                    take(len(hits), tail_key)
                     now += 1
             # decode still needs (eventual - full hits - allocated-now)
             # blocks; a shared tail counts — its first write goes CoW
@@ -1096,7 +1478,11 @@ class Engine:
             else:
                 pend_reg[(group, bkey)] = reg
             pend[(group, bkey)] = miss_pairs
+            if restores:
+                pend_res[(group, bkey)] = restores
         self._pending_insert[slot] = pend
+        if pend_res:
+            self._pending_restore[slot] = pend_res
         if not register:
             self._pending_register[slot] = pend_reg
 
@@ -1108,6 +1494,40 @@ class Engine:
                     d, s, p, src_slot=r, pool_axis=1),
                 donate_argnums=0)
         return self._pool_insert_fns[key]
+
+    # --------------------------------------------- host spill tier (§11)
+
+    def _spill_read_fn(self, group: str, bkey: str) -> Callable:
+        key = ("read", group, bkey)
+        if key not in self._spill_fns:
+            self._spill_fns[key] = jax.jit(
+                lambda c, p: kvc.pool_read_block(c, p, pool_axis=1))
+        return self._spill_fns[key]
+
+    def _spill_write_fn(self, group: str, bkey: str) -> Callable:
+        key = ("write", group, bkey)
+        if key not in self._spill_fns:
+            self._spill_fns[key] = jax.jit(
+                lambda c, blk, p: kvc.pool_write_block(c, blk, p,
+                                                       pool_axis=1),
+                donate_argnums=0)
+        return self._spill_fns[key]
+
+    def _spill_block(self, group: str, bkey: str, key: str, phys: int):
+        """``BlockPool.on_evict`` hook (DESIGN.md §11): a hash-registered
+        block just hit refcount 0 — read its packed planes off the device
+        and park them in the LRU host tier instead of losing the content.
+        Block keys are band-salted by :func:`prefix_block_keys`, so one
+        shared tier serves every band without collisions."""
+        if self._spill is None or self._caches is None:
+            return
+        blk = self._call(f"spill_read:{group}:{bkey}",
+                         self._spill_read_fn(group, bkey),
+                         self._band_cache_ref(group, bkey), jnp.int32(phys))
+        arrays = {k: np.asarray(v) for k, v in blk.items()}
+        if self._spill.put(key, arrays,
+                           sum(a.nbytes for a in arrays.values())):
+            self._counters["spilled_blocks"] += 1
 
     def _band_cache_ref(self, group: str, bkey: str):
         g = self._caches[group]
@@ -1132,6 +1552,16 @@ class Engine:
         prefix keys now that the content is on device."""
         pend = self._pending_insert.pop(slot, None)
         pend_reg = self._pending_register.pop(slot, {})
+        for (group, bkey), rest in self._pending_restore.pop(
+                slot, {}).items():
+            for phys, key, arrays in rest:
+                out = self._call(
+                    f"spill_write:{group}:{bkey}",
+                    self._spill_write_fn(group, bkey),
+                    self._band_cache_ref(group, bkey),
+                    {k: jnp.asarray(v) for k, v in arrays.items()},
+                    jnp.int32(phys))
+                self._set_band_cache(group, bkey, out)
         if pend is None:
             return
         for (group, bkey), miss_pairs in pend.items():
@@ -1224,6 +1654,8 @@ class Engine:
                 self._hostlen[slot] = len(h.request.prompt)
             req = h.request
             self._slot_handle[slot] = h
+            self._slot_seq[slot] = self._admit_seq   # victim order (§11)
+            self._admit_seq += 1
             self._tok[slot, 0] = first[row]
             self._keys[slot] = keys[row]
             self._temps[slot] = max(req.temperature, 0.0)
@@ -1309,6 +1741,8 @@ class Engine:
         self._counters["admitted"] += 1
         req = h.request
         self._slot_handle[slot] = h
+        self._slot_seq[slot] = self._admit_seq       # victim order (§11)
+        self._admit_seq += 1
         self._tok[slot, 0] = first
         self._keys[slot] = np.asarray(keys)[0]
         self._temps[slot] = max(req.temperature, 0.0)
@@ -1359,17 +1793,25 @@ class Engine:
         if self._pools:
             self._pool_prewrite()
             self._flush_tables()
-        toks, tok, caches, keys, done, live = self._call(
+        t0 = time.perf_counter()
+        toks, tok, caches, keys, done, bad, live = self._call(
             "multi", self._multi_fn(),
             self.params, jnp.asarray(self._tok), self._caches,
             jnp.asarray(self._keys), jnp.asarray(self._done),
-            jnp.asarray(self._temps), jnp.asarray(self._eos))
+            jnp.asarray(self._temps), jnp.asarray(self._eos),
+            jnp.asarray(self._nan_inject))
         self._caches = caches
         # np.array copies: jax->numpy views are read-only and the scheduler
         # mutates these in place at retire/admit time
         self._tok = np.array(tok)
         self._keys = np.array(keys)
         done_np = self._done = np.array(done)
+        bad_np = np.asarray(bad)
+        # one-shot injections reset only AFTER the outputs above forced the
+        # computation: jnp.asarray(self._nan_inject) may alias the numpy
+        # buffer on CPU, so zeroing before the sync races the device read
+        self._nan_inject[:] = False
+        self._watchdog(time.perf_counter() - t0)
         if self._host is not None:
             # async (DESIGN.md §10): decide finishes from the tiny per-slot
             # live counts; the big token array stays on device and the
@@ -1382,12 +1824,22 @@ class Engine:
                 if h is None or h._sched_fin is not None:
                     continue
                 self._hostlen[i] += self.steps_per_sync
+                if bool(bad_np[i]):
+                    # NaN quarantine (§11): the slot's logits went
+                    # non-finite — drop the chunk, shed the stream
+                    self._counters["nan_quarantines"] += 1
+                    h._sched_fin = FinishReason.SHED
+                    handles.append(h)
+                    rows.append(i)
+                    counts.append(0)
+                    reasons.append(FinishReason.SHED)
+                    continue
                 left = h.request.max_new - h._sched_consumed
                 n_live = int(live[i])
                 if bool(done_np[i]) and n_live <= left:
-                    consumed, reason = n_live, "eos"
+                    consumed, reason = n_live, FinishReason.EOS
                 elif left <= n_live:
-                    consumed, reason = left, "length"
+                    consumed, reason = left, FinishReason.LENGTH
                 else:
                     consumed, reason = n_live, None
                 h._sched_consumed += consumed
@@ -1403,23 +1855,48 @@ class Engine:
             return
         toks = np.asarray(toks)                 # ONE sync per chunk
         for i in range(self.batch_slots):
-            if self._slot_handle[i] is not None:
-                self._hostlen[i] += self.steps_per_sync
-                self._deliver(i, toks[i].tolist())
+            h = self._slot_handle[i]
+            if h is None:
+                continue
+            self._hostlen[i] += self.steps_per_sync
+            if bool(bad_np[i]) and not h.finished:
+                self._counters["nan_quarantines"] += 1
+                self._finish(h, FinishReason.SHED)   # retire frees the slot
+                continue
+            self._deliver(i, toks[i].tolist())
+
+    def _watchdog(self, dt: float):
+        """Device-step watchdog (DESIGN.md §11): a decode chunk exceeding
+        ``step_timeout_s`` (wall time plus any fault-injected deterministic
+        delay) is a trip; ``watchdog_max_trips`` *consecutive* trips
+        declare the device wedged, and :meth:`step` sheds all work rather
+        than hanging.  A healthy chunk resets the streak."""
+        extra = (self._faults.take_step_delay()
+                 if self._faults is not None else 0.0)
+        if self.step_timeout_s is None:
+            return
+        if dt + extra > self.step_timeout_s:
+            self._counters["watchdog_trips"] += 1
+            self._watchdog_consec += 1
+            if self._watchdog_consec >= self.watchdog_max_trips:
+                self._wedged = True
+        else:
+            self._watchdog_consec = 0
 
     def _admit_deliver(self, slot: int, h: StreamHandle, first: int):
         """Deliver a request's first (admission-sampled) token: directly in
         the synchronous loop, via the host-loop queue in async mode — the
         same transport every decode chunk takes (DESIGN.md §10)."""
         if self._host is None:
-            h.first_token_time = time.time()
+            if h.first_token_time is None:   # preserved across preemptions
+                h.first_token_time = time.time()
             self._deliver(slot, [first])
             return
         req = h.request
         if req.eos_id is not None and first == req.eos_id:
-            reason = "eos"
+            reason = FinishReason.EOS
         elif req.max_new <= 1:
-            reason = "length"
+            reason = FinishReason.LENGTH
         else:
             reason = None
         h._sched_consumed = 1
@@ -1429,19 +1906,24 @@ class Engine:
             tokens=np.asarray([[first]], np.int32)))
 
     def _deliver(self, slot: int, tokens: List[int]):
-        """Append chunk tokens to a slot's handle, honoring eos/max_new."""
+        """Append chunk tokens to a slot's handle, honoring eos/max_new.
+        Post-preemption residencies run the replay filter first
+        (DESIGN.md §11): regenerated tokens the stream already delivered
+        are asserted equal and dropped."""
         h = self._slot_handle[slot]
+        if h.finished:
+            return
         req = h.request
         taken: List[int] = []
-        for t in tokens:
+        for t in h._absorb_replay(tokens):
             if h.finished:
                 break
-            h.tokens.append(int(t))
-            taken.append(int(t))
-            if req.eos_id is not None and int(t) == req.eos_id:
-                self._finish(h, "eos")
+            h.tokens.append(t)
+            taken.append(t)
+            if req.eos_id is not None and t == req.eos_id:
+                self._finish(h, FinishReason.EOS)
             elif len(h.tokens) >= req.max_new:
-                self._finish(h, "length")
+                self._finish(h, FinishReason.LENGTH)
         if self._detok is not None and taken:
             h.text += self._detok(taken)
 

@@ -24,6 +24,13 @@ moves the host side of each chunk onto a background consumer thread:
   thread.  A consumer exception is captured and re-raised on the caller's
   thread at the next ``put``/``drain`` — it can't vanish into a daemon
   thread.
+
+Fault containment (DESIGN.md §11): a transient consumer failure raised as
+:class:`HostLoopCrash` — the fault injector's consumer-crash model — is
+*contained*, not fatal: the loop counts the crash, retries the same item
+in order (bounded retries), and keeps serving, so a flaky downstream
+consumer degrades to a retry instead of wedging every stream.  Any other
+exception keeps the legacy capture-and-re-raise contract.
 """
 from __future__ import annotations
 
@@ -35,9 +42,20 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["TokenDelivery", "HostLoop"]
+__all__ = ["TokenDelivery", "HostLoop", "HostLoopCrash"]
 
 _SENTINEL = object()
+_CRASH_RETRIES = 3     # per-item HostLoopCrash retries before giving up
+
+
+class HostLoopCrash(RuntimeError):
+    """A transient, retryable consumer failure (DESIGN.md §11).
+
+    Raised by fault injectors (``serving/faults.py``) — and available to
+    real consumer hooks — to model a crash that should be *survived*: the
+    host loop retries the item in place (preserving FIFO delivery order
+    and bit-identical streams) up to a bounded number of attempts before
+    escalating to the legacy fatal path."""
 
 
 @dataclasses.dataclass
@@ -65,11 +83,13 @@ class HostLoop:
     """
 
     def __init__(self, finish_fn: Callable, detokenize: Optional[Callable]
-                 = None, max_queue: int = 8):
+                 = None, max_queue: int = 8,
+                 fault_hook: Optional[Callable] = None):
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self._finish = finish_fn
         self._detok = detokenize
+        self._fault_hook = fault_hook   # chaos: may raise HostLoopCrash
         self.max_queue = max_queue
         self._q: queue.Queue = queue.Queue(maxsize=max_queue)
         self._thread: Optional[threading.Thread] = None
@@ -80,6 +100,8 @@ class HostLoop:
         self.backpressure_waits = 0
         self.backpressure_s = 0.0
         self.max_depth = 0
+        self.crashes = 0        # HostLoopCrash occurrences survived (§11)
+        self.retries = 0        # item re-consume attempts after a crash
 
     # ------------------------------------------------------------ scheduler side
 
@@ -130,6 +152,7 @@ class HostLoop:
                 "queue_depth": self.queue_depth, "max_depth": self.max_depth,
                 "backpressure_waits": self.backpressure_waits,
                 "backpressure_s": round(self.backpressure_s, 6),
+                "crashes": self.crashes, "retries": self.retries,
                 "alive": self._thread is not None}
 
     # ------------------------------------------------------------- consumer side
@@ -152,18 +175,35 @@ class HostLoop:
                 if item is _SENTINEL:
                     return
                 if self._error is None:   # after a failure: drain, don't run
-                    self._consume(item)
+                    for attempt in range(_CRASH_RETRIES + 1):
+                        try:
+                            self._consume(item)
+                            break
+                        except HostLoopCrash as e:
+                            # transient crash model (§11): retry the same
+                            # item in place — FIFO order preserved, no
+                            # delivery happened yet (the hook fires before
+                            # any handle mutation)
+                            self.crashes += 1
+                            if attempt >= _CRASH_RETRIES:
+                                self._error = e
+                                break
+                            self.retries += 1
             except BaseException as e:    # noqa: BLE001 — reped to caller
                 self._error = e
             finally:
                 self._q.task_done()
 
     def _consume(self, item: TokenDelivery) -> None:
+        if self._fault_hook is not None:
+            self._fault_hook(item)        # may raise HostLoopCrash (§11)
         arr = np.asarray(item.tokens)     # device->host copy, off-scheduler
         now = time.time()
         for h, row, n, reason in zip(item.handles, item.rows, item.counts,
                                      item.reasons):
-            toks = [int(t) for t in arr[row, :n]]
+            toks = h._absorb_replay(arr[row, :n]) \
+                if getattr(h, "_absorb_replay", None) else \
+                [int(t) for t in arr[row, :n]]
             if toks and h.first_token_time is None:
                 h.first_token_time = now
             h.tokens.extend(toks)

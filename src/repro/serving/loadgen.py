@@ -42,7 +42,9 @@ class WorkloadSpec:
     ``shared_prefix_ratio`` is the fraction of prompts that start with one
     common ``shared_prefix_len``-token prefix (the pool's prefix-sharing
     traffic knob); ``temperature``/``eos_id`` pass through to each
-    :class:`repro.serving.engine.Request`.  Everything is driven by
+    :class:`repro.serving.engine.Request`, as do the degradation knobs
+    (DESIGN.md §11): every request gets ``deadline_ms`` and a priority
+    sampled uniformly from ``priorities``.  Everything is driven by
     ``seed`` — two specs with equal fields produce identical traces.
     """
     n_requests: int = 16
@@ -54,6 +56,8 @@ class WorkloadSpec:
     shared_prefix_ratio: float = 0.0
     shared_prefix_len: int = 0
     vocab: int = 256
+    deadline_ms: Optional[float] = None
+    priorities: Sequence[int] = (0,)
     seed: int = 0
 
     def __post_init__(self):
@@ -75,6 +79,11 @@ class WorkloadSpec:
                     f"shared_prefix_len ({self.shared_prefix_len}) must be "
                     f"shorter than the shortest prompt mix entry "
                     f"({min(self.prompt_lens)})")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, "
+                             f"got {self.deadline_ms}")
+        if not self.priorities:
+            raise ValueError("priorities must be non-empty")
 
 
 @dataclasses.dataclass
@@ -107,9 +116,14 @@ def poisson_trace(spec: WorkloadSpec) -> List[Arrival]:
         body = rng.integers(0, spec.vocab,
                             size=plen - (len(prefix) if shared else 0))
         prompt = np.concatenate([prefix, body]) if shared else body
+        # only consume rng state for priorities when the mix is non-trivial,
+        # so pre-degradation traces stay byte-identical (DESIGN.md §11)
+        prio = int(rng.choice(np.asarray(spec.priorities))) \
+            if len(spec.priorities) > 1 else int(spec.priorities[0])
         out.append(Arrival(t=t, request=Request(
             prompt=prompt.astype(np.int32), max_new=max_new,
             temperature=spec.temperature, eos_id=spec.eos_id,
+            deadline_ms=spec.deadline_ms, priority=prio,
             seed=spec.seed * 100003 + i)))
     return out
 

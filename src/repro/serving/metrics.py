@@ -179,6 +179,10 @@ class MetricsRecorder:
         keeps open- and closed-loop rows comparable."""
         recs = list(self.records.values())
         done = [r for r in recs if r.finish_s is not None]
+        reasons: Dict[str, int] = {}
+        for r in recs:
+            key = r.finish_reason if r.finish_reason is not None else "none"
+            reasons[key] = reasons.get(key, 0) + 1
         last_arrival = max((r.arrival_s for r in recs), default=0.0)
         makespan = max((r.finish_s for r in done), default=0.0)
         n_toks = sum(r.n_tokens for r in done)
@@ -189,6 +193,7 @@ class MetricsRecorder:
             "achieved_rps": len(done) / max(makespan, 1e-9),
             "achieved_tok_s": n_toks / max(makespan, 1e-9),
             "makespan_s": makespan,
+            "finish_reasons": reasons,
             "ttft_ms": percentiles([r.ttft_ms for r in recs
                                     if r.ttft_ms is not None]),
             "tpot_ms": percentiles([r.tpot_ms for r in recs

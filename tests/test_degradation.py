@@ -1,0 +1,534 @@
+"""Graceful degradation under pool pressure (DESIGN.md §11): preemption,
+host-RAM block spill, request deadlines, and the fault-injection harness.
+
+Acceptance:
+  (a) priority preemption: a higher-priority arrival evicts a
+      strictly-lower-priority running slot (equal priority never preempts),
+      the victim requeues, and its resumed stream is BIT-IDENTICAL to an
+      uninterrupted run — on both decode backends, including the
+      preempt -> requeue -> prefix-hit -> resume round trip;
+  (b) a seeded chaos trace replayed twice produces identical FinishReasons
+      and identical token streams (determinism is what makes robustness
+      CI-gateable);
+  (c) host spill: cold refcount-0 blocks and preempted slots' blocks park
+      in the LRU host tier and restore on demand — avoiding at least one
+      full re-quantization in a shared-prefix workload — under a byte
+      budget, with bit-parity against a never-spilling engine;
+  (d) deadlines and cancellation finish queued AND running requests with
+      structured reasons and free their blocks immediately;
+  (e) NaN quarantine sheds exactly the poisoned slot; the watchdog sheds
+      everything after consecutive step timeouts; a host-loop consumer
+      crash is retried in place without dropping or duplicating a token;
+  (f) `pool_exhausted_stalls` increments exactly once per stalled tick in
+      both admission modes (the §11 double-count audit);
+  (g) after every scenario `Engine.check_invariants()` finds zero leaked
+      blocks and every stream carries a valid terminal FinishReason.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.policy import QuantPolicy
+from repro.core.block_pool import BlockPool, HostSpillTier
+from repro.models.config import ArchConfig
+from repro.models import transformer as T
+from repro.serving import (Engine, Request, FinishReason, HostLoop,
+                           HostLoopCrash, TokenDelivery, WorkloadSpec,
+                           poisson_trace, run_open_loop, ChaosEvent,
+                           ChaosSpec, chaos_trace, TickClock, FaultInjector)
+
+CFG = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, head_dim=32, d_ff=32, vocab_size=64)
+POL = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=16, window=8, n_sink=4)
+BACKENDS = ["reference", "pallas"]
+# packed region: max_len 44 - (window 8 + sink 4) = 32 tokens = 4 x 8
+MAX_LEN, BT = 44, 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(2))
+
+
+def _prompt(seed, n):
+    return np.asarray(np.random.default_rng(seed).integers(
+        0, CFG.vocab_size, (n,)), np.int32)
+
+
+def _engine(params, **kw):
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("steps_per_sync", 2)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("pool_blocks", 24)
+    kw.setdefault("pool_block_tokens", BT)
+    return Engine(params, CFG, POL, **kw)
+
+
+def _drive(eng, cap=800):
+    n = 0
+    while eng.step():
+        n += 1
+        assert n < cap, "engine still busy — hung stream / deadlock"
+    eng.drain()
+
+
+# ------------------------------------------------------ taxonomy & trace
+
+def test_finish_reason_taxonomy():
+    for r in ("ok", "eos", "length", "deadline", "cancelled", "shed"):
+        assert r in FinishReason.TERMINAL and FinishReason.valid(r)
+    # preemption is an event, not a terminal state
+    assert FinishReason.PREEMPTED not in FinishReason.TERMINAL
+    assert not FinishReason.valid(FinishReason.PREEMPTED)
+    assert not FinishReason.valid(None)
+    assert not FinishReason.valid("exploded")
+
+
+def test_chaos_trace_deterministic_and_validated():
+    spec = ChaosSpec(n_events=8, kinds=("pool", "nan"), horizon_ticks=40,
+                     seed=3)
+    a, b = chaos_trace(spec), chaos_trace(spec)
+    assert a == b
+    assert all(1 <= e.tick <= 40 and e.kind in ("pool", "nan") for e in a)
+    assert [e.tick for e in a] == sorted(e.tick for e in a)
+    # a different seed must actually move the faults
+    c = chaos_trace(ChaosSpec(n_events=8, kinds=("pool", "nan"),
+                              horizon_ticks=40, seed=4))
+    assert a != c
+    with pytest.raises(ValueError, match="kind"):
+        ChaosEvent(tick=1, kind="meteor")
+    with pytest.raises(ValueError, match="tick"):
+        ChaosEvent(tick=0, kind="pool")
+    with pytest.raises(ValueError, match="kinds"):
+        ChaosSpec(kinds=("pool", "asteroid"))
+    with pytest.raises(ValueError, match="n_events"):
+        ChaosSpec(n_events=0)
+
+
+def test_tick_clock():
+    clk = TickClock(dt_s=0.5)
+    assert clk() == 0.0
+    clk.tick(); clk.tick()
+    assert clk() == 1.0
+    with pytest.raises(ValueError, match="dt_s"):
+        TickClock(dt_s=0.0)
+
+
+# --------------------------------------------------- spill tier & audits
+
+def test_host_spill_tier_lru_budget():
+    tier = HostSpillTier(budget_bytes=100)
+    a = {"k": np.zeros(10, np.uint8)}
+    assert tier.put("a", a, 40) and tier.put("b", dict(a), 40)
+    # touching "a" makes "b" the LRU victim for the next over-budget put
+    assert tier.get("a") is not None
+    assert tier.put("c", dict(a), 40)
+    st = tier.stats()
+    assert st["entries"] == 2 and st["evicted"] == 1
+    assert tier.get("b") is None            # evicted
+    # a block larger than the whole budget is rejected, not held partially
+    assert not tier.put("huge", dict(a), 101)
+    assert tier.stats()["rejected"] == 1
+    # pop restores and removes
+    assert tier.pop("a") is not None and tier.get("a") is None
+    assert tier.stats()["restored"] == 1
+    tier.check_invariants()
+
+
+def test_block_pool_audit_and_seize():
+    pool = BlockPool(n_blocks=8, n_slots=2, n_table=6, block_nbytes=64)
+    pool.check_invariants()
+    held = pool.seize(3)
+    assert len(held) == 3 and pool.stats()["seized"] == 3
+    pool.check_invariants()                  # seized blocks are accounted
+    pool.release_seized(held)
+    assert pool.stats()["seized"] == 0
+    pool.check_invariants()
+    # a corrupted free list must be caught
+    phys = pool.alloc(0)
+    pool._free.append(phys)                  # double-free corruption
+    with pytest.raises(RuntimeError):
+        pool.check_invariants()
+
+
+# ------------------------------------------------- (f) stall accounting
+
+@pytest.mark.parametrize("chunked", [True, False])
+def test_pool_stall_counts_once_per_tick(params, chunked):
+    """One stalled scheduler tick must increment pool_exhausted_stalls by
+    exactly one, in both admission modes (DESIGN.md §11 audit)."""
+    eng = _engine(params, pool_blocks=5,
+                  prefill_chunk=8 if chunked else None)
+    h0 = eng.submit(Request(prompt=_prompt(0, 21), max_new=16, seed=0))
+    h1 = eng.submit(Request(prompt=_prompt(1, 21), max_new=16, seed=1))
+    stalls = []
+    n = 0
+    while eng.step():
+        n += 1
+        assert n < 800
+        stalls.append(eng.stats()["counters"]["pool_exhausted_stalls"])
+    # equal priority: h1 must stall while h0 holds the pool, and every
+    # stalled tick contributes exactly 1 (deltas are only ever 0 or 1)
+    deltas = np.diff([0] + stalls)
+    assert max(stalls) >= 1
+    assert set(deltas.tolist()) <= {0, 1}
+    assert all(h.finish_reason == FinishReason.LENGTH for h in (h0, h1))
+    assert eng.stats()["counters"]["preemptions"] == 0  # equal priority
+    eng.check_invariants()
+    eng.close()
+
+
+# ------------------------------------------- (a) preemption + bit replay
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_preemption_resume_bit_identical(params, backend):
+    """A higher-priority arrival preempts the running lower-priority slot;
+    the victim requeues, re-admits (prefix-hitting its own spilled
+    blocks), and finishes with a stream bit-identical to an uninterrupted
+    run on the same backend."""
+    def serve(pool_blocks, submit_hi_late):
+        eng = _engine(params, pool_blocks=pool_blocks, backend=backend,
+                      host_spill_bytes=1 << 20, clock=TickClock(0.01))
+        lo = eng.submit(Request(prompt=_prompt(0, 21), max_new=16, seed=0,
+                                priority=0))
+        hi = None
+        n = 0
+        while True:
+            worked = eng.step()
+            n += 1
+            assert n < 800, "hung"
+            if hi is None and (not submit_hi_late or len(lo.tokens) >= 3):
+                hi = eng.submit(Request(prompt=_prompt(9, 21), max_new=16,
+                                        seed=9, priority=5))
+            if not worked and hi is not None:
+                break
+        c = eng.stats()["counters"]
+        eng.check_invariants()
+        eng.close()
+        return lo, hi, c
+
+    lo, hi, c = serve(pool_blocks=5, submit_hi_late=True)
+    assert c["preemptions"] >= 1 and lo.preempted >= 1
+    assert FinishReason.PREEMPTED in lo.events
+    assert c["restored_blocks"] >= 1       # resume prefix-hit its spill
+    assert lo.finish_reason == FinishReason.LENGTH
+    assert hi.finish_reason == FinishReason.LENGTH
+
+    # uninterrupted baseline: generous pool, same requests
+    rl, rh, c2 = serve(pool_blocks=24, submit_hi_late=False)
+    assert c2["preemptions"] == 0
+    assert lo.tokens == rl.tokens, "preempted stream diverged on resume"
+    assert hi.tokens == rh.tokens
+
+
+def test_equal_priority_never_preempts(params):
+    """Anti-livelock: under the same pressure, an equal-priority arrival
+    waits instead of evicting (DESIGN.md §11 victim policy)."""
+    eng = _engine(params, pool_blocks=5, host_spill_bytes=1 << 20,
+                  clock=TickClock(0.01))
+    a = eng.submit(Request(prompt=_prompt(0, 21), max_new=16, seed=0,
+                           priority=3))
+    b = None
+    n = 0
+    while True:
+        worked = eng.step()
+        n += 1
+        assert n < 800
+        if b is None and len(a.tokens) >= 3:
+            b = eng.submit(Request(prompt=_prompt(9, 21), max_new=16,
+                                   seed=9, priority=3))
+        if not worked and b is not None:
+            break
+    assert eng.stats()["counters"]["preemptions"] == 0
+    assert a.preempted == 0 and b.preempted == 0
+    assert a.finish_reason == b.finish_reason == FinishReason.LENGTH
+    eng.check_invariants()
+    eng.close()
+
+
+# --------------------------------------------- (b) chaos determinism
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_chaos_trace_replay_is_deterministic(params, backend):
+    """The same seeded chaos trace replayed twice yields identical
+    FinishReasons and bit-identical streams (DESIGN.md §11)."""
+    events = chaos_trace(ChaosSpec(n_events=5, kinds=("pool", "nan"),
+                                   horizon_ticks=16, duration=3,
+                                   magnitude=0.6, seed=5))
+
+    def run_once():
+        eng = _engine(params, pool_blocks=10, backend=backend,
+                      host_spill_bytes=1 << 20, clock=TickClock(0.01),
+                      faults=FaultInjector(events))
+        hs = [eng.submit(Request(prompt=_prompt(i, 14), max_new=8, seed=i,
+                                 priority=i % 2))
+              for i in range(4)]
+        _drive(eng)
+        out = [(h.tokens[:], h.finish_reason, h.preempted) for h in hs]
+        eng.check_invariants()
+        eng.close()
+        return out
+
+    a, b = run_once(), run_once()
+    assert a == b, "chaos replay diverged"
+    assert all(FinishReason.valid(r) for _, r, _ in a)
+
+
+# ------------------------------------------------ (c) host spill tier
+
+def test_spill_restore_avoids_requantization(params):
+    """Across waves, a shared prefix whose blocks aged out of the pool is
+    restored from the host tier instead of re-quantized: restored_blocks
+    > 0, the second wave re-quantizes fewer blocks than the first, and
+    the streams match a never-spilling engine bit for bit."""
+    pref = _prompt(42, 24)
+
+    def mk(i):
+        return Request(prompt=np.concatenate(
+            [pref, _prompt(100 + i, 8)]).astype(np.int32), max_new=2, seed=i)
+
+    def serve(spill):
+        eng = _engine(params, batch_slots=1, pool_blocks=8,
+                      host_spill_bytes=(1 << 20) if spill else None)
+        toks, miss_per_wave = [], []
+        for i in range(2):
+            before = sum(p.misses for p in eng._pools.values())
+            h = eng.submit(mk(i))
+            eng.run([h])
+            toks.append(h.tokens[:])
+            miss_per_wave.append(
+                sum(p.misses for p in eng._pools.values()) - before)
+        c = eng.stats()["counters"]
+        eng.check_invariants()
+        eng.close()
+        return toks, miss_per_wave, c
+
+    toks, misses, c = serve(spill=True)
+    assert c["restored_blocks"] >= 1, "no block restored from host tier"
+    assert c["spilled_blocks"] >= 1
+    # the restored blocks are exactly the re-quantization work avoided
+    assert misses[1] < misses[0]
+    ref_toks, ref_misses, _ = serve(spill=False)
+    assert toks == ref_toks, "spill restore changed tokens"
+    assert misses[1] < ref_misses[1]
+
+
+def test_spill_budget_evicts_lru(params):
+    """A one-block byte budget keeps the tier within budget by evicting
+    LRU entries (accounted, never leaked)."""
+    eng = _engine(params, batch_slots=1, pool_blocks=8)
+    # find the per-block host footprint from a real spill
+    probe = _engine(params, batch_slots=1, pool_blocks=8,
+                    host_spill_bytes=1 << 20)
+    h = probe.submit(Request(prompt=_prompt(0, 24), max_new=2, seed=0))
+    probe.run([h])
+    per_block = probe.stats()["host_spill"]["bytes"] // max(
+        probe.stats()["host_spill"]["entries"], 1)
+    probe.close()
+    eng.close()
+
+    eng = _engine(params, batch_slots=1, pool_blocks=8,
+                  host_spill_bytes=per_block)   # room for exactly one block
+    for i in range(2):
+        h = eng.submit(Request(prompt=_prompt(i, 24), max_new=2, seed=i))
+        eng.run([h])
+    st = eng.stats()["host_spill"]
+    assert st["bytes"] <= per_block
+    assert st["entries"] <= 1
+    assert st["evicted"] >= 1
+    eng.check_invariants()
+    eng.close()
+
+
+# ------------------------------------- (d) deadlines and cancellation
+
+def test_deadline_expires_running_and_queued(params):
+    clk = TickClock(dt_s=10.0)               # 10_000 ms per tick
+    eng = _engine(params, clock=clk, batch_slots=1)
+    run = eng.submit(Request(prompt=_prompt(0, 14), max_new=30, seed=0,
+                             deadline_ms=25_000))
+    queued = eng.submit(Request(prompt=_prompt(1, 14), max_new=4, seed=1,
+                                deadline_ms=1.0))   # dead before admission
+    ok = eng.submit(Request(prompt=_prompt(2, 14), max_new=4, seed=2))
+    _drive(eng)
+    assert run.finish_reason == FinishReason.DEADLINE and run.tokens
+    assert queued.finish_reason == FinishReason.DEADLINE
+    assert not queued.tokens
+    assert ok.finish_reason == FinishReason.LENGTH
+    assert eng.stats()["counters"]["deadline_misses"] == 2
+    eng.check_invariants()
+    eng.close()
+
+
+def test_cancel_queued_and_running(params):
+    eng = _engine(params, batch_slots=1)
+    a = eng.submit(Request(prompt=_prompt(0, 14), max_new=30, seed=0))
+    b = eng.submit(Request(prompt=_prompt(1, 14), max_new=4, seed=1))
+    b.cancel()                                # still queued
+    n = 0
+    while eng.step():
+        n += 1
+        assert n < 800
+        if len(a.tokens) >= 3 and not a.finished:
+            a.cancel()                        # mid-decode
+    eng.drain()
+    assert a.finish_reason == FinishReason.CANCELLED
+    assert 3 <= len(a.tokens) < 30
+    assert b.finish_reason == FinishReason.CANCELLED and not b.tokens
+    assert eng.stats()["counters"]["cancelled"] == 2
+    eng.check_invariants()
+    eng.close()
+
+
+def test_request_validation(params):
+    eng = _engine(params)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.submit(Request(prompt=_prompt(0, 8), deadline_ms=0.0))
+    with pytest.raises(ValueError, match="priority"):
+        eng.submit(Request(prompt=_prompt(0, 8), priority=1.5))
+    eng.close()
+    with pytest.raises(ValueError, match="host_spill_bytes"):
+        _engine(params, pool_blocks=None, host_spill_bytes=1 << 20)
+
+
+# ------------------------------------------- (e) nan / watchdog / crash
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nan_quarantine_isolates_slot(params, backend):
+    """A NaN-poisoned slot is shed; its neighbor's stream is bit-identical
+    to a fault-free run (DESIGN.md §11 per-slot quarantine)."""
+    inj = FaultInjector([ChaosEvent(tick=6, kind="nan")])
+    eng = _engine(params, backend=backend, clock=TickClock(0.01),
+                  faults=inj)
+    h0 = eng.submit(Request(prompt=_prompt(0, 14), max_new=12, seed=0))
+    h1 = eng.submit(Request(prompt=_prompt(1, 14), max_new=12, seed=1))
+    _drive(eng)
+    assert eng.stats()["counters"]["nan_quarantines"] == 1
+    reasons = sorted([h0.finish_reason, h1.finish_reason])
+    assert reasons == [FinishReason.LENGTH, FinishReason.SHED]
+    survivor = h0 if h0.finish_reason == FinishReason.LENGTH else h1
+    eng.check_invariants()
+    eng.close()
+
+    ref = _engine(params, backend=backend)
+    r = [ref.submit(Request(prompt=_prompt(i, 14), max_new=12, seed=i))
+         for i in range(2)]
+    ref.run(r)
+    ref.close()
+    assert survivor.tokens == r[0 if survivor is h0 else 1].tokens
+
+
+def test_watchdog_sheds_all_on_wedged_device(params):
+    # a 99 s injected delay against a 30 s budget: only injected chunks can
+    # trip, so a real compile or GC pause can't add spurious streak entries
+    inj = FaultInjector([ChaosEvent(tick=4, kind="timeout", duration=4,
+                                    magnitude=99.0)])
+    eng = _engine(params, clock=TickClock(0.01), faults=inj,
+                  step_timeout_s=30.0, watchdog_max_trips=2)
+    hs = [eng.submit(Request(prompt=_prompt(i, 14), max_new=12, seed=i))
+          for i in range(3)]
+    _drive(eng)
+    c = eng.stats()["counters"]
+    assert c["watchdog_trips"] >= 2 and c["shed"] >= 1
+    assert all(h.finished and FinishReason.valid(h.finish_reason)
+               for h in hs)
+    assert any(h.finish_reason == FinishReason.SHED for h in hs)
+    eng.check_invariants()
+    eng.close()
+
+
+def test_watchdog_single_slow_step_is_noise(params):
+    """One over-budget chunk trips the counter but must not wedge the
+    engine (the trip streak resets on the next healthy chunk)."""
+    inj = FaultInjector([ChaosEvent(tick=3, kind="timeout", duration=1,
+                                    magnitude=99.0)])
+    eng = _engine(params, clock=TickClock(0.01), faults=inj,
+                  step_timeout_s=30.0, watchdog_max_trips=2)
+    h = eng.submit(Request(prompt=_prompt(0, 14), max_new=12, seed=0))
+    _drive(eng)
+    assert h.finish_reason == FinishReason.LENGTH
+    assert eng.stats()["counters"]["watchdog_trips"] == 1
+    assert eng.stats()["counters"]["shed"] == 0
+    eng.close()
+
+
+def test_host_loop_crash_retry_keeps_streams_intact(params):
+    """HostLoopCrash is contained: the item is retried in place, every
+    token arrives exactly once, and the engine finishes normally."""
+    inj = FaultInjector([ChaosEvent(tick=3, kind="crash"),
+                         ChaosEvent(tick=5, kind="crash")])
+    eng = _engine(params, async_host=True, clock=TickClock(0.01),
+                  faults=inj)
+    hs = [eng.submit(Request(prompt=_prompt(i, 14), max_new=8, seed=i))
+          for i in range(3)]
+    _drive(eng)
+    host = eng.stats()["host"]
+    assert host["crashes"] >= 1 and host["retries"] >= 1
+    eng.check_invariants()
+    eng.close()
+
+    ref = _engine(params)
+    r = [ref.submit(Request(prompt=_prompt(i, 14), max_new=8, seed=i))
+         for i in range(3)]
+    ref.run(r)
+    ref.close()
+    assert [h.tokens for h in hs] == [x.tokens for x in r]
+    assert all(h.finish_reason == FinishReason.LENGTH for h in hs)
+
+
+def test_host_loop_crash_escalates_after_bounded_retries():
+    """A consumer that crashes every attempt escalates to the legacy
+    fatal path instead of retrying forever."""
+    done = []
+
+    def hook(item):
+        raise HostLoopCrash("always")
+
+    loop = HostLoop(finish_fn=lambda h, r: done.append(r), fault_hook=hook)
+
+    class H:
+        tokens, text, first_token_time = [], "", None
+    loop.put(TokenDelivery(handles=[H()], rows=[0], counts=[1],
+                           reasons=[None],
+                           tokens=np.zeros((1, 1), np.int32)))
+    with pytest.raises(RuntimeError, match="host loop consumer failed"):
+        loop.drain()
+    assert loop.crashes == 4 and loop.retries == 3   # 1 try + 3 retries
+
+
+# --------------------------------------------- acceptance: overload run
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_overload_chaos_acceptance(params, backend):
+    """The ISSUE's acceptance run, scaled down: offered load far past
+    saturation, pool at ~50% of working-set demand, seeded pool-burst
+    chaos, priority mix, spill on — every request ends with a valid
+    terminal FinishReason (no hangs), the audit finds zero leaks, and the
+    preempted-then-resumed streams match an unconstrained engine bit for
+    bit."""
+    events = [ChaosEvent(tick=t, kind="pool", duration=4, magnitude=0.5)
+              for t in (5, 15)]
+
+    def serve(tight):
+        eng = _engine(params, backend=backend,
+                      pool_blocks=5 if tight else 24,
+                      host_spill_bytes=1 << 20, clock=TickClock(0.01),
+                      faults=FaultInjector(list(events)) if tight else None)
+        hs = [eng.submit(Request(prompt=_prompt(i, 21), max_new=8, seed=i,
+                                 priority=i % 2))
+              for i in range(5)]
+        _drive(eng)
+        c = eng.stats()["counters"]
+        eng.check_invariants()                 # zero leaked blocks
+        eng.close()
+        return hs, c
+
+    hs, c = serve(tight=True)
+    assert all(h.finished and h.finish_reason in FinishReason.TERMINAL
+               for h in hs), [h.finish_reason for h in hs]
+    assert c["pool_exhausted_stalls"] >= 1     # the pool actually pressed
+    ref, _ = serve(tight=False)
+    for a, b in zip(hs, ref):
+        assert a.tokens == b.tokens, f"rid {a.rid} diverged under pressure"

@@ -21,7 +21,8 @@ REPO = pathlib.Path(__file__).resolve().parent.parent
 AUDITED = ["repro.serving.engine", "repro.core.kv_cache",
            "repro.models.backends", "repro.serving.warmup",
            "repro.serving.host_loop", "repro.serving.loadgen",
-           "repro.serving.metrics"]
+           "repro.serving.metrics", "repro.serving.faults",
+           "repro.core.block_pool"]
 
 
 def test_markdown_links_resolve():
