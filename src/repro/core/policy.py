@@ -116,7 +116,7 @@ class QuantPolicy:
         """
         if self.window == 0 and self.n_sink == 0:
             return self
-        return dataclasses.replace(self, window=0, n_sink=0)
+        return dataclasses.replace(self, window=0, n_sink=0)  # reprolint: disable=RL003 -- this IS the sanctioned named constructor RL003 points callers at
 
 
 FP16_POLICY = QuantPolicy(bits_k=16.0, bits_v=16.0, clip=False, reorder=False,
@@ -129,7 +129,7 @@ PAPER_POLICY = QuantPolicy(bits_k=2.0, bits_v=1.5, group_size=128, window=128,
 def fp16_guard(policy: QuantPolicy) -> QuantPolicy:
     """The fp16 policy used for guard layers: same metadata knobs as the
     base policy where they matter, but nothing quantized and no window."""
-    return dataclasses.replace(policy, bits_k=16.0, bits_v=16.0, window=0,
+    return dataclasses.replace(policy, bits_k=16.0, bits_v=16.0, window=0,  # reprolint: disable=RL003 -- fp16_guard is itself a named derivation site (DESIGN.md §8)
                                n_sink=0, clip=False, reorder=False,
                                smooth=False, per_channel_key=False)
 
@@ -315,7 +315,7 @@ class PolicySchedule:
             if bk_ >= 16 and bv >= 16:
                 out.append(fp16_guard(policy))
             else:
-                out.append(dataclasses.replace(policy, bits_k=bk_, bits_v=bv))
+                out.append(dataclasses.replace(policy, bits_k=bk_, bits_v=bv))  # reprolint: disable=RL003 -- schedule preset: one of the named derivation sites of DESIGN.md §8
         return cls(tuple(out))
 
     @classmethod
@@ -330,7 +330,7 @@ class PolicySchedule:
             if (not policy.is_fp16 and cfg.local_window > 0
                     and cfg.layer_is_local(i)
                     and policy.window > cfg.local_window):
-                p = dataclasses.replace(policy, window=cfg.local_window)
+                p = dataclasses.replace(policy, window=cfg.local_window)  # reprolint: disable=RL003 -- schedule preset: one of the named derivation sites of DESIGN.md §8
             out.append(p)
         return cls(tuple(out))
 

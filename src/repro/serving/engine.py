@@ -293,14 +293,17 @@ class StreamHandle:
     the finish decision without waiting for delivery.
     """
 
-    def __init__(self, request: Request, rid: int):
+    def __init__(self, request: Request, rid: int,
+                 now: Optional[float] = None):
         self.request = request
         self.rid = rid
         self.tokens: List[int] = []
         self.text = ""                     # grows when a detokenizer is set
         self.finished = False
         self.finish_reason: Optional[str] = None
-        self.submit_time = time.time()
+        # stamped by Engine.submit from the injectable engine clock
+        # (DESIGN.md §11) — marks are compared pairwise, never as epochs
+        self.submit_time = now
         self.admit_time: Optional[float] = None
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
@@ -526,12 +529,20 @@ class Engine:
         self._next_rid = 0
         self.n_completed = 0   # callers keep their own handles for stats
 
+        # ----- injectable clock (DESIGN.md §11) -----
+        # ALL engine time — latency marks, deadlines, watchdog and warmup
+        # timing, host-loop delivery stamps — flows through this one slot,
+        # so a virtual TickClock makes every run bit-reproducible.  Hoisted
+        # above the executable cache and host loop, which share it.
+        self._clock = clock if clock is not None else time.monotonic
+
         # ----- warmup executable cache + async host loop (DESIGN.md §10) ----
-        self._exec = ExecutableCache()
+        self._exec = ExecutableCache(clock=self._clock)
         self._detok = detokenize
         self._host: Optional[HostLoop] = HostLoop(
             self._finish, detokenize, max_queue=host_queue,
-            fault_hook=getattr(faults, "on_consume", None)) \
+            fault_hook=getattr(faults, "on_consume", None),
+            clock=self._clock) \
             if async_host else None
         self._rehearse_s: Optional[float] = None
         self._counters = {"admitted": 0, "queue_wait_ticks": 0,
@@ -547,7 +558,6 @@ class Engine:
         if watchdog_max_trips < 1:
             raise ValueError(f"watchdog_max_trips must be >= 1, "
                              f"got {watchdog_max_trips}")
-        self._clock = clock if clock is not None else time.monotonic
         self._faults = faults
         self.step_timeout_s = step_timeout_s
         self.watchdog_max_trips = int(watchdog_max_trips)
@@ -672,6 +682,14 @@ class Engine:
 
     # ------------------------------------------------------------ public API
 
+    def now(self) -> float:
+        """Current engine time from the injectable clock (DESIGN.md §11).
+
+        External drivers (the load generator, metrics recorders) must
+        anchor on this — not on ``time.time()`` — so their timestamps are
+        comparable with the handle marks the engine stamps."""
+        return self._clock()
+
     def submit(self, request: Request) -> StreamHandle:
         """Validate + queue a request; returns its stream handle
         (DESIGN.md §6).
@@ -714,8 +732,8 @@ class Engine:
                     f"{st['reserved']} reserved); raise pool_blocks or "
                     f"shorten the request — it could never be admitted")
         request = dataclasses.replace(request, prompt=prompt)
-        handle = StreamHandle(request, self._next_rid)
-        handle._t_submit = self._clock()   # deadline epoch (engine clock)
+        handle = StreamHandle(request, self._next_rid, now=self._clock())
+        handle._t_submit = handle.submit_time  # deadline epoch (engine clock)
         self._next_rid += 1
         self._queue.append(handle)
         return handle
@@ -888,13 +906,13 @@ class Engine:
                                 self._spill_write_fn(group, bkey),
                                 band_av, blk_av, i32)
         if rehearse:
-            t0 = time.perf_counter()
+            t0 = self._clock()
             faults, self._faults = self._faults, None   # no chaos in warmup
             try:
                 self._rehearse()
             finally:
                 self._faults = faults
-            self._rehearse_s = time.perf_counter() - t0
+            self._rehearse_s = self._clock() - t0
         self._exec.warmed = True
         return self.warmup_report()
 
@@ -1333,7 +1351,7 @@ class Engine:
                                                 register=False)
                 else:
                     handle = self._queue.pop(0)
-                handle.admit_time = time.time()
+                handle.admit_time = self._clock()
                 self._prefill_job = _PrefillJob(
                     handle=handle, slot=free[0], pos=0,
                     state=self._take_chunk_state())
@@ -1643,7 +1661,7 @@ class Engine:
         if self._caches is None:
             self._caches = (self._alloc_pooled() if self._pools
                             else self._alloc_like(caches))
-        now = time.time()
+        now = self._clock()
         self._counters["admitted"] += len(handles)
         for row, (h, slot) in enumerate(zip(handles, slots)):
             self._caches = self._call(
@@ -1793,7 +1811,7 @@ class Engine:
         if self._pools:
             self._pool_prewrite()
             self._flush_tables()
-        t0 = time.perf_counter()
+        t0 = self._clock()
         toks, tok, caches, keys, done, bad, live = self._call(
             "multi", self._multi_fn(),
             self.params, jnp.asarray(self._tok), self._caches,
@@ -1811,7 +1829,7 @@ class Engine:
         # computation: jnp.asarray(self._nan_inject) may alias the numpy
         # buffer on CPU, so zeroing before the sync races the device read
         self._nan_inject[:] = False
-        self._watchdog(time.perf_counter() - t0)
+        self._watchdog(self._clock() - t0)
         if self._host is not None:
             # async (DESIGN.md §10): decide finishes from the tiny per-slot
             # live counts; the big token array stays on device and the
@@ -1889,7 +1907,7 @@ class Engine:
         same transport every decode chunk takes (DESIGN.md §10)."""
         if self._host is None:
             if h.first_token_time is None:   # preserved across preemptions
-                h.first_token_time = time.time()
+                h.first_token_time = self._clock()
             self._deliver(slot, [first])
             return
         req = h.request
@@ -1930,7 +1948,7 @@ class Engine:
     def _finish(self, h: StreamHandle, reason: str):
         h.finished = True
         h.finish_reason = reason
-        h.finish_time = time.time()
+        h.finish_time = self._clock()
         self.n_completed += 1
 
 

@@ -84,9 +84,14 @@ class HostLoop:
 
     def __init__(self, finish_fn: Callable, detokenize: Optional[Callable]
                  = None, max_queue: int = 8,
-                 fault_hook: Optional[Callable] = None):
+                 fault_hook: Optional[Callable] = None,
+                 clock: Optional[Callable[[], float]] = None):
         if max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        # shared engine clock (DESIGN.md §11): first-token stamps and
+        # backpressure accounting must be comparable with the scheduler's
+        # marks, so both sides read the same injectable source
+        self._clock = clock if clock is not None else time.monotonic
         self._finish = finish_fn
         self._detok = detokenize
         self._fault_hook = fault_hook   # chaos: may raise HostLoopCrash
@@ -114,9 +119,9 @@ class HostLoop:
             self._q.put_nowait(item)
         except queue.Full:
             self.backpressure_waits += 1
-            t0 = time.perf_counter()
+            t0 = self._clock()
             self._q.put(item)
-            self.backpressure_s += time.perf_counter() - t0
+            self.backpressure_s += self._clock() - t0
         self.enqueued += 1
         self.max_depth = max(self.max_depth, self._q.qsize())
 
@@ -198,7 +203,7 @@ class HostLoop:
         if self._fault_hook is not None:
             self._fault_hook(item)        # may raise HostLoopCrash (§11)
         arr = np.asarray(item.tokens)     # device->host copy, off-scheduler
-        now = time.time()
+        now = self._clock()
         for h, row, n, reason in zip(item.handles, item.rows, item.counts,
                                      item.reasons):
             toks = h._absorb_replay(arr[row, :n]) \

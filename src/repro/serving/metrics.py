@@ -127,7 +127,10 @@ class MetricsRecorder:
         self._t0_wall: Optional[float] = None
 
     def start(self, t0_wall: float) -> None:
-        """Anchor wall-clock handle timestamps to trace-relative seconds."""
+        """Anchor handle timestamps to trace-relative seconds.  Pass
+        ``engine.now()`` — the handles' marks are stamped from the engine's
+        injectable clock (DESIGN.md §11), so the anchor must read the same
+        source."""
         self._t0_wall = t0_wall
 
     def _rel(self, t_wall: Optional[float]) -> Optional[float]:
@@ -159,8 +162,8 @@ class MetricsRecorder:
         self.samples.append(sample)
 
     def finalize(self) -> None:
-        """Fold the handles' wall-clock marks into the records (call after
-        the engine drained)."""
+        """Fold the handles' engine-clock marks into the records (call
+        after the engine drained)."""
         for rid, rec in self.records.items():
             h = self._handles.get(rid)
             if h is None:

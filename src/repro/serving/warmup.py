@@ -28,7 +28,7 @@ itself.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -69,7 +69,10 @@ class ExecutableCache:
       they are exactly the compiles that would have hit user traffic.
     """
 
-    def __init__(self):
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        # compile-time accounting reads the engine's injectable clock
+        # (DESIGN.md §11) so warmed-vs-TickClock runs stay reproducible
+        self._clock = clock if clock is not None else time.monotonic
         self._compiled: Dict[Tuple[str, tuple], Any] = {}
         self.entries: List[dict] = []       # one row per warmed executable
         self.warmed = False                 # set by Engine.warmup()
@@ -92,9 +95,9 @@ class ExecutableCache:
         key = (name, shape_signature(avatars))
         if key in self._compiled:
             return 0.0
-        t0 = time.perf_counter()
+        t0 = self._clock()
         self._compiled[key] = jitfn.lower(*avatars).compile()
-        dt = time.perf_counter() - t0
+        dt = self._clock() - t0
         self.entries.append({"name": name, "seconds": dt,
                              "n_leaves": len(key[1])})
         return dt

@@ -116,6 +116,55 @@ def test_tick_clock():
         TickClock(dt_s=0.0)
 
 
+class _TimeSpy:
+    """Stand-in for the ``time`` module that records every *call* made
+    through it (attribute reads alone — e.g. the ``time.monotonic``
+    fallback expression — don't count)."""
+
+    def __init__(self, real, calls):
+        self._real, self._calls = real, calls
+
+    def __getattr__(self, name):
+        real_attr = getattr(self._real, name)
+        if not callable(real_attr):
+            return real_attr
+
+        def wrapped(*a, **k):
+            self._calls.append(name)
+            return real_attr(*a, **k)
+        return wrapped
+
+
+def test_tick_clock_engine_zero_wall_clock_reads(params, monkeypatch):
+    """RL002's runtime twin: with a TickClock injected, a full
+    submit -> prefill -> decode -> finish run (async host loop included)
+    performs ZERO wall-clock reads in engine/host_loop/warmup — every
+    mark (submit/admit/first-token/finish, watchdog timing, backpressure
+    accounting) flows through the one injected clock (DESIGN.md §11)."""
+    import time as real_time
+    from repro.serving import engine as engine_mod
+    from repro.serving import host_loop as host_loop_mod
+    from repro.serving import warmup as warmup_mod
+
+    calls = []
+    for mod in (engine_mod, host_loop_mod, warmup_mod):
+        monkeypatch.setattr(mod, "time", _TimeSpy(real_time, calls))
+
+    clk = TickClock(dt_s=0.01)
+    eng = _engine(params, clock=clk, async_host=True)
+    handles = [eng.submit(Request(prompt=_prompt(s, 12), max_new=4))
+               for s in (0, 1)]
+    while eng.step():
+        clk.tick()
+    eng.drain()
+
+    assert all(h.finished for h in handles)
+    assert calls == [], f"wall-clock reads under TickClock: {sorted(set(calls))}"
+    # and the marks really came from the virtual clock: bounded by its span
+    for h in handles:
+        assert 0.0 <= h.submit_time <= h.finish_time <= clk()
+
+
 # --------------------------------------------------- spill tier & audits
 
 def test_host_spill_tier_lru_budget():

@@ -1,0 +1,435 @@
+"""tools/reprolint: fixture tests per checker + the repo self-check
+(DESIGN.md §12).
+
+Every checker gets seeded positive fixtures (the violation fires) and
+negative fixtures (the sanctioned idiom stays quiet); suppressions are
+exercised in both the reasoned (waives) and reason-less (RL000) forms;
+the CLI is driven end-to-end on a temp tree to pin the exit codes the CI
+gate relies on; and the whole repo tree must lint clean — reintroducing
+a seeded violation (the PR's original ``time.time()`` drift) into a copy
+of ``serving/engine.py`` must flip the tool non-zero.
+"""
+import json
+import pathlib
+import sys
+import textwrap
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))  # tools/ is a repo-root namespace package
+
+from tools.reprolint import lint_paths, lint_sources, render_report  # noqa: E402
+from tools.reprolint.__main__ import main as reprolint_main          # noqa: E402
+
+
+def _lint(rel, src):
+    return lint_sources([(rel, textwrap.dedent(src))], root=REPO)
+
+
+def _codes(rel, src, only=None):
+    out = [f.code for f in _lint(rel, src)]
+    return [c for c in out if c == only] if only else out
+
+
+def _waiver(code, reason=None):
+    # built by concatenation so this test file's own source never contains
+    # a parseable (or half-parseable) suppression on a literal line
+    tail = f" -- {reason}" if reason else ""
+    return "  # reprolint" + f": disable={code}{tail}"
+
+
+# ================================================== RL001 trace safety
+
+def test_rl001_int_of_traced_value_in_jit_body():
+    findings = _lint("src/repro/models/frag.py", """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return int(x) + 1
+        """)
+    assert [f.code for f in findings] == ["RL001"]
+    assert "int()" in findings[0].message
+
+
+def test_rl001_item_in_scan_body_and_asarray_in_jit_of():
+    src = """
+        import jax
+        import numpy as np
+
+        def body(carry, x):
+            carry = carry + x.item()
+            return carry, x
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+
+        def g(x):
+            return np.asarray(x)
+
+        h = jax.jit(g)
+        """
+    codes = _codes("src/repro/models/frag.py", src, only="RL001")
+    assert len(codes) == 2  # .item() in the scan body, asarray in jit(g)
+
+
+def test_rl001_shape_reads_are_static():
+    assert _codes("src/repro/models/frag.py", """
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = int(x.shape[0]) + len(x.shape)
+            return x * n
+        """, only="RL001") == []
+
+
+def test_rl001_static_argnames_and_tracer_guard_escape():
+    assert _codes("src/repro/models/frag.py", """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            return x * int(n)
+
+        @jax.jit
+        def g(x):
+            if not isinstance(x, jax.core.Tracer):
+                return float(x)
+            return x
+        """, only="RL001") == []
+
+
+# ==================================================== RL002 wall clock
+
+def test_rl002_time_time_in_serving():
+    findings = _lint("src/repro/serving/sched.py", """
+        import time
+
+        def tick():
+            return time.time()
+        """)
+    assert [f.code for f in findings] == ["RL002"]
+
+
+def test_rl002_datetime_now_in_core():
+    findings = _lint("src/repro/core/stamp.py", """
+        from datetime import datetime
+
+        def stamp():
+            return datetime.now()
+        """)
+    assert [f.code for f in findings] == ["RL002"]
+
+
+def test_rl002_silent_outside_serving_and_core():
+    assert _codes("src/repro/launch/cli.py", """
+        import time
+
+        def tick():
+            return time.time()
+        """, only="RL002") == []
+
+
+def test_rl002_monotonic_as_value_is_sanctioned():
+    # the clock=None fallback holds time.monotonic without calling it
+    assert _codes("src/repro/serving/clocked.py", """
+        import time
+
+        class C:
+            def __init__(self, clock=None):
+                self._clock = clock if clock is not None else time.monotonic
+        """, only="RL002") == []
+
+
+# ============================================== RL003 policy mutation
+
+def test_rl003_replace_on_annotated_policy():
+    findings = _lint("src/repro/models/derive.py", """
+        import dataclasses
+        from repro.core.policy import QuantPolicy
+
+        def tweak(policy: QuantPolicy):
+            return dataclasses.replace(policy, window=0)
+        """)
+    assert [f.code for f in findings] == ["RL003"]
+
+
+def test_rl003_nonfrozen_dataclass_as_jit_static():
+    findings = _lint("src/repro/models/knobs.py", """
+        import dataclasses
+        import jax
+
+        @dataclasses.dataclass
+        class KnobSet:
+            n: int = 1
+
+        def run(x, cfg: KnobSet):
+            return x * cfg.n
+
+        fn = jax.jit(run, static_argnames=("cfg",))
+        """)
+    assert [f.code for f in findings] == ["RL003"]
+    assert "non-frozen" in findings[0].message
+
+
+def test_rl003_replace_on_non_policy_is_fine():
+    assert _codes("src/repro/models/derive.py", """
+        import dataclasses
+
+        def clone(cfg):
+            return dataclasses.replace(cfg, n_layers=2)
+        """, only="RL003") == []
+
+
+def test_rl003_frozen_dataclass_static_is_fine():
+    assert _codes("src/repro/models/knobs.py", """
+        import dataclasses
+        import jax
+
+        @dataclasses.dataclass(frozen=True)
+        class KnobSet:
+            n: int = 1
+
+        def run(x, cfg: KnobSet):
+            return x * cfg.n
+
+        fn = jax.jit(run, static_argnames=("cfg",))
+        """, only="RL003") == []
+
+
+# ============================================ RL004 Pallas contracts
+
+def test_rl004_index_map_closure_over_traced():
+    findings = [f for f in _lint("src/repro/kernels/myker.py", """
+        import jax.experimental.pallas as pl
+        from ._compat import resolve_interpret
+
+        def build(q, kernel, interpret=None):
+            interpret = resolve_interpret(interpret)
+            spec = pl.BlockSpec((1, 128), lambda i: (q[i], 0))
+            return pl.pallas_call(kernel, grid=(4,), in_specs=[spec],
+                                  interpret=interpret)
+        """) if f.code == "RL004"]
+    assert len(findings) == 1
+    assert "closes over traced" in findings[0].message
+
+
+def test_rl004_interpret_literal_and_missing():
+    src = """
+        import jax.experimental.pallas as pl
+
+        def lit(q, kernel):
+            return pl.pallas_call(kernel, grid=(1,), interpret=True)
+
+        def missing(q, kernel):
+            return pl.pallas_call(kernel, grid=(1,))
+        """
+    codes = _codes("src/repro/kernels/myker.py", src, only="RL004")
+    assert len(codes) == 2  # literal True + no interpret= at all
+
+
+def test_rl004_traced_grid():
+    findings = [f for f in _lint("src/repro/kernels/myker.py", """
+        import jax.experimental.pallas as pl
+        from ._compat import resolve_interpret
+
+        def build(q, n, kernel):
+            interpret = resolve_interpret(None)
+            return pl.pallas_call(kernel, grid=(n,), interpret=interpret)
+        """) if f.code == "RL004"]
+    assert len(findings) == 1
+    assert "grid" in findings[0].message
+
+
+def test_rl004_clean_kernel_wrapper():
+    assert _codes("src/repro/kernels/myker.py", """
+        import jax.experimental.pallas as pl
+        from ._compat import resolve_interpret
+
+        def build(q, kernel, interpret=None):
+            interpret = resolve_interpret(interpret)
+            blocks = q.shape[0] // 8
+            spec = pl.BlockSpec((1, 8), lambda i: (i, 0))
+            return pl.pallas_call(kernel, grid=(blocks,), in_specs=[spec],
+                                  interpret=interpret)
+        """, only="RL004") == []
+
+
+def test_rl004_compat_module_is_exempt():
+    # _compat.py IS the resolver — it may mention interpret freely
+    assert _codes("src/repro/kernels/_compat.py", """
+        import jax.experimental.pallas as pl
+
+        def probe(kernel):
+            return pl.pallas_call(kernel, grid=(1,), interpret=True)
+        """, only="RL004") == []
+
+
+# =========================================== RL005 bare jit in serving
+
+def test_rl005_jit_reference_outside_engine():
+    findings = [f for f in _lint("src/repro/serving/extra.py", """
+        import jax
+
+        def make(f):
+            return jax.jit(f)
+        """) if f.code == "RL005"]
+    assert len(findings) == 1
+
+
+def test_rl005_engine_direct_call_of_bound_jit():
+    src = """
+        import jax
+
+        class Engine:
+            def __init__(self, f):
+                self._step = jax.jit(f)
+
+            def step(self, x):
+                return self._step(x)
+
+        def go(f, x):
+            return jax.jit(f)(x)
+        """
+    codes = _codes("src/repro/serving/engine.py", src, only="RL005")
+    assert len(codes) == 2  # self._step(x) + immediate jax.jit(f)(x)
+
+
+def test_rl005_engine_may_build_and_dispatch_via_call():
+    assert _codes("src/repro/serving/engine.py", """
+        import jax
+
+        class Engine:
+            def __init__(self, f):
+                self._step_fn = jax.jit(f)
+
+            def step(self, x):
+                return self._call("step", self._step_fn, x)
+        """, only="RL005") == []
+
+
+def test_rl005_warmup_is_exempt():
+    assert _codes("src/repro/serving/warmup.py", """
+        import jax
+
+        def warm(f):
+            return jax.jit(f)
+        """, only="RL005") == []
+
+
+# ================================================ RL006 docstring audit
+
+def test_rl006_missing_docstring_in_audited_module():
+    findings = [f for f in _lint("src/repro/serving/metrics.py", """
+        '''Module doc without the magic word.'''
+
+        def summarize(x):
+            return x
+        """) if f.code == "RL006"]
+    assert len(findings) == 1
+    assert "no docstring" in findings[0].message
+
+
+def test_rl006_citation_of_nonexistent_section():
+    findings = [f for f in _lint("src/repro/models/cited.py", """
+        '''Helpers, see DESIGN.md §99 for details.'''
+        """) if f.code == "RL006"]
+    assert len(findings) == 1
+    assert "§99" in findings[0].message
+
+
+def test_rl006_documented_audited_module_is_clean():
+    assert _codes("src/repro/serving/metrics.py", """
+        '''Metrics bookkeeping (DESIGN.md §10).'''
+
+        def summarize(x):
+            '''Summarize one run (DESIGN.md §10).'''
+            return x
+        """, only="RL006") == []
+
+
+def test_rl006_unaudited_module_needs_no_docstrings():
+    assert _codes("src/repro/models/helpers.py", """
+        def f(x):
+            return x
+        """, only="RL006") == []
+
+
+# ===================================================== suppressions
+
+def test_suppression_with_reason_waives_the_finding():
+    src = ("import time\n\n"
+           "def t():\n"
+           f"    return time.time(){_waiver('RL002', 'unit-test waiver')}\n")
+    assert lint_sources([("src/repro/serving/sched.py", src)],
+                        root=REPO) == []
+
+
+def test_suppression_without_reason_is_rl000_and_does_not_waive():
+    src = ("import time\n\n"
+           "def t():\n"
+           f"    return time.time(){_waiver('RL002')}\n")
+    codes = sorted(f.code for f in lint_sources(
+        [("src/repro/serving/sched.py", src)], root=REPO))
+    assert codes == ["RL000", "RL002"]
+
+
+def test_suppression_of_a_different_code_does_not_waive():
+    src = ("import time\n\n"
+           "def t():\n"
+           f"    return time.time(){_waiver('RL001', 'wrong code')}\n")
+    codes = [f.code for f in lint_sources(
+        [("src/repro/serving/sched.py", src)], root=REPO)]
+    assert codes == ["RL002"]
+
+
+# ============================================== repo self-check + CLI
+
+def test_repo_tree_lints_clean():
+    findings = lint_paths(["src", "benchmarks", "tests"], root=REPO)
+    assert findings == [], "repo tree has reprolint findings:\n" + \
+        "\n".join(str(f) for f in findings)
+
+
+def test_reintroduced_wall_clock_drift_fails(tmp_path):
+    """The PR's seeded violation, reintroduced: put one ``time.time()``
+    back into a copy of serving/engine.py and the tool must go red."""
+    real = (REPO / "src/repro/serving/engine.py").read_text(encoding="utf-8")
+    drifted = real.replace("h.finish_time = self._clock()",
+                           "h.finish_time = time.time()")
+    assert drifted != real, "engine.py finish-time stamp moved; update test"
+    dst = tmp_path / "src" / "repro" / "serving" / "engine.py"
+    dst.parent.mkdir(parents=True)
+    dst.write_text(drifted, encoding="utf-8")
+    findings = lint_paths([str(dst)], root=tmp_path)
+    assert [f.code for f in findings] == ["RL002"]
+
+
+def test_cli_exit_codes_and_json_artifact(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "serving" / "sched.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\ndef t():\n    return time.time()\n",
+                   encoding="utf-8")
+    report = tmp_path / "reprolint.json"
+    rc = reprolint_main([str(bad), "--root", str(tmp_path),
+                         "--json", str(report)])
+    assert rc == 1
+    data = json.loads(report.read_text(encoding="utf-8"))
+    assert data["n_findings"] == 1
+    assert data["findings"][0]["code"] == "RL002"
+    assert "RL002" in capsys.readouterr().out
+
+    bad.write_text("import time\n\nWALL = time.monotonic\n",
+                   encoding="utf-8")
+    rc = reprolint_main([str(bad), "--root", str(tmp_path)])
+    assert rc == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_render_report_formats():
+    findings = lint_paths(["tools/check_links.py"], root=REPO)
+    assert findings == []
+    assert render_report(findings) == "reprolint: clean (0 findings)"
+    assert json.loads(render_report(findings, as_json=True)) == {
+        "n_findings": 0, "findings": []}

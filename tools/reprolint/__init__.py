@@ -1,0 +1,136 @@
+"""reprolint: AST-based contract linter for the SKVQ repro (DESIGN.md §12).
+
+The repo's hardest-won guarantees are *properties of the code shape*, not
+of any one test run: tables-are-data never recompiles (§9), warmup means
+zero post-warmup XLA compiles (§10), all engine time flows through the
+injectable clock (§11), QuantPolicy derivations stay in core/policy.py
+(§8), and Pallas kernels keep their index-map/grid/interpret contracts
+(§4).  reprolint checks those shapes statically, at diff time:
+
+====== =====================================================
+RL001  host forcing of traced values inside jit/scan bodies
+RL002  wall-clock reads in serving/ or core/
+RL003  QuantPolicy dataclasses.replace + unhashable jit statics
+RL004  Pallas index-map / grid / interpret contracts
+RL005  jit call sites in serving/ bypassing the ExecutableCache
+RL006  docstring audit + DESIGN.md §-citation validity
+====== =====================================================
+
+Usage::
+
+    python -m tools.reprolint src benchmarks tests [--json report.json]
+
+Inline waiver (reason required)::
+
+    something_flagged()   # reprolint: disable=RL002 -- why it is fine
+
+Stdlib-only (``ast`` + a small visitor framework); no new dependencies.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Iterable, List, Optional, Tuple
+
+from .base import Checker, Finding, Module, Project, iter_py_files
+from .rl001_trace_safety import TraceSafetyChecker
+from .rl002_wall_clock import WallClockChecker
+from .rl003_policy_mutation import PolicyMutationChecker
+from .rl004_pallas_contracts import PallasContractChecker
+from .rl005_bare_jit import BareJitChecker
+from .rl006_docstrings import DocstringChecker
+
+__all__ = ["CHECKERS", "Finding", "lint_paths", "lint_sources",
+           "render_report"]
+
+CHECKERS: Tuple[Checker, ...] = (
+    TraceSafetyChecker(),
+    WallClockChecker(),
+    PolicyMutationChecker(),
+    PallasContractChecker(),
+    BareJitChecker(),
+    DocstringChecker(),
+)
+
+
+def _load(path: Path, root: Path) -> Optional[Module]:
+    try:
+        rel = str(path.relative_to(root)) if path.is_relative_to(root) \
+            else str(path)
+    except AttributeError:  # pragma: no cover - py<3.9
+        rel = str(path)
+    source = path.read_text(encoding="utf-8")
+    try:
+        tree = __import__("ast").parse(source, filename=str(path))
+    except SyntaxError:
+        return None
+    return Module(path, rel, source, tree)
+
+
+def _apply_suppressions(module: Module,
+                        findings: List[Finding]) -> List[Finding]:
+    out = [f for f in findings
+           if f.code not in module.waived.get(f.line, set())]
+    out.extend(Finding(path=module.rel, line=line, code="RL000",
+                       message=msg)
+               for line, msg in module.bad_suppressions)
+    return out
+
+
+def lint_paths(paths: Iterable[str], root: Optional[Path] = None
+               ) -> List[Finding]:
+    """Lint files/directories; returns all surviving findings, sorted.
+
+    ``root`` anchors relative paths and locates DESIGN.md for the RL006
+    §-heading set; defaults to the common sense choice of cwd."""
+    root = Path(root) if root is not None else Path.cwd()
+    files = iter_py_files(paths, root)
+    modules = [m for m in (_load(f, root) for f in files) if m is not None]
+    project = Project(root)
+    for m in modules:
+        project.scan(m)
+    findings: List[Finding] = []
+    for m in modules:
+        raw: List[Finding] = []
+        for checker in CHECKERS:
+            raw.extend(checker.check(m, project))
+        findings.extend(_apply_suppressions(m, raw))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def lint_sources(named_sources: Iterable[Tuple[str, str]],
+                 root: Optional[Path] = None) -> List[Finding]:
+    """Lint in-memory ``(relative_path, source)`` pairs — the fixture
+    entry point used by tests/test_reprolint.py."""
+    import ast as _ast
+    root = Path(root) if root is not None else Path.cwd()
+    modules = []
+    for rel, source in named_sources:
+        try:
+            tree = _ast.parse(source, filename=rel)
+        except SyntaxError:
+            continue
+        modules.append(Module(root / rel, rel, source, tree))
+    project = Project(root)
+    for m in modules:
+        project.scan(m)
+    findings: List[Finding] = []
+    for m in modules:
+        raw: List[Finding] = []
+        for checker in CHECKERS:
+            raw.extend(checker.check(m, project))
+        findings.extend(_apply_suppressions(m, raw))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def render_report(findings: List[Finding], as_json: bool = False) -> str:
+    """File/line/code/message report; ``--json`` emits the CI artifact."""
+    if as_json:
+        return json.dumps({"n_findings": len(findings),
+                           "findings": [f.as_dict() for f in findings]},
+                          indent=2)
+    if not findings:
+        return "reprolint: clean (0 findings)"
+    lines = [str(f) for f in findings]
+    lines.append(f"reprolint: {len(findings)} finding(s)")
+    return "\n".join(lines)

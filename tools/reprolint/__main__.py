@@ -1,0 +1,47 @@
+"""CLI: ``python -m tools.reprolint <paths...> [--json FILE]``.
+
+Exits non-zero when any finding survives suppression — the CI gate runs
+this over ``src benchmarks tests`` before the test matrix (DESIGN.md
+§12), so contract violations fail fast and cheap.  ``--json FILE``
+additionally writes the machine-readable report uploaded as a CI
+artifact (``-`` writes JSON to stdout instead of the text report).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import lint_paths, render_report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST-based trace-safety / recompile-hazard / "
+                    "Pallas-contract linter (DESIGN.md §12)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint (e.g. src "
+                         "benchmarks tests)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write a JSON report here ('-' for stdout)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (anchors relative paths + DESIGN.md "
+                         "lookup; default: cwd)")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else Path.cwd()
+    findings = lint_paths(args.paths, root=root)
+    if args.json == "-":
+        print(render_report(findings, as_json=True))
+    else:
+        print(render_report(findings))
+        if args.json:
+            Path(args.json).write_text(
+                render_report(findings, as_json=True) + "\n",
+                encoding="utf-8")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,197 @@
+"""reprolint framework: findings, suppressions, module/project context.
+
+The linter is a set of repo-specific *contract checkers* (DESIGN.md §12),
+each a module exporting a ``Checker`` subclass with an ``RLxxx`` error
+code.  This module holds everything the checkers share:
+
+* :class:`Finding` — one violation: file, line, code, message;
+* :class:`Module` — a parsed source file plus cheap path classification
+  (``in_serving`` / ``in_core`` / ``in_kernels``) and the import-alias
+  table checkers use to resolve dotted call names;
+* :class:`Project` — cross-file context built in a first pass over every
+  linted file: the dataclass registry (name -> frozen?) for RL003 and the
+  DESIGN.md §-heading set for RL006;
+* suppression parsing — ``# reprolint: disable=RLxxx -- reason`` on the
+  finding's line waives it; a suppression without a written reason is
+  itself an ``RL000`` finding, so silent waivers cannot accumulate.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"(?:\s*(?:--|—|\()\s*(?P<reason>[^)]*)\)?)?")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: ``path:line RLxxx message``."""
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def as_dict(self) -> dict:
+        return {"path": self.path, "line": self.line, "code": self.code,
+                "message": self.message}
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+class Checker:
+    """Base class: subclasses set ``code``/``name`` and implement
+    :meth:`check` yielding :class:`Finding`s for one :class:`Module`."""
+
+    code = "RL000"
+    name = "base"
+
+    def check(self, module: "Module", project: "Project"
+              ) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, module: "Module", node_or_line, message: str
+                ) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(path=module.rel, line=int(line), code=self.code,
+                       message=message)
+
+
+def parse_suppressions(source: str) -> Tuple[Dict[int, Set[str]],
+                                             List[Tuple[int, str]]]:
+    """Line -> waived codes, plus (line, problem) rows for malformed
+    suppressions (missing reason) — surfaced as RL000 findings."""
+    waived: Dict[int, Set[str]] = {}
+    bad: List[Tuple[int, str]] = []
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if not m:
+            if "reprolint:" in text and "disable" in text \
+                    and not text.lstrip().startswith('"') \
+                    and "SUPPRESS_RE" not in text:
+                bad.append((i, "unparseable reprolint suppression "
+                               "(want '# reprolint: disable=RLxxx -- "
+                               "reason')"))
+            continue
+        codes = {c.strip() for c in m.group(1).split(",")}
+        reason = (m.group("reason") or "").strip()
+        if not reason:
+            bad.append((i, f"suppression of {', '.join(sorted(codes))} "
+                           f"carries no reason string — write '# reprolint: "
+                           f"disable=RLxxx -- <why this is sanctioned>'"))
+            continue
+        waived.setdefault(i, set()).update(codes)
+    return waived, bad
+
+
+class Module:
+    """One parsed source file + the path/import context checkers need."""
+
+    def __init__(self, path: Path, rel: str, source: str, tree: ast.Module):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = tree
+        parts = Path(rel).parts
+        self.parts = parts
+        self.name = Path(rel).stem
+        self.in_serving = "serving" in parts
+        self.in_core = "core" in parts
+        self.in_kernels = "kernels" in parts
+        self.in_tests = "tests" in parts
+        self.waived, self.bad_suppressions = parse_suppressions(source)
+        self.aliases = _import_aliases(tree)
+
+    def dotted(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to its imported dotted source,
+        e.g. ``np.asarray`` -> ``numpy.asarray`` when ``import numpy as
+        np`` is in scope.  None for anything that isn't a plain chain."""
+        chain: List[str] = []
+        while isinstance(node, ast.Attribute):
+            chain.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id, node.id)
+        return ".".join([root] + list(reversed(chain)))
+
+    def module_path(self) -> Optional[str]:
+        """src/repro/serving/engine.py -> repro.serving.engine (None when
+        the file is not under a src/ tree)."""
+        parts = list(self.parts)
+        if "src" in parts:
+            sub = parts[parts.index("src") + 1:]
+            return ".".join(sub)[:-3] if sub else None
+        return None
+
+
+def _import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> dotted origin, from top-level (and function-level)
+    import statements.  ``from x import y as z`` maps z -> x.y."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = \
+                    a.name if a.asname else a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            mod = ("." * node.level) + mod
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{mod}.{a.name}" if mod \
+                    else a.name
+    return out
+
+
+class Project:
+    """Cross-file context: dataclass registry + DESIGN.md § headings."""
+
+    def __init__(self, root: Optional[Path] = None):
+        self.root = root
+        self.dataclasses: Dict[str, bool] = {}   # class name -> frozen?
+        self.design_sections: Optional[Set[str]] = None
+        if root is not None:
+            design = root / "DESIGN.md"
+            if design.is_file():
+                text = design.read_text(encoding="utf-8")
+                self.design_sections = set(
+                    re.findall(r"^## §(\w+)", text, re.MULTILINE))
+
+    def scan(self, module: Module) -> None:
+        """First-pass registration: record every @dataclass definition and
+        whether it is frozen (RL003's static-arg hashability check)."""
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                target, frozen = dec, None
+                if isinstance(dec, ast.Call):
+                    target = dec.func
+                    for kw in dec.keywords:
+                        if kw.arg == "frozen":
+                            frozen = bool(getattr(kw.value, "value", False))
+                name = module.dotted(target)
+                if name in ("dataclasses.dataclass", "dataclass"):
+                    self.dataclasses[node.name] = bool(frozen)
+
+
+def iter_py_files(paths: Iterable[str], root: Path) -> List[Path]:
+    """Expand files/dirs into a sorted .py file list (skips caches)."""
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_file() and path.suffix == ".py":
+            out.append(path)
+        elif path.is_dir():
+            out.extend(f for f in sorted(path.rglob("*.py"))
+                       if "__pycache__" not in f.parts)
+    return out

@@ -1,0 +1,204 @@
+"""RL001 — host forcing of traced values inside jit/scan/shard_map bodies.
+
+The repo's performance contracts (DESIGN.md §4, §6, §10) assume decode
+steps never sync the device mid-trace: a ``int()`` / ``float()`` /
+``bool()`` / ``.item()`` / ``np.asarray()`` applied to a value that flows
+from a traced parameter either raises a ``TracerConversionError`` at
+trace time or — worse, when the value happens to be concrete on some
+paths — turns the value into a python constant baked into the executable,
+so every distinct runtime value recompiles.  KVQuant and MILLION
+(PAPERS.md) both report this class of regression silently erasing
+kernel-level wins; this checker catches it at diff time.
+
+Detected traced bodies:
+
+* ``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorated defs
+  (parameters named by ``static_argnames``/``static_argnums`` excluded);
+* local defs or lambdas passed to ``jax.jit(f, ...)``;
+* scan bodies: first argument of ``jax.lax.scan`` / ``lax.scan``;
+* ``shard_map(f, ...)`` bodies.
+
+Escapes: shape/ndim/dtype/len reads are static (see ``taint.py``); code
+under a ``not isinstance(x, jax.core.Tracer)`` guard is the sanctioned
+concrete-path idiom and is not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .base import Checker, Finding, Module, Project
+from . import taint
+
+SINK_BUILTINS = {"int", "float", "bool"}
+SINK_NUMPY = {"numpy.asarray", "numpy.array", "np.asarray", "np.array",
+              "onp.asarray", "onp.array"}
+SINK_METHODS = {"item", "tolist"}
+JIT_NAMES = {"jax.jit", "jit", "jax.experimental.pjit.pjit", "pjit"}
+SCAN_NAMES = {"jax.lax.scan", "lax.scan", "scan"}
+SHMAP_NAMES = {"jax.experimental.shard_map.shard_map", "shard_map"}
+
+
+def _static_names_from_call(call: ast.Call, func) -> Set[str]:
+    """Parameter names excluded from tracing by static_argnums/names."""
+    out: Set[str] = set()
+    params = taint.param_names(func)
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    out.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) \
+                        and isinstance(node.value, int):
+                    if 0 <= node.value < len(params):
+                        out.add(params[node.value])
+    return out
+
+
+def _jit_decorator(module: Module, func) -> Optional[Set[str]]:
+    """If ``func`` is jit-decorated, the static param-name set; else None."""
+    for dec in func.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        target = call.func if call else dec
+        name = module.dotted(target)
+        if name in JIT_NAMES:
+            return _static_names_from_call(call, func) if call else set()
+        # functools.partial(jax.jit, static_argnames=...)
+        if call is not None and name in ("functools.partial", "partial") \
+                and call.args:
+            inner = module.dotted(call.args[0])
+            if inner in JIT_NAMES:
+                return _static_names_from_call(call, func)
+    return None
+
+
+def _collect_traced(module: Module) -> List[Tuple[ast.AST, Set[str], str]]:
+    """(function node, traced param names, why) for every traced body."""
+    out: List[Tuple[ast.AST, Set[str], str]] = []
+    # local def tables per enclosing scope, for resolving `jax.jit(name)`
+    defs: Dict[str, ast.AST] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            static = _jit_decorator(module, node)
+            if static is not None:
+                out.append((node, taint.traced_param_set(node, static),
+                            "@jax.jit body"))
+        if not isinstance(node, ast.Call):
+            continue
+        name = module.dotted(node.func)
+        if name in JIT_NAMES and node.args:
+            target = node.args[0]
+            static: Set[str] = set()
+            fn = None
+            if isinstance(target, ast.Lambda):
+                fn = target
+            elif isinstance(target, ast.Name) and target.id in defs:
+                fn = defs[target.id]
+            if fn is not None:
+                static = _static_names_from_call(node, fn)
+                out.append((fn, taint.traced_param_set(fn, static),
+                            "jax.jit(f) body"))
+        elif name in SCAN_NAMES and node.args:
+            target = node.args[0]
+            fn = target if isinstance(target, ast.Lambda) else \
+                defs.get(target.id) if isinstance(target, ast.Name) else None
+            if fn is not None:
+                # scan body (carry, x): both traced
+                out.append((fn, set(taint.param_names(fn)), "lax.scan body"))
+        elif name in SHMAP_NAMES and node.args:
+            target = node.args[0]
+            fn = target if isinstance(target, ast.Lambda) else \
+                defs.get(target.id) if isinstance(target, ast.Name) else None
+            if fn is not None:
+                out.append((fn, set(taint.param_names(fn)),
+                            "shard_map body"))
+    return out
+
+
+class TraceSafetyChecker(Checker):
+    code = "RL001"
+    name = "trace-safety"
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        seen: Set[Tuple[int, str]] = set()
+        for fn, traced, why in _collect_traced(module):
+            if not traced:
+                continue
+            hot = taint.tainted_names(fn, traced)
+            body = fn.body if isinstance(fn.body, list) \
+                else [ast.Expr(fn.body)]
+            for stmt in body:
+                for f in self._scan_stmt(module, stmt, hot, why):
+                    if (f.line, f.message) not in seen:
+                        seen.add((f.line, f.message))
+                        yield f
+
+    def _scan_stmt(self, module: Module, stmt: ast.stmt, hot: Set[str],
+                   why: str) -> Iterable[Finding]:
+        """Scan one statement, giving ``not isinstance(x, Tracer)``-guarded
+        branches a hot-set with ``x`` removed — the sanctioned eager path
+        may force x to host freely."""
+        if isinstance(stmt, ast.If):
+            guard = taint._is_tracer_guard(stmt.test)
+            body_hot = else_hot = hot
+            if guard is not None:
+                name, concrete_in_body = guard
+                if concrete_in_body:
+                    body_hot = hot - {name}
+                else:
+                    else_hot = hot - {name}
+            for sub in stmt.body:
+                yield from self._scan_stmt(module, sub, body_hot, why)
+            for sub in stmt.orelse:
+                yield from self._scan_stmt(module, sub, else_hot, why)
+            return
+        # flat scan, but recurse into nested Ifs so their guards apply
+        stack: List[ast.AST] = [stmt]
+        while stack:
+            node = stack.pop()
+            if node is not stmt and isinstance(node, ast.If):
+                yield from self._scan_stmt(module, node, hot, why)
+                continue
+            f = self._sink(module, node, hot, why)
+            if f is not None:
+                yield f
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _sink(self, module: Module, node: ast.AST, hot: Set[str],
+              why: str) -> Optional[Finding]:
+        if not isinstance(node, ast.Call):
+            return None
+        # int(x) / float(x) / bool(x)
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in SINK_BUILTINS and node.args:
+            if taint.expr_tainted(node.args[0], hot):
+                return self.finding(
+                    module, node,
+                    f"{node.func.id}() applied to a traced value in a "
+                    f"{why}: host sync + per-value recompile hazard "
+                    f"(hoist to the host side or keep it on-device)")
+        # x.item() / x.tolist()
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in SINK_METHODS:
+            if taint.expr_tainted(node.func.value, hot):
+                return self.finding(
+                    module, node,
+                    f".{node.func.attr}() on a traced value in a {why}: "
+                    f"forces a device sync inside the trace")
+        # np.asarray(x) / np.array(x)
+        name = module.dotted(node.func)
+        if name in SINK_NUMPY and node.args:
+            if taint.expr_tainted(node.args[0], hot):
+                return self.finding(
+                    module, node,
+                    f"{name}() materializes a traced value to host numpy "
+                    f"in a {why}: use jnp, or move the conversion outside "
+                    f"the traced body")
+        return None

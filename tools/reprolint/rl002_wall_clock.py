@@ -1,0 +1,57 @@
+"""RL002 — wall-clock reads in serving/ or core/ outside the clock plumbing.
+
+The degradation ladder (DESIGN.md §11) made ALL engine time flow through
+the injectable ``Engine(clock=)``: deadlines, watchdog timing, latency
+marks, host-loop delivery stamps.  A virtual ``TickClock`` run must be
+bit-reproducible — one stray ``time.time()`` makes chaos traces flake and
+SLA numbers unreproducible.  This checker bans direct wall-clock *calls*
+(``time.time``/``monotonic``/``perf_counter``/``process_time``/``sleep``,
+``datetime.now``/``utcnow``) anywhere under ``serving/`` or ``core/``.
+
+Sanctioned patterns that need no suppression:
+
+* referencing ``time.monotonic`` as a *value* (the ``clock=None`` default
+  fallback: ``self._clock = clock if clock is not None else
+  time.monotonic``) — the read happens through the injectable slot;
+* everything outside serving/ and core/ (benchmarks and launch CLIs are
+  wall-clock drivers by design).
+
+``serving/loadgen.py``'s open-loop driver is real-time by *definition*
+(arrival times are wall-clock deadlines) — its reads carry explicit
+``# reprolint: disable=RL002 -- ...`` suppressions rather than a hidden
+allowlist, so the exemption is visible in the file itself.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from .base import Checker, Finding, Module, Project
+
+BANNED_CALLS = {
+    "time.time", "time.monotonic", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic_ns", "time.time_ns",
+    "time.process_time", "time.sleep",
+    "datetime.now", "datetime.utcnow",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+
+
+class WallClockChecker(Checker):
+    code = "RL002"
+    name = "wall-clock"
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        if not (module.in_serving or module.in_core):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = module.dotted(node.func)
+            if name in BANNED_CALLS:
+                yield self.finding(
+                    module, node,
+                    f"{name}() wall-clock read in {module.rel}: serving/ "
+                    f"and core/ time must flow through the injectable "
+                    f"Engine(clock=) plumbing (DESIGN.md §11) so TickClock "
+                    f"runs stay deterministic")

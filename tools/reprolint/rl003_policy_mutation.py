@@ -1,0 +1,230 @@
+"""RL003 — QuantPolicy mutation via dataclasses.replace + unhashable
+jit statics.
+
+The policy-schedule redesign (DESIGN.md §8) made :class:`QuantPolicy`
+derivations flow through named constructors (``without_window()``,
+``fp16_guard()``, the ``PolicySchedule`` presets) instead of ad-hoc
+``dataclasses.replace(policy, ...)`` call sites scattered over callers —
+ad-hoc variants skip ``__post_init__`` intent (exclusivity checks run,
+but the *meaning* of the combination lives with the preset) and multiply
+the cache-layout keys the engine must band over.  This checker keeps the
+ad-hoc sites out:
+
+* ``dataclasses.replace(x, ...)`` is flagged when ``x`` is
+  QuantPolicy-typed by any of: ``self`` inside ``class QuantPolicy``, a
+  parameter/variable annotated ``QuantPolicy``, a variable assigned from
+  ``QuantPolicy(...)``, a name matching the policy naming convention
+  (``policy``, ``pol``, ``quant_policy``, ``base_policy``...), or an
+  attribute named ``.policy``.  The sanctioned derivation sites inside
+  ``core/policy.py`` carry explicit suppressions with reasons.
+* ``jax.jit(..., static_argnums/static_argnames=...)`` whose target
+  function has a matching parameter annotated with a *non-frozen*
+  dataclass defined in the linted tree is flagged: non-frozen dataclasses
+  are unhashable, so jit either crashes or — if ``eq``/``hash`` are
+  hand-rolled — silently keys the compile cache on mutable state.
+
+Audited negatives (ArchConfig and Request are not QuantPolicy):
+``models/config.py`` ``with_overrides``, ``models/transformer.py``
+encoder-config clone, ``serving/engine.py`` prompt normalization,
+``launch/dryrun.py`` remat/smoke overrides.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, Optional, Set
+
+from .base import Checker, Finding, Module, Project
+from . import taint
+
+REPLACE_NAMES = {"dataclasses.replace", "replace"}
+POLICY_NAME_RE = re.compile(
+    r"^(quant_)?(base_|new_|cur_|band_)?(policy|pol|qp)\d*$")
+JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _policy_typed(module: Module, node: ast.expr,
+                  annotated: Set[str], from_ctor: Set[str],
+                  in_quantpolicy_class: bool) -> bool:
+    if isinstance(node, ast.Name):
+        if node.id == "self":
+            return in_quantpolicy_class
+        return (node.id in annotated or node.id in from_ctor
+                or bool(POLICY_NAME_RE.match(node.id)))
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("policy", "quant_policy") \
+            or bool(POLICY_NAME_RE.match(node.attr))
+    if isinstance(node, ast.Call):
+        name = module.dotted(node.func)
+        return name is not None and name.split(".")[-1] == "QuantPolicy"
+    return False
+
+
+def _annotated_policy_names(scope: ast.AST) -> Set[str]:
+    """Names annotated QuantPolicy in a function scope (params + AnnAssign)."""
+    out: Set[str] = set()
+    if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        a = scope.args
+        for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+            if p.annotation is not None and \
+                    _ann_is_policy(p.annotation):
+                out.add(p.arg)
+        for stmt in ast.walk(scope):
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name) \
+                    and _ann_is_policy(stmt.annotation):
+                out.add(stmt.target.id)
+    return out
+
+
+def _ann_is_policy(ann: ast.expr) -> bool:
+    try:
+        text = ast.unparse(ann)
+    except Exception:  # pragma: no cover
+        return False
+    return text.split(".")[-1].strip("'\"") == "QuantPolicy"
+
+
+def _ctor_assigned_names(scope: ast.AST, module: Module) -> Set[str]:
+    out: Set[str] = set()
+    for stmt in ast.walk(scope):
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            name = module.dotted(stmt.value.func)
+            if name is not None and name.split(".")[-1] == "QuantPolicy":
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+    return out
+
+
+class PolicyMutationChecker(Checker):
+    code = "RL003"
+    name = "policy-mutation"
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        yield from self._replace_sites(module)
+        yield from self._static_args(module, project)
+
+    # -------------------------------------------- dataclasses.replace
+
+    def _replace_sites(self, module: Module) -> Iterable[Finding]:
+        # walk with scope context: (node, enclosing function, in QuantPolicy)
+        for scope, in_qp in _scopes(module.tree):
+            annotated = _annotated_policy_names(scope)
+            from_ctor = _ctor_assigned_names(scope, module)
+            for node in _scope_calls(scope):
+                name = module.dotted(node.func)
+                if name not in REPLACE_NAMES or not node.args:
+                    continue
+                if name == "replace" and \
+                        module.aliases.get("replace") != \
+                        "dataclasses.replace":
+                    continue
+                if _policy_typed(module, node.args[0], annotated, from_ctor,
+                                 in_qp):
+                    yield self.finding(
+                        module, node,
+                        "dataclasses.replace on a QuantPolicy: derive "
+                        "variants through the named constructors / "
+                        "schedule presets of core/policy.py instead "
+                        "(DESIGN.md §8 eliminated ad-hoc replace sites)")
+
+    # -------------------------------------------- unhashable jit statics
+
+    def _static_args(self, module: Module, project: Project
+                     ) -> Iterable[Finding]:
+        defs: Dict[str, ast.AST] = {
+            n.name: n for n in ast.walk(module.tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        pairs = []  # (jit call with static kwargs, target function def)
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and self._jit_call(module, dec) is not None:
+                        pairs.append((dec, node))
+                continue
+            call = self._jit_call(module, node)
+            if call is not None and call.args \
+                    and isinstance(call.args[0], ast.Name) \
+                    and call.args[0].id in defs:
+                pairs.append((call, defs[call.args[0].id]))
+        for call, fn in pairs:
+            static = self._static_param_names(call, fn)
+            a = fn.args
+            for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+                if p.arg not in static or p.annotation is None:
+                    continue
+                try:
+                    ann = ast.unparse(p.annotation).split(".")[-1]
+                except Exception:  # pragma: no cover
+                    continue
+                frozen = project.dataclasses.get(ann)
+                if frozen is False:
+                    yield self.finding(
+                        module, call,
+                        f"jit static arg {p.arg!r} is typed {ann}, a "
+                        f"non-frozen dataclass: unhashable as a static, "
+                        f"and mutable state poisons the compile cache — "
+                        f"freeze the dataclass or pass it traced")
+
+    def _jit_call(self, module: Module, node: ast.AST) -> Optional[ast.Call]:
+        if not isinstance(node, ast.Call):
+            return None
+        name = module.dotted(node.func)
+        if name in JIT_NAMES:
+            return node
+        if name in ("functools.partial", "partial") and node.args \
+                and module.dotted(node.args[0]) in JIT_NAMES:
+            return node
+        return None
+
+    def _static_param_names(self, call: ast.Call, fn) -> Set[str]:
+        out: Set[str] = set()
+        params = taint.param_names(fn)
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) \
+                            and isinstance(n.value, str):
+                        out.add(n.value)
+            elif kw.arg == "static_argnums":
+                for n in ast.walk(kw.value):
+                    if isinstance(n, ast.Constant) \
+                            and isinstance(n.value, int) \
+                            and 0 <= n.value < len(params):
+                        out.add(params[n.value])
+        return out
+
+
+def _scopes(tree: ast.Module):
+    """(scope node, is-inside-class-QuantPolicy) for module + functions."""
+    yield tree, False
+
+    def walk(node, in_qp):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name == "QuantPolicy" or in_qp)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, in_qp
+                yield from walk(child, in_qp)
+            else:
+                yield from walk(child, in_qp)
+
+    yield from walk(tree, False)
+
+
+def _scope_calls(scope: ast.AST):
+    """Call nodes that belong to this scope directly (not nested defs) —
+    module scope also excludes calls inside any function."""
+    skip_types = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+    def walk(node):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, skip_types):
+                continue
+            if isinstance(child, ast.Call):
+                yield child
+            yield from walk(child)
+
+    yield from walk(scope)

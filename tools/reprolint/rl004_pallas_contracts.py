@@ -1,0 +1,179 @@
+"""RL004 — Pallas kernel contracts in kernels/.
+
+The fused decode path earns its bytes/step wins only if the kernel
+call-sites follow three contracts (DESIGN.md §4, §9):
+
+* **Index maps close over statics only.**  ``pl.BlockSpec`` index-map
+  lambdas/defs execute at grid-iteration time on scalar grid indices and
+  scalar-prefetch operands; capturing a *traced* value from the enclosing
+  wrapper (q, the quantized planes, a traced window) either fails to
+  lower or silently specializes the kernel per value.  Tables-are-data
+  (§9) depends on the table arriving as a scalar-prefetch argument, never
+  as a closure.
+* **Grids are static.**  A ``grid=`` expression containing a traced value
+  recompiles per occupancy — the exact regression the PR-4 bounds remap
+  exists to avoid.  The sanctioned concrete-path shrink sits under a
+  ``not isinstance(x, jax.core.Tracer)`` guard, which the taint engine
+  recognizes as clean.
+* **Interpret mode resolves via kernels/_compat.py.**  Every
+  ``pl.pallas_call(..., interpret=...)`` must pass a value produced by
+  ``resolve_interpret`` (imported from ``._compat``) so the
+  explicit > env > auto precedence ladder holds everywhere; a literal
+  ``True``/``False`` or an unresolved parameter forks the policy.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set
+
+from .base import Checker, Finding, Module, Project
+from . import taint
+
+PALLAS_CALL = {"pl.pallas_call", "pallas.pallas_call",
+               "jax.experimental.pallas.pallas_call", "pallas_call"}
+BLOCKSPEC = {"pl.BlockSpec", "pallas.BlockSpec",
+             "jax.experimental.pallas.BlockSpec", "BlockSpec"}
+GRIDSPEC = {"pltpu.PrefetchScalarGridSpec", "PrefetchScalarGridSpec"}
+
+
+def _kernel_wrappers(module: Module) -> List[ast.FunctionDef]:
+    """Functions that contain a pl.pallas_call — the kernel build sites."""
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) \
+                    and module.dotted(sub.func) in PALLAS_CALL:
+                out.append(node)
+                break
+    # drop outer duplicates when a wrapper nests another def that also
+    # matched (keep the innermost as its own entry; the outer still scans
+    # its own statements, so nothing is lost)
+    return out
+
+
+class PallasContractChecker(Checker):
+    code = "RL004"
+    name = "pallas-contracts"
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        if not module.in_kernels or module.name == "_compat":
+            return
+        resolver_imported = any(
+            origin.endswith("_compat.resolve_interpret")
+            for origin in module.aliases.values())
+        for fn in _kernel_wrappers(module):
+            traced = taint.traced_param_set(fn)
+            hot = taint.tainted_names(fn, traced)
+            local_defs: Dict[str, ast.AST] = {
+                n.name: n for n in ast.walk(fn)
+                if isinstance(n, ast.FunctionDef) and n is not fn}
+            resolved = self._resolve_assigned(fn, module)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = module.dotted(node.func)
+                if name in BLOCKSPEC:
+                    yield from self._check_index_map(
+                        module, node, hot, local_defs)
+                if name in PALLAS_CALL or name in GRIDSPEC:
+                    yield from self._check_grid(module, node, hot)
+                if name in PALLAS_CALL:
+                    yield from self._check_interpret(
+                        module, node, resolved, resolver_imported)
+
+    # ------------------------------------------------------- index maps
+
+    def _check_index_map(self, module: Module, call: ast.Call,
+                         hot: Set[str], local_defs) -> Iterable[Finding]:
+        imap: Optional[ast.AST] = None
+        if len(call.args) >= 2:
+            imap = call.args[1]
+        for kw in call.keywords:
+            if kw.arg == "index_map":
+                imap = kw.value
+        if imap is None:
+            return
+        if isinstance(imap, ast.Name):
+            imap_fn = local_defs.get(imap.id)
+        elif isinstance(imap, ast.Lambda):
+            imap_fn = imap
+        else:
+            return
+        if imap_fn is None:
+            return
+        free = taint.free_names(imap_fn, local_defs)
+        captured = sorted(free & hot)
+        if captured:
+            yield self.finding(
+                module, imap,
+                f"BlockSpec index map closes over traced value(s) "
+                f"{', '.join(captured)}: index maps may only read grid "
+                f"indices and scalar-prefetch operands — pass the value "
+                f"via PrefetchScalarGridSpec instead (tables are data, "
+                f"DESIGN.md §9)")
+
+    # ------------------------------------------------------------ grids
+
+    def _check_grid(self, module: Module, call: ast.Call,
+                    hot: Set[str]) -> Iterable[Finding]:
+        for kw in call.keywords:
+            if kw.arg == "grid" and taint.expr_tainted(kw.value, hot):
+                yield self.finding(
+                    module, kw.value,
+                    "pallas grid= expression derives from a traced value: "
+                    "grids must be static (shape-derived) so ragged "
+                    "traffic never recompiles the kernel — clamp inside "
+                    "the kernel with prefetch bounds instead")
+
+    # -------------------------------------------------------- interpret
+
+    def _check_interpret(self, module: Module, call: ast.Call,
+                         resolved: Set[str], resolver_imported: bool
+                         ) -> Iterable[Finding]:
+        val = None
+        for kw in call.keywords:
+            if kw.arg == "interpret":
+                val = kw.value
+        if val is None:
+            yield self.finding(
+                module, call,
+                "pl.pallas_call without interpret=: the mode must resolve "
+                "through kernels/_compat.resolve_interpret (explicit > "
+                "REPRO_PALLAS_INTERPRET > auto), not default silently")
+            return
+        if isinstance(val, ast.Constant):
+            yield self.finding(
+                module, val,
+                f"interpret={val.value!r} literal: interpret mode is "
+                f"resolved only via kernels/_compat.resolve_interpret so "
+                f"the env-override/auto-detect ladder applies everywhere")
+            return
+        if isinstance(val, ast.Name) and val.id not in resolved:
+            yield self.finding(
+                module, val,
+                f"interpret={val.id} was never assigned from "
+                f"resolve_interpret() in this function: call "
+                f"'{val.id} = resolve_interpret({val.id})' (from "
+                f"kernels/_compat) before building the kernel")
+        elif isinstance(val, ast.Name) and not resolver_imported:
+            yield self.finding(
+                module, val,
+                "resolve_interpret must be imported from kernels/_compat "
+                "(the single interpret-mode policy), not redefined locally")
+
+    def _resolve_assigned(self, fn: ast.FunctionDef, module: Module
+                          ) -> Set[str]:
+        """Names assigned from resolve_interpret(...) inside ``fn``."""
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                name = module.dotted(node.value.func)
+                if name is not None \
+                        and name.split(".")[-1] == "resolve_interpret":
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out.add(t.id)
+        return out

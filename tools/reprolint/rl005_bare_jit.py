@@ -1,0 +1,137 @@
+"""RL005 — jit call sites in serving/ that bypass the ExecutableCache.
+
+The warmup contract (DESIGN.md §10) is ZERO post-warmup XLA compiles:
+``Engine.warmup()`` AOT-compiles the engine's bounded executable set and
+every serve-time call site dispatches through
+``ExecutableCache.call(name, jitfn, *args)`` — a signature hit runs the
+stored ``Compiled``, a miss is *counted*.  A jitted function invoked
+directly skips both: it compiles outside the cache's books, so the
+zero-compile CI gate can neither see nor prevent the regression.
+
+What this checker enforces in ``serving/``:
+
+* files other than ``engine.py``/``warmup.py`` must not reference
+  ``jax.jit`` at all (the host loop, load generator, metrics and fault
+  injector are host-side by design);
+* in ``engine.py``, building a jitted function is fine (that is the
+  cache's fallback fuel: ``make_*_fn`` factories, the lazy ``_*_fn``
+  getters) — but *calling* one directly is flagged: immediate
+  ``jax.jit(f)(...)`` invocations, and calls of any name or
+  ``self.<attr>`` that was observed bound to a ``jax.jit(...)`` result.
+  Dispatch must go through ``self._call(name, jitfn, *args)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Set
+
+from .base import Checker, Finding, Module, Project
+
+JIT_NAMES = {"jax.jit", "jit"}
+EXEMPT_FILES = {"warmup"}          # the cache itself
+BUILDER_FILES = {"engine"}         # may build jitfns, not call them
+
+
+def _is_jit_call(module: Module, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = module.dotted(node.func)
+    if name in JIT_NAMES:
+        return True
+    if name in ("functools.partial", "partial") and node.args:
+        return module.dotted(node.args[0]) in JIT_NAMES
+    return False
+
+
+def _jit_bound_names(module: Module) -> Set[str]:
+    """Names (x / self.x) observed bound to a jax.jit(...) result, plus
+    functions decorated with jax.jit, plus attrs bound from factories
+    whose return value is a jit-decorated local def."""
+    bound: Set[str] = set()
+    factories: Set[str] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jit_call(module, dec) \
+                        or module.dotted(dec) in JIT_NAMES:
+                    bound.add(node.name)
+            # factory: returns a local def that is jit-decorated
+            jitted_locals = {
+                n.name for n in ast.walk(node)
+                if isinstance(n, ast.FunctionDef) and any(
+                    _is_jit_call(module, d) or module.dotted(d) in JIT_NAMES
+                    for d in n.decorator_list)}
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Return) \
+                        and isinstance(sub.value, ast.Name) \
+                        and sub.value.id in jitted_locals:
+                    factories.add(node.name)
+        if isinstance(node, ast.Assign) and _is_jit_call(module, node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    bound.add(t.id)
+                elif isinstance(t, ast.Attribute):
+                    bound.add(f"self.{t.attr}" if isinstance(
+                        t.value, ast.Name) and t.value.id == "self"
+                        else t.attr)
+    # second pass: attrs assigned from factory calls
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call) \
+                and isinstance(node.value.func, ast.Name) \
+                and node.value.func.id in factories:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    bound.add(t.id)
+                elif isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self":
+                    bound.add(f"self.{t.attr}")
+    return bound
+
+
+class BareJitChecker(Checker):
+    code = "RL005"
+    name = "bare-jit-in-serving"
+
+    def check(self, module: Module, project: Project) -> Iterable[Finding]:
+        if not module.in_serving or module.name in EXEMPT_FILES:
+            return
+        if module.name not in BUILDER_FILES:
+            for node in ast.walk(module.tree):
+                if isinstance(node, (ast.Name, ast.Attribute)) \
+                        and module.dotted(node) in JIT_NAMES:
+                    yield self.finding(
+                        module, node,
+                        f"jax.jit in serving/{module.name}.py: only the "
+                        f"engine builds jitted functions, and they must "
+                        f"dispatch through the ExecutableCache "
+                        f"(DESIGN.md §10 zero-post-warmup-compile "
+                        f"contract)")
+            return
+        bound = _jit_bound_names(module)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            # jax.jit(f)(...) immediately invoked
+            if _is_jit_call(module, node.func):
+                yield self.finding(
+                    module, node,
+                    "jax.jit(...) invoked directly: route the call "
+                    "through self._call(name, jitfn, *args) so the "
+                    "ExecutableCache can dispatch the AOT executable and "
+                    "count post-warmup compiles (DESIGN.md §10)")
+                continue
+            callee = None
+            if isinstance(node.func, ast.Name):
+                callee = node.func.id
+            elif isinstance(node.func, ast.Attribute) \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id == "self":
+                callee = f"self.{node.func.attr}"
+            if callee in bound:
+                yield self.finding(
+                    module, node,
+                    f"direct call of jitted {callee}: serve-time dispatch "
+                    f"must go through self._call(...) / ExecutableCache "
+                    f"so the zero-post-warmup-compile gate sees it "
+                    f"(DESIGN.md §10)")

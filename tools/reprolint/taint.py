@@ -1,0 +1,284 @@
+"""Intra-function traced-value taint analysis (shared by RL001/RL004).
+
+Inside a jitted / scanned / shard-mapped body, values that flow from the
+traced parameters are jax tracers — forcing them to host scalars
+(``int()``, ``.item()``, ``np.asarray``) is a device sync at best and a
+per-value recompile at worst (DESIGN.md §12).  This module computes, per
+function, the set of *tainted* names: names whose values (conservatively)
+derive from traced parameters.
+
+Static escapes are modelled so shape arithmetic never false-positives:
+
+* ``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``x.size`` / ``len(x)`` are
+  compile-time constants of a tracer — accessing them clears taint;
+* a branch guarded by ``not isinstance(x, jax.core.Tracer)`` (the repo's
+  sanctioned eager-path pattern, e.g. the concrete-bounds grid shrink in
+  kernels/decode_attn.py) re-binds ``x`` as concrete inside that branch,
+  so assignments there are clean;
+* ``isinstance`` / ``type`` / string formatting of shapes are clean.
+
+The analysis is a simple forward pass (loop bodies visited twice to let
+taint reach loop-carried names); it tracks plain names only — attribute
+and subscript *stores* keep the base name's taint.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# attribute reads on a tracer that are static at trace time
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding",
+                "aval", "weak_type"}
+# calls whose result is static regardless of argument taint
+STATIC_CALLS = {"len", "isinstance", "type", "getattr", "hasattr", "repr",
+                "str", "format", "id", "print", "range", "enumerate",
+                "zip", "min", "max"}
+# min/max over python ints from shapes are the common case in this repo;
+# min/max over tracers returns a tracer, but RL001's sinks (int()/.item())
+# would still catch the eventual host force, so treating them as
+# taint-propagating is not required for soundness of the *sinks* we check.
+
+
+def _is_tracer_guard(test: ast.expr) -> Optional[Tuple[str, bool]]:
+    """Recognize ``isinstance(x, ...Tracer)`` tests.
+
+    Returns ``(name, concrete_in_body)``: ``concrete_in_body`` is True for
+    ``not isinstance(x, Tracer)`` (x is concrete in the if-body) and False
+    for the bare ``isinstance(x, Tracer)`` form (x is concrete in the
+    else-branch)."""
+    neg = False
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        test, neg = test.operand, True
+    if not (isinstance(test, ast.Call) and isinstance(test.func, ast.Name)
+            and test.func.id == "isinstance" and len(test.args) == 2
+            and isinstance(test.args[0], ast.Name)):
+        return None
+    try:
+        kind = ast.unparse(test.args[1])
+    except Exception:  # pragma: no cover - unparse of exotic nodes
+        return None
+    if "Tracer" not in kind:
+        return None
+    return test.args[0].id, neg
+
+
+class TaintState:
+    def __init__(self, tainted: Set[str]):
+        self.tainted = set(tainted)
+
+    def is_tainted(self, node: ast.expr) -> bool:
+        return expr_tainted(node, self.tainted)
+
+
+def expr_tainted(node: ast.expr, tainted: Set[str]) -> bool:
+    """Conservatively: does this expression's value derive from a tainted
+    name, modulo the static escapes documented above?"""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Constant):
+        return False
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_ATTRS:
+            return False
+        return expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        if isinstance(node.func, ast.Name) and node.func.id in STATIC_CALLS:
+            return False
+        parts = [node.func] + list(node.args) \
+            + [kw.value for kw in node.keywords]
+        return any(expr_tainted(p, tainted) for p in parts)
+    if isinstance(node, ast.Subscript):
+        return expr_tainted(node.value, tainted) \
+            or expr_tainted(node.slice, tainted)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return any(expr_tainted(e, tainted) for e in node.elts)
+    if isinstance(node, ast.Dict):
+        return any(expr_tainted(e, tainted)
+                   for e in list(node.keys) + list(node.values)
+                   if e is not None)
+    if isinstance(node, ast.Starred):
+        return expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Lambda):
+        return False  # closures are checked structurally, not by value
+    # BinOp/BoolOp/Compare/UnaryOp/IfExp/comprehensions/fstrings: any child
+    return any(expr_tainted(c, tainted) for c in ast.iter_child_nodes(node)
+               if isinstance(c, ast.expr))
+
+
+def _assign_names(target: ast.expr) -> Tuple[List[str], List[str]]:
+    """(plain names, base names of attr/subscript stores) in a target."""
+    plain: List[str] = []
+    based: List[str] = []
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            plain.append(node.id)
+        elif isinstance(node, (ast.Attribute, ast.Subscript)):
+            base = node.value
+            while isinstance(base, (ast.Attribute, ast.Subscript)):
+                base = base.value
+            if isinstance(base, ast.Name):
+                based.append(base.id)
+            # don't descend further: walk already visits children
+    return plain, based
+
+
+class _Flow:
+    """Forward taint propagation over a statement list."""
+
+    def __init__(self, tainted: Set[str]):
+        self.tainted = tainted
+
+    def run(self, body: Iterable[ast.stmt]) -> None:
+        for stmt in body:
+            self.stmt(stmt)
+
+    def stmt(self, s: ast.stmt) -> None:
+        if isinstance(s, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = s.value
+            if value is None:
+                return
+            hot = expr_tainted(value, self.tainted)
+            targets = s.targets if isinstance(s, ast.Assign) else [s.target]
+            if isinstance(s, ast.AugAssign):
+                hot = hot or expr_tainted(s.target, self.tainted)
+            for t in targets:
+                plain, _based = _assign_names(t)
+                for name in plain:
+                    if hot:
+                        self.tainted.add(name)
+                    else:
+                        self.tainted.discard(name)
+        elif isinstance(s, ast.If):
+            guard = _is_tracer_guard(s.test)
+            body_clear: Set[str] = set()
+            else_clear: Set[str] = set()
+            if guard is not None:
+                name, concrete_in_body = guard
+                (body_clear if concrete_in_body else else_clear).add(name)
+            before = set(self.tainted)
+            b = _Flow(set(before - body_clear))
+            b.run(s.body)
+            e = _Flow(set(before - else_clear))
+            e.run(s.orelse)
+            # join: tainted when tainted on any path; a name cleared under
+            # a Tracer guard stays clear only if BOTH paths agree
+            self.tainted.clear()
+            self.tainted.update(b.tainted | e.tainted)
+        elif isinstance(s, (ast.For, ast.While)):
+            if isinstance(s, ast.For):
+                hot = expr_tainted(s.iter, self.tainted)
+                plain, _ = _assign_names(s.target)
+                for name in plain:
+                    if hot:
+                        self.tainted.add(name)
+            # two passes: let taint reach loop-carried names
+            self.run(s.body)
+            self.run(s.body)
+            self.run(s.orelse)
+        elif isinstance(s, (ast.With,)):
+            for item in s.items:
+                if item.optional_vars is not None:
+                    hot = expr_tainted(item.context_expr, self.tainted)
+                    plain, _ = _assign_names(item.optional_vars)
+                    for name in plain:
+                        if hot:
+                            self.tainted.add(name)
+            self.run(s.body)
+        elif isinstance(s, ast.Try):
+            self.run(s.body)
+            for h in s.handlers:
+                self.run(h.body)
+            self.run(s.orelse)
+            self.run(s.finalbody)
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            return  # nested scopes analyzed separately by the checkers
+        # Expr/Return/Raise/etc: no bindings
+
+
+def tainted_names(func, traced_params: Set[str]) -> Set[str]:
+    """The tainted-name set at the *end* of a function body, seeded from
+    its traced parameters.  Good enough for flagging sinks anywhere in the
+    body because the repo style is single-assignment; the sink scan below
+    re-checks per expression."""
+    flow = _Flow(set(traced_params))
+    body = func.body if isinstance(func.body, list) else [ast.Expr(func.body)]
+    flow.run(body)
+    flow.tainted |= traced_params  # params stay traced even if reassigned
+    return flow.tainted
+
+
+def param_names(func) -> List[str]:
+    a = func.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+STATIC_ANNOTATIONS = {"int", "float", "bool", "str", "bytes",
+                      "Optional[int]", "Optional[float]", "Optional[bool]",
+                      "Optional[str]", "QuantPolicy", "ArchConfig",
+                      "PolicySchedule", "Callable"}
+
+
+def annotation_is_static(ann: Optional[ast.expr]) -> bool:
+    """Heuristic: parameters annotated as plain python scalars / frozen
+    config dataclasses are host-side statics, not traced operands."""
+    if ann is None:
+        return False
+    try:
+        return ast.unparse(ann) in STATIC_ANNOTATIONS
+    except Exception:  # pragma: no cover
+        return False
+
+
+def traced_param_set(func, static_names: Iterable[str] = ()) -> Set[str]:
+    """Params assumed traced: everything except explicitly-static names and
+    statically-annotated scalars/config objects."""
+    static = set(static_names)
+    a = func.args
+    out = set()
+    for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+        if p.arg in static or p.arg == "self":
+            continue
+        if annotation_is_static(p.annotation):
+            continue
+        out.add(p.arg)
+    return out
+
+
+def free_names(func, project_locals: Optional[Dict[str, ast.AST]] = None
+               ) -> Set[str]:
+    """Names a lambda / local def reads that are not bound by it (params,
+    local assignments, comprehension vars).  Used by RL004's index-map
+    closure check.  ``project_locals`` maps sibling local-def names to
+    their nodes so one level of helper calls is followed transitively."""
+    bound = set(param_names(func))
+    reads: Set[str] = set()
+    body = func.body if isinstance(func.body, list) else [ast.Expr(func.body)]
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, (ast.Store, ast.Del)):
+                    bound.add(node.id)
+                else:
+                    reads.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                bound.update(param_names(node))
+            elif isinstance(node, ast.comprehension):
+                for n in ast.walk(node.target):
+                    if isinstance(n, ast.Name):
+                        bound.add(n.id)
+    import builtins
+    free = {n for n in reads - bound if not hasattr(builtins, n)}
+    if project_locals:
+        for helper in list(free):
+            sub = project_locals.get(helper)
+            if sub is not None:
+                free |= free_names(sub, None)
+                free.discard(helper)
+    return free
